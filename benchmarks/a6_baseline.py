@@ -1,0 +1,61 @@
+"""Paper Appendix A.6: approx_max_k operator vs reshape+argmax baseline.
+
+The paper reports 9.6x on a TPU v4 core (2.6ms vs 24.9ms).  On CPU we verify
+the *kernel-count/work* advantage analytically and report wall-clock at a
+scaled-down shape for sanity: the baseline writes the full (M, N) score
+matrix to memory (level-3 BLAS bound), ours aggregates in-cache.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knn import mips
+from repro.core.roofline import HARDWARE, KernelCost, attainable_flops
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def baseline_reshape_argmax(qy, db, l=128):
+    m, n = qy.shape[0], db.shape[0]
+    dists = jnp.einsum("ik,jk->ij", qy, db)
+    reshaped = jax.lax.reshape(dists, (m, l, n // l))
+    return jnp.max(reshaped, 2), jnp.argmax(reshaped, 2)
+
+
+def main(emit, m=256, n=65536, d=128):
+    q = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    db = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    t_base = _time(jax.jit(baseline_reshape_argmax), q, db)
+    t_ours = _time(jax.jit(lambda q, db: mips(q, db, 10, recall_target=0.95)), q, db)
+    emit(
+        f"a6,reshape_argmax,us_per_call={1e6 * t_base:.0f},"
+        f"ours,us_per_call={1e6 * t_ours:.0f},cpu_speedup={t_base / t_ours:.2f}x"
+    )
+    # modeled TPU v4 speedup at the paper's shape (M=1024, N=1M, D=128):
+    hw = HARDWARE["tpu_v4"]
+    mm, nn, dd = 1024, 1_048_576, 128
+    flops = 2.0 * mm * nn * dd
+    ours_cost = KernelCost(flops=flops, hbm_bytes=4 * (mm * dd + nn * dd + 2 * mm * 128),
+                           cops=3 * mm * nn)
+    base_cost = KernelCost(flops=flops, hbm_bytes=4 * (mm * dd + nn * dd + 2 * mm * nn),
+                           cops=2 * mm * nn)
+    t_ours_model = flops / attainable_flops(ours_cost, hw)
+    t_base_model = flops / attainable_flops(base_cost, hw)
+    emit(
+        f"a6,modeled_tpu_v4,ours={1e3 * t_ours_model:.2f}ms,"
+        f"baseline={1e3 * t_base_model:.2f}ms,"
+        f"speedup={t_base_model / t_ours_model:.1f}x,paper=9.6x(2.6/24.9ms)"
+    )
+
+
+if __name__ == "__main__":
+    main(print)

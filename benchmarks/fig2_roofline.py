@@ -1,0 +1,39 @@
+"""Paper Fig. 2: roofline placement of the PartialReduce benchmarks.
+
+Emits, for each (dataset x hardware), where the kernel lands against the
+three walls (compute / memory / instruction) — reproducing the paper's
+finding that Sift/L2 regresses on TPU v4 because of the COP wall while the
+classic two-term roofline cannot explain it.
+"""
+from __future__ import annotations
+
+from repro.configs.knn_workloads import KNN_WORKLOADS
+from repro.core.binning import plan_bins
+from repro.core.roofline import (
+    HARDWARE,
+    attainable_flops,
+    bottleneck,
+    partial_reduce_cost,
+)
+
+
+def main(emit):
+    for name, w in KNN_WORKLOADS.items():
+        plan = plan_bins(w.n, w.k, w.recall_target)
+        cost = partial_reduce_cost(
+            w.m, w.n, w.d_padded, plan.num_bins, cops_per_dot=w.cops_per_dot
+        )
+        for hw_name in ("v100", "a100", "tpu_v3", "tpu_v4", "tpu_v5e"):
+            hw = HARDWARE[hw_name]
+            att = attainable_flops(cost, hw)
+            classic = min(hw.peak_flops, hw.hbm_bandwidth * cost.i_mem)
+            emit(
+                f"fig2,{name},{hw_name},bottleneck={bottleneck(cost, hw)},"
+                f"attainable={att / 1e12:.1f}TF/s,peak={hw.peak_flops / 1e12:.0f}TF/s,"
+                f"classic_model={classic / 1e12:.1f}TF/s,"
+                f"cop_wall_visible={'yes' if att < classic * 0.99 else 'no'}"
+            )
+
+
+if __name__ == "__main__":
+    main(print)

@@ -1,0 +1,129 @@
+"""Paper Fig. 3: speed-recall trade-off, ours vs baselines.
+
+Baselines re-implemented in JAX (same spirit as the Faiss comparison):
+  * flat       — brute force + exact top-k (recall 1.0 reference)
+  * ivf-flat   — inverted file (k-means centroids, search fraction lambda)
+  * reshape-argmax — the A.6 naive compositional baseline
+  * ours       — PartialReduce + ExactRescoring at several recall targets
+
+CPU wall-times are *shape-relative sanity numbers only* (the paper's absolute
+speeds need a TPU); recall numbers are exact reproductions of the algorithm.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.knn import exact_mips, mips
+from repro.data.pipeline import make_vector_dataset
+
+
+def _recall(approx_idx, exact_idx):
+    r = []
+    for a, e in zip(np.asarray(approx_idx), np.asarray(exact_idx)):
+        r.append(len(set(a.tolist()) & set(e.tolist())) / len(e))
+    return float(np.mean(r))
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        out[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def ivf_build(db, n_lists=64, iters=5, seed=0):
+    """Tiny k-means for the IVF baseline."""
+    rng = np.random.default_rng(seed)
+    centroids = db[rng.choice(len(db), n_lists, replace=False)]
+    dbj = jnp.asarray(db)
+    for _ in range(iters):
+        assign = jnp.argmax(dbj @ jnp.asarray(centroids).T, axis=-1)
+        centroids = np.stack([
+            np.asarray(dbj[assign == c].mean(axis=0))
+            if bool((assign == c).any()) else centroids[c]
+            for c in range(n_lists)
+        ])
+    assign = np.asarray(jnp.argmax(dbj @ jnp.asarray(centroids).T, axis=-1))
+    lists = [np.where(assign == c)[0] for c in range(n_lists)]
+    return jnp.asarray(centroids), lists
+
+
+def ivf_search(q, db, centroids, lists, k=10, n_probe=4):
+    """Search the n_probe nearest lists (lambda = n_probe/n_lists approx)."""
+    cq = np.asarray(jnp.argsort(-(q @ centroids.T), axis=-1)[:, :n_probe])
+    out = np.zeros((q.shape[0], k), np.int64)
+    dbn = np.asarray(db)
+    qn = np.asarray(q)
+    for i in range(q.shape[0]):
+        cand = np.concatenate([lists[c] for c in cq[i]] or [np.array([], np.int64)])
+        if len(cand) == 0:
+            out[i] = -1
+            continue
+        scores = qn[i] @ dbn[cand].T
+        top = cand[np.argsort(-scores)[:k]]
+        out[i, : len(top)] = top
+        out[i, len(top):] = -1
+    return out
+
+
+def a6_reshape_argmax(q, db, l=128):
+    """Appendix A.6 baseline: einsum -> reshape -> argmax (top-1 per bin)."""
+    n = db.shape[0]
+    bin_size = n // l
+    scores = jnp.einsum("ik,jk->ij", q, db)[:, : l * bin_size]
+    r = scores.reshape(q.shape[0], l, bin_size)
+    idx = jnp.argmax(r, axis=-1) + jnp.arange(l) * bin_size
+    vals = jnp.max(r, axis=-1)
+    return vals, idx
+
+
+def main(emit, n=100_000, d=64, m=256, k=10):
+    db = jnp.asarray(make_vector_dataset(n, d, metric="cosine", seed=0))
+    q = jnp.asarray(make_vector_dataset(m, d, metric="cosine", seed=1))
+
+    flat = jax.jit(lambda q, db: exact_mips(q, db, k))
+    t_flat = _time(flat, q, db)
+    _, exact = flat(q, db)
+    emit(f"fig3,flat,recall=1.000,us_per_query={1e6 * t_flat / m:.1f}")
+
+    for rt in (0.8, 0.9, 0.95, 0.99):
+        ours = jax.jit(lambda q, db, rt=rt: mips(q, db, k, recall_target=rt))
+        t = _time(ours, q, db)
+        _, idx = ours(q, db)
+        emit(
+            f"fig3,ours(rt={rt}),recall={_recall(idx, exact):.3f},"
+            f"us_per_query={1e6 * t / m:.1f}"
+        )
+
+    cent, lists = ivf_build(np.asarray(db), n_lists=64)
+    for n_probe in (1, 2, 8):
+        t0 = time.perf_counter()
+        idx = ivf_search(q, db, cent, lists, k=k, n_probe=n_probe)
+        t = time.perf_counter() - t0
+        lam = sum(len(lists[c]) for c in range(n_probe)) / n
+        emit(
+            f"fig3,ivf-flat(probe={n_probe}),recall={_recall(idx, exact):.3f},"
+            f"us_per_query={1e6 * t / m:.1f},lambda~{lam:.3f}"
+        )
+
+    a6 = jax.jit(a6_reshape_argmax)
+    t = _time(a6, q, db)
+    _, idx = a6(q, db)
+    from repro.core.rescoring import exact_rescoring
+
+    v, i2 = a6(q, db)
+    tv, ti = exact_rescoring(v, i2, k, mode="max")
+    emit(
+        f"fig3,a6-reshape-argmax,recall={_recall(ti, exact):.3f},"
+        f"us_per_query={1e6 * t / m:.1f}"
+    )
+
+
+if __name__ == "__main__":
+    main(print)

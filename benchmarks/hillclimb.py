@@ -1,0 +1,86 @@
+"""Hillclimb harness: re-lower one cell with config overrides and print the
+roofline-term delta vs the stored baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch recurrentgemma-9b \
+      --shape train_4k --mesh single --set moe_group_size=512 --tag g512
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.configs.base import register
+
+
+def parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--out", default="benchmarks/results/hillclimb")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    if overrides:
+        register(dataclasses.replace(cfg, **overrides))
+
+    from repro.launch.dryrun import run_cell
+
+    res = run_cell(args.arch, args.shape, args.mesh)
+    os.makedirs(args.out, exist_ok=True)
+    out_path = os.path.join(
+        args.out, f"{args.arch}_{args.shape}_{args.mesh}_{args.tag}.json"
+    )
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1)
+
+    base_path = os.path.join(
+        "benchmarks/results/dryrun", f"{args.arch}_{args.shape}_{args.mesh}.json"
+    )
+    r = res["roofline"]
+    line = (
+        f"{args.tag}: dom={r['dominant']} step={r['step_time_s']:.4f}s "
+        f"comp={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
+        f"coll={r['collective_s']:.3f} instr={r['instruction_s']:.3f} "
+        f"frac={r['roofline_fraction']:.3f}"
+    )
+    print(line)
+    if os.path.exists(base_path):
+        b = json.load(open(base_path))["roofline"]
+        print(
+            f"baseline: dom={b['dominant']} step={b['step_time_s']:.4f}s "
+            f"comp={b['compute_s']:.3f} mem={b['memory_s']:.3f} "
+            f"coll={b['collective_s']:.3f} frac={b['roofline_fraction']:.3f}"
+        )
+        for term in ("step_time_s", "compute_s", "memory_s", "collective_s"):
+            if b[term] > 1e-9:
+                print(f"  {term}: {r[term] / b[term]:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+# One function per paper table/figure. Prints ``name,...,derived`` CSV lines.
+"""Benchmark harness entry point.
+
+  python -m benchmarks.run            # all paper artifacts
+  python -m benchmarks.run table2 fig3
+
+Artifacts:
+  table2           dataset/kernel accounting + modeled vs measured FLOP/s
+  fig2             roofline placement (compute/memory/instruction walls)
+  fig3             speed-recall curves, ours vs flat/ivf/a6 baselines
+  a6               approx_max_k vs reshape+argmax baseline
+  recall           Eq. 13/14 analytic vs empirical recall
+  dryrun_summary   summarize benchmarks/results/dryrun cells (if present)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def dryrun_summary(emit):
+    import glob
+    import json
+    import os
+
+    files = sorted(glob.glob(os.path.join("benchmarks/results/dryrun", "*.json")))
+    if not files:
+        emit("dryrun_summary,none (run benchmarks/run_dryrun_sweep.sh)")
+        return
+    for f in files:
+        r = json.load(open(f))
+        if "error" in r:
+            emit(f"dryrun,{r['arch']},{r['shape']},{r['mesh']},ERROR,{r['error'][:80]}")
+            continue
+        rf = r["roofline"]
+        emit(
+            f"dryrun,{r['arch']},{r['shape']},{r['mesh']},dom={rf['dominant']},"
+            f"step={rf['step_time_s']:.4f}s,frac={rf['roofline_fraction']:.3f},"
+            f"compile={r['compile_s']}s"
+        )
+
+
+def main() -> None:
+    from benchmarks import a6_baseline, fig2_roofline, fig3_speed_recall, recall_analytics, table2
+
+    wanted = set(sys.argv[1:]) or {
+        "table2", "fig2", "fig3", "a6", "recall", "dryrun_summary"
+    }
+    emit = print
+    if "table2" in wanted:
+        table2.main(emit)
+    if "fig2" in wanted:
+        fig2_roofline.main(emit)
+    if "recall" in wanted:
+        recall_analytics.main(emit)
+    if "a6" in wanted:
+        a6_baseline.main(emit)
+    if "fig3" in wanted:
+        fig3_speed_recall.main(emit)
+    if "dryrun_summary" in wanted:
+        dryrun_summary(emit)
+
+
+if __name__ == '__main__':
+    main()

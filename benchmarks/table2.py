@@ -1,0 +1,63 @@
+"""Paper Table 2: dataset properties + kernel accounting + modeled peak.
+
+Reproduces the analytically-derivable rows exactly (C, I_COP, padded D) and
+derives I_MEM from the Eq. 20 cost model; the measured-GFLOP/s rows cannot be
+re-measured on CPU, so we report the *modeled attainable* FLOP/s from the
+refined roofline (Eq. 6) next to the paper's measured numbers for v3/v4.
+"""
+from __future__ import annotations
+
+from repro.configs.knn_workloads import KNN_WORKLOADS
+from repro.core.binning import plan_bins
+from repro.core.roofline import HARDWARE, attainable_flops, partial_reduce_cost
+
+PAPER_MEASURED = {  # GFLOP/s from Table 2
+    ("glove1.2m", "tpu_v3"): 118_524,
+    ("glove1.2m", "tpu_v4"): 251_166,
+    ("sift1m", "tpu_v3"): 118_062,
+    ("sift1m", "tpu_v4"): 172_035,
+}
+
+
+def rows():
+    out = []
+    for name, w in KNN_WORKLOADS.items():
+        plan = plan_bins(w.n, w.k, w.recall_target)
+        # block_rows = M: the whole query batch stays VMEM-resident, the
+        # database streams once (the paper's profiler reports I_MEM ~ 4700).
+        cost = partial_reduce_cost(
+            w.m, w.n, w.d_padded, plan.num_bins, cops_per_dot=w.cops_per_dot,
+            block_rows=w.m,
+        )
+        i_cop = 2 * w.d_padded / w.cops_per_dot
+        for hw_name in ("tpu_v3", "tpu_v4", "tpu_v5e"):
+            hw = HARDWARE[hw_name]
+            modeled = attainable_flops(cost, hw)
+            measured = PAPER_MEASURED.get((name, hw_name))
+            out.append({
+                "dataset": name,
+                "hw": hw_name,
+                "C": w.cops_per_dot,
+                "I_MEM": round(cost.i_mem, 1),
+                "I_COP": round(i_cop, 1),
+                "L": plan.num_bins,
+                "modeled_GFLOPs": round(modeled / 1e9),
+                "paper_measured_GFLOPs": measured,
+                "model_vs_measured": (
+                    round(measured / (modeled / 1e9), 3) if measured else None
+                ),
+            })
+    return out
+
+
+def main(emit):
+    for r in rows():
+        emit(
+            f"table2,{r['dataset']},{r['hw']},C={r['C']},I_COP={r['I_COP']},"
+            f"I_MEM={r['I_MEM']},modeled={r['modeled_GFLOPs']}GF/s,"
+            f"paper={r['paper_measured_GFLOPs']},ratio={r['model_vs_measured']}"
+        )
+
+
+if __name__ == "__main__":
+    main(print)

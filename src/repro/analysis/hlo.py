@@ -1,0 +1,77 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, remat detection.
+
+``collective_bytes`` parses ``compiled.as_text()`` and estimates per-device
+wire bytes with ring-algorithm conventions:
+  all-reduce          2 x result bytes   (reduce-scatter + all-gather phases)
+  all-gather          1 x result bytes   (each device receives ~the result)
+  reduce-scatter      1 x operand bytes
+  all-to-all          1 x result bytes
+  collective-permute  1 x result bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "op_census", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """-> (total wire bytes per device, per-op-kind breakdown)."""
+    by_kind: Dict[str, float] = Counter()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_shapes, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        result_bytes = _shape_bytes(result_shapes)
+        if kind == "all-reduce":
+            by_kind[kind] += 2 * result_bytes
+        elif kind == "reduce-scatter":
+            # operand bytes: shapes inside the call parens.
+            operand_text = line[line.index("(") :]
+            operands = _shape_bytes(operand_text)
+            by_kind[kind] += max(operands, result_bytes)
+        else:
+            by_kind[kind] += result_bytes
+    return float(sum(by_kind.values())), dict(by_kind)
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count interesting op kinds (fusion/remat/reshape diagnostics)."""
+    ops = Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*[^ ]+\s+([a-z][a-z0-9\-]*)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return dict(ops)

@@ -1,0 +1,305 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers program is undercounted by ~num_layers.  This module walks
+the HLO call graph (entry -> fusions/calls/whiles) multiplying while bodies
+by their trip counts, and reports:
+
+  * dot_flops:   2 * prod(result_dims) * contracted_dim per dot — i.e. MXU
+                 flops only, which is exactly the numerator the compute
+                 roofline term wants,
+  * hbm_bytes:   sum of (operands + result) sizes over top-level ops of each
+                 executed computation (the standard fusion-boundary traffic
+                 approximation),
+  * cop_count:   element-count of non-dot, non-copy top-level ops — a VPU
+                 COP estimate for the paper's third roofline term.
+
+Trip counts are parsed from each while condition's compare-against-constant.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+from repro.analysis.hlo import DTYPE_BYTES
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\](?:{[^}]*})?")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body)=%?([\w\.\-]+)"
+)
+_COND_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+
+
+def _shape_elems(dtype: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class _Op:
+    kind: str
+    result_bytes: int
+    result_elems: int
+    operand_bytes: int
+    flops: float
+    callees: List[str] = field(default_factory=list)
+    cond: Optional[str] = None
+    trip: Optional[int] = None
+    update_bytes: int = 0
+
+
+@dataclass
+class HloCost:
+    dot_flops: float
+    hbm_bytes: float        # geometric mean of the hi/lo traffic models
+    hbm_bytes_hi: float     # fusion-boundary model (CPU-granularity upper bound)
+    hbm_bytes_lo: float     # perfect-fusion model (dots/reduces/slices only)
+    cop_count: float
+    while_trips: Dict[str, int]
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+}
+_SKIP_COPS = _SKIP_BYTES | {
+    "dot", "copy", "transpose", "reshape", "broadcast", "iota", "convert",
+    "slice", "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "while", "fusion", "call", "conditional",
+    "custom-call", "rng-bit-generator", "gather", "scatter",
+}
+
+
+_DNUMS_RE = re.compile(
+    r"lhs_contracting_dims=\{([0-9,]*)\}.*?rhs_contracting_dims=\{([0-9,]*)\}"
+)
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _dims_of(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _dot_flops_precise(result_text: str, rest: str, shapes_by_name) -> float:
+    """flops = 2 * result_elems * prod(lhs contracted dims).
+
+    Operand shapes are resolved through the per-computation name->dims map
+    (optimized HLO prints operand names, not shapes)."""
+    op_end = rest.find(")")
+    operand_names = _OPERAND_NAME_RE.findall(rest[: op_end if op_end >= 0 else len(rest)])
+    lhs_dims = shapes_by_name.get(operand_names[0]) if operand_names else None
+    if lhs_dims is None:
+        return 0.0
+    m = _DNUMS_RE.search(rest)
+    contract = 1
+    if m and m.group(1):
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    rm = _SHAPE_RE.search(result_text)
+    if not rm:
+        return 0.0
+    relems, _ = _shape_elems(rm.group(1), rm.group(2))
+    return 2.0 * relems * contract
+
+
+def _parse(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    # (computation, op_name, result_text, kind, rest) records + shape map.
+    records = []
+    shapes_by_name: Dict[str, List[int]] = {}
+    bytes_by_name: Dict[str, int] = {}
+    cur: Optional[str] = None
+    entry_name: Optional[str] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in hlo.splitlines():
+        if "/*" in line:
+            line = comment_re.sub("", line)  # XLA's /*index=N*/ tuple comments
+        stripped = line.strip()
+        mc = _COMP_RE.match(stripped) if "{" in line and "->" in line else None
+        if mc:
+            cur = mc.group(1)
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry_name = cur
+            continue
+        if cur is None:
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            # parameter declarations etc. still define shapes
+            pm = re.match(r"^\s*%?([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+parameter\(", line)
+            continue
+        name, result_text, kind, rest = mo.groups()
+        sm = _SHAPE_RE.search(result_text)
+        if sm:
+            shapes_by_name[name] = (
+                [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+            )
+        relems = rbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_text):
+            e, b = _shape_elems(dt, dims)
+            relems += e
+            rbytes += b
+        bytes_by_name[name] = rbytes
+        records.append((cur, name, result_text, kind, rest, relems, rbytes))
+
+    for cur, name, result_text, kind, rest, relems, rbytes in records:
+        op_end = rest.find(")")
+        operand_names = _OPERAND_NAME_RE.findall(
+            rest[: op_end if op_end >= 0 else len(rest)]
+        )
+        obytes = sum(bytes_by_name.get(n, 0) for n in operand_names)
+        flops = (
+            _dot_flops_precise(result_text, rest, shapes_by_name)
+            if kind == "dot"
+            else 0.0
+        )
+        callees = _CALL_ATTR_RE.findall(rest)
+        cond = None
+        mcond = _COND_ATTR_RE.search(rest)
+        if mcond:
+            cond = mcond.group(1)
+        op = _Op(kind=kind, result_bytes=rbytes, result_elems=relems,
+                 operand_bytes=obytes, flops=flops, callees=callees, cond=cond)
+        if kind == "while":
+            mt = _TRIP_RE.search(rest)
+            if mt:
+                op.trip = int(mt.group(1))
+        if kind == "dynamic-update-slice" and len(operand_names) >= 2:
+            op.update_bytes = bytes_by_name.get(operand_names[1], 0)
+        comps[cur].append(op)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse(hlo)
+    # Trip counts: find constants inside condition computations.
+    cond_consts: Dict[str, int] = {}
+    cur = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if mc:
+            cur = mc.group(1)
+            continue
+        if cur and "constant(" in line:
+            for c in _CONST_RE.findall(line):
+                cond_consts[cur] = max(cond_consts.get(cur, 1), int(c))
+
+    memo: Dict[str, Tuple[float, float, float, float]] = {}
+    _REDUCE_KINDS = {"reduce", "reduce-window", "sort", "gather", "scatter",
+                     "select-and-scatter", "cumsum"}
+
+    def _slice_bytes(ops: List[_Op]) -> Tuple[float, float, bool]:
+        """(dus update bytes, ds result bytes, contains-reduce) for a comp."""
+        dus = ds = 0.0
+        has_reduce = False
+        for op in ops:
+            if op.kind == "dynamic-update-slice":
+                dus += op.update_bytes if op.update_bytes else op.result_bytes
+            elif op.kind == "dynamic-slice":
+                ds += op.result_bytes
+            elif op.kind in _REDUCE_KINDS:
+                has_reduce = True
+        return dus, ds, has_reduce
+
+    def cost_of(name: str) -> Tuple[float, float, float, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, 0.0, 0.0)  # cycle guard
+        flops = hi = lo = cops = 0.0
+        for op in comps.get(name, []):
+            if op.kind == "while":
+                body = op.callees[0] if op.callees else None
+                trips = op.trip or (cond_consts.get(op.cond, 1) if op.cond else 1)
+                if body:
+                    bf, bh, bl, bc = cost_of(body)
+                    flops += trips * bf
+                    hi += trips * bh
+                    lo += trips * bl
+                    cops += trips * bc
+                continue
+            if op.kind in ("fusion", "call", "conditional", "custom-call"):
+                dus_b = ds_b = 0.0
+                has_reduce = False
+                for callee in op.callees:
+                    cf, ch, cl, cc = cost_of(callee)
+                    flops += cf
+                    cops += cc
+                    lo += cl          # nested dots/slices inside the fusion
+                    d, s2, r = _slice_bytes(comps.get(callee, []))
+                    dus_b += d
+                    ds_b += s2
+                    has_reduce |= r
+                # hi: fusion-boundary traffic; in-place stack updates move
+                # only the slice.
+                hi += 2 * dus_b if dus_b else 2 * op.result_bytes
+                # lo: perfect fusion — only reductions, dots and slice
+                # traffic survive; pure elementwise fusions melt into their
+                # consumers.
+                lo += 2 * dus_b + ds_b
+                if has_reduce:
+                    lo += 2 * op.result_bytes
+                continue
+            if op.kind == "dot":
+                flops += op.flops
+                hi += op.operand_bytes + op.result_bytes
+                lo += op.operand_bytes + op.result_bytes
+                continue
+            if op.kind == "dynamic-update-slice":
+                hi += 2 * (op.update_bytes or op.result_bytes)
+                lo += 2 * (op.update_bytes or op.result_bytes)
+                continue
+            if op.kind == "dynamic-slice":
+                hi += 2 * op.result_bytes
+                lo += 2 * op.result_bytes
+                continue
+            if op.kind in _REDUCE_KINDS:
+                hi += op.operand_bytes + op.result_bytes
+                lo += op.operand_bytes + op.result_bytes
+                if op.kind not in _SKIP_COPS:
+                    cops += op.result_elems
+                continue
+            if op.kind not in _SKIP_BYTES:
+                hi += 2 * op.result_bytes
+            if op.kind not in _SKIP_COPS:
+                cops += op.result_elems
+        memo[name] = (flops, hi, lo, cops)
+        return memo[name]
+
+    f, hi, lo, c = (
+        cost_of("__entry__") if "__entry__" in comps else (0.0, 0.0, 0.0, 0.0)
+    )
+    trips = {
+        cond: n for cond, n in cond_consts.items() if n > 1
+    }
+    # The truth lies between the two fusion models; use the geometric mean as
+    # the headline number and report both bounds.
+    mean = (hi * lo) ** 0.5 if hi and lo else max(hi, lo)
+    return HloCost(dot_flops=f, hbm_bytes=mean, hbm_bytes_hi=hi,
+                   hbm_bytes_lo=lo, cop_count=c, while_trips=trips)

@@ -1,0 +1,110 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+JSON artifacts written by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m repro.analysis.rooflines [--dir benchmarks/results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(directory: str) -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(cells: List[Dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | dominant | compute | memory | collective | instr "
+        "| roofline frac | useful ratio | notes |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh or "error" in c:
+            continue
+        r = c["roofline"]
+        notes = "knn-attn" if c.get("knn_attention") else ""
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | **{r['dominant']}** "
+            f"| {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} "
+            f"| {_fmt_s(r['collective_s'])} | {_fmt_s(r['instruction_s'])} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_ratio']:.2f} | {notes} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compile | flops/dev | bytes/dev (lo..hi) "
+        "| collective B/dev | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "error" in c:
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | FAIL | | | "
+                f"| {c['error'][:60]} |"
+            )
+            continue
+        kinds = c.get("collective_breakdown", {})
+        top = ", ".join(
+            f"{k}:{v / 1e6:.0f}MB"
+            for k, v in sorted(kinds.items(), key=lambda kv: -kv[1])[:2]
+        )
+        lo = c.get("hlo_bytes_per_device", 0)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['compile_s']}s "
+            f"| {c['hlo_flops_per_device']:.2e} | {lo:.2e} "
+            f"| {c['collective_bytes']:.2e} | {top} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: List[Dict]):
+    """worst roofline fraction / most collective-bound / most paper-like."""
+    ok = [c for c in cells if "error" not in c and c["mesh"] == "single"]
+    worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda c: c["roofline"]["collective_s"]
+               / max(c["roofline"]["step_time_s"], 1e-12))
+    knn = [c for c in ok if c.get("knn_attention")]
+    paper = max(knn, key=lambda c: c["hlo_flops_per_device"]) if knn else ok[0]
+    return worst, coll, paper
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print("## Dry-run (all cells)\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod, per-device terms, TPU v5e)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(cells, "multi"))
+    w, c, p = pick_hillclimb(cells)
+    print(
+        f"\nhillclimb picks: worst-frac={w['arch']}x{w['shape']} "
+        f"(frac {w['roofline']['roofline_fraction']:.3f}); "
+        f"collective-bound={c['arch']}x{c['shape']}; "
+        f"paper-representative={p['arch']}x{p['shape']} (knn-attn)"
+    )
+
+
+if __name__ == "__main__":
+    main()

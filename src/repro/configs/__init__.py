@@ -1,0 +1,36 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    deepseek_v2_236b,
+    granite_20b,
+    granite_moe_3b_a800m,
+    internlm2_1_8b,
+    knn_workloads,
+    mamba2_2_7b,
+    qwen2_vl_2b,
+    recurrentgemma_9b,
+    stablelm_1_6b,
+    starcoder2_7b,
+    whisper_medium,
+)
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    register,
+)
+from repro.configs.knn_workloads import KNN_WORKLOADS, KNNConfig  # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "deepseek-v2-236b",
+    "granite-moe-3b-a800m",
+    "granite-20b",
+    "internlm2-1.8b",
+    "starcoder2-7b",
+    "stablelm-1.6b",
+    "mamba2-2.7b",
+    "qwen2-vl-2b",
+    "whisper-medium",
+    "recurrentgemma-9b",
+)

@@ -1,0 +1,42 @@
+"""The paper's own benchmark workloads (Table 2): Glove1.2M and Sift1M."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+__all__ = ["KNNConfig", "KNN_WORKLOADS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KNNConfig:
+    name: str
+    n: int                  # database size
+    d: int                  # dimension (pre-padding)
+    d_padded: int           # dimension after padding to 128
+    m: int                  # query batch
+    metric: str             # "cosine" | "l2"
+    k: int = 10
+    recall_target: float = 0.95
+    # Appendix A.5 COP accounting flags
+    non_pow2_n: bool = True
+    broadcast_norm: bool = False
+
+    @property
+    def cops_per_dot(self) -> int:
+        c = 3                       # PartialReduce
+        c += int(self.metric == "l2")       # relaxed distance
+        c += int(self.non_pow2_n)           # masking
+        c += int(self.broadcast_norm)       # broadcasting ||x||^2/2
+        return c
+
+
+KNN_WORKLOADS: Dict[str, KNNConfig] = {
+    "glove1.2m": KNNConfig(
+        name="glove1.2m", n=1_183_514, d=100, d_padded=128, m=10_000,
+        metric="cosine", non_pow2_n=True, broadcast_norm=False,
+    ),
+    "sift1m": KNNConfig(
+        name="sift1m", n=1_000_000, d=128, d_padded=128, m=10_000,
+        metric="l2", non_pow2_n=True, broadcast_norm=True,
+    ),
+}

@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from repro.core.binning import (
+    BinPlan,
+    bins_for_recall,
+    bins_for_recall_approx,
+    expected_recall,
+    plan_bins,
+)
+from repro.core.knn import cosine_nns, exact_l2nns, exact_mips, half_norms, l2nns, mips
+from repro.core.partial_reduce import partial_reduce, partial_reduce_with_plan
+from repro.core.rescoring import bitonic_sort_pairs, exact_rescoring
+from repro.core.roofline import (
+    HARDWARE,
+    Hardware,
+    KernelCost,
+    RooflineTerms,
+    attainable_flops,
+    bottleneck,
+    cops_per_dot,
+    partial_reduce_cost,
+    roofline_terms,
+)
+from repro.core.topk import approx_max_k, approx_min_k

@@ -1,0 +1,118 @@
+"""Distributed KNN (paper §7): shard the database, PartialReduce locally,
+all-gather the L bin-winners, ExactRescore globally.
+
+Built with shard_map so the communication pattern is explicit:
+  * database rows sharded over ``db_axis`` (each shard holds N/S rows),
+  * queries replicated over ``db_axis`` (optionally sharded over a batch axis),
+  * each shard reduces its N/S scores to L/S candidates using the *global* N
+    for recall accounting (``reduction_input_size_override``),
+  * one all-gather of (M, L/S) values+indices per shard group,
+  * rescoring runs replicated (L is tiny).
+
+This same pattern is reused by ``models.attention.knn_topk_attention`` for
+sequence-sharded KV caches (context-parallel long-context decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.binning import plan_bins
+from repro.core.partial_reduce import partial_reduce_with_plan
+from repro.core.rescoring import exact_rescoring
+
+__all__ = ["sharded_mips", "sharded_l2nns", "make_sharded_searcher"]
+
+
+def _local_partial_reduce(scores, *, global_n, k, recall_target, shard_offset):
+    """PartialReduce on a local score shard; indices are globalized."""
+    n_local = scores.shape[-1]
+    plan = plan_bins(
+        n_local, k, recall_target, reduction_input_size_override=global_n
+    )
+    vals, idxs = partial_reduce_with_plan(scores, plan, mode="max")
+    return vals, idxs + shard_offset
+
+
+def make_sharded_searcher(
+    mesh: Mesh,
+    *,
+    k: int = 10,
+    recall_target: float = 0.95,
+    db_axis: str = "model",
+    batch_axis: Optional[str] = None,
+    metric: str = "mips",
+):
+    """Build a jit-able sharded search fn: (queries, database[, half_norms]) -> (vals, idxs).
+
+    database is expected sharded P(db_axis, None); queries sharded
+    P(batch_axis, None) (or replicated when batch_axis is None).
+    """
+
+    def searcher(queries, database, db_half_norm=None):
+        global_n = database.shape[0]
+        n_shards = mesh.shape[db_axis]
+        if global_n % n_shards:
+            raise ValueError(
+                f"database rows {global_n} not divisible by {n_shards} shards"
+            )
+
+        qspec = P(batch_axis, None) if batch_axis else P(None, None)
+        hspec = P(db_axis) if db_half_norm is not None else None
+        out_batch = batch_axis  # rescoring output keeps the query sharding
+
+        def local_fn(q, db, hn):
+            axis_idx = jax.lax.axis_index(db_axis)
+            n_local = db.shape[0]
+            offset = axis_idx.astype(jnp.int32) * n_local
+            scores = jnp.einsum("ik,jk->ij", q, db)
+            if metric == "l2":
+                scores = scores - hn[None, :]  # == -(||x||^2/2 - <q,x>)
+            vals, idxs = _local_partial_reduce(
+                scores,
+                global_n=global_n,
+                k=k,
+                recall_target=recall_target,
+                shard_offset=offset,
+            )
+            # Gather the candidate lists from every database shard.
+            vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
+            idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
+            top_v, top_i = exact_rescoring(vals, idxs, k, mode="max")
+            if metric == "l2":
+                top_v = -top_v
+            return top_v, top_i
+
+        in_specs = (qspec, P(db_axis, None), P(db_axis))
+        out_specs = (P(out_batch, None), P(out_batch, None))
+        hn = (
+            db_half_norm
+            if db_half_norm is not None
+            else jnp.zeros((global_n,), queries.dtype)
+        )
+        # check_vma=False: the all_gather over db_axis makes outputs
+        # replicated over that axis, which the static VMA check cannot infer.
+        fn = jax.shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        return fn(queries, database, hn)
+
+    return searcher
+
+
+def sharded_mips(queries, database, k, mesh, **kw):
+    """One-shot distributed MIPS (convenience wrapper)."""
+    return make_sharded_searcher(mesh, k=k, metric="mips", **kw)(queries, database)
+
+
+def sharded_l2nns(queries, database, k, mesh, *, db_half_norm=None, **kw):
+    if db_half_norm is None:
+        db_half_norm = 0.5 * jnp.sum(jnp.square(database), axis=-1)
+    return make_sharded_searcher(mesh, k=k, metric="l2", **kw)(
+        queries, database, db_half_norm
+    )

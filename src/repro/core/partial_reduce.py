@@ -1,0 +1,79 @@
+"""Pure-JAX PartialReduce (paper Alg. 1 / Alg. 2, reference semantics).
+
+Reduces an (..., N) score tensor to the top-1 value+index of each of L
+contiguous bins of size 2**W: bin(j) = j >> W, matching the
+``RegisterAlignedShiftRight`` mapping in Alg. 2.  The Pallas kernel in
+``repro.kernels.partial_reduce`` fuses this with the distance matmul; this
+module is the algorithmic source of truth (and the oracle for kernel tests).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.binning import BinPlan, plan_bins
+
+__all__ = ["partial_reduce", "partial_reduce_with_plan", "NEG_INF"]
+
+NEG_INF = float("-inf")
+
+
+def partial_reduce_with_plan(
+    scores: jnp.ndarray,
+    plan: BinPlan,
+    *,
+    mode: str = "max",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bin-wise top-1 over the last axis of ``scores``.
+
+    Args:
+      scores: (..., N) array. N == plan.n.
+      plan: binning layout from ``plan_bins``.
+      mode: "max" (MIPS) or "min" (distance search).
+
+    Returns:
+      (values, indices): both (..., L).  ``indices`` are positions in the
+      original (unpadded) N axis; bins that contain only padding return
+      index of their first element with value +/-inf.
+    """
+    if scores.shape[-1] != plan.n:
+        raise ValueError(f"scores last dim {scores.shape[-1]} != plan.n {plan.n}")
+    neutral = NEG_INF if mode == "max" else -NEG_INF
+    pad = plan.padded_n - plan.n
+    if pad:
+        # Masking the non-power-of-2 tail: the "+1 COP" of Appendix A.5.
+        pad_widths = [(0, 0)] * (scores.ndim - 1) + [(0, pad)]
+        scores = jnp.pad(scores, pad_widths, constant_values=neutral)
+    binned = scores.reshape(scores.shape[:-1] + (plan.num_bins, plan.bin_size))
+    if mode == "max":
+        vals = jnp.max(binned, axis=-1)
+        args = jnp.argmax(binned, axis=-1)
+    elif mode == "min":
+        vals = jnp.min(binned, axis=-1)
+        args = jnp.argmin(binned, axis=-1)
+    else:
+        raise ValueError(f"mode must be 'max' or 'min', got {mode!r}")
+    offsets = jnp.arange(plan.num_bins, dtype=jnp.int32) * plan.bin_size
+    idx = offsets + args.astype(jnp.int32)
+    # Clamp padded-bin indices back into range (their value is +/-inf anyway).
+    idx = jnp.minimum(idx, plan.n - 1)
+    return vals, idx
+
+
+def partial_reduce(
+    scores: jnp.ndarray,
+    k: int,
+    recall_target: float = 0.95,
+    *,
+    mode: str = "max",
+    reduction_input_size_override: int = -1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convenience wrapper: plan bins from (N, k, recall_target) then reduce."""
+    plan = plan_bins(
+        scores.shape[-1],
+        k,
+        recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+    return partial_reduce_with_plan(scores, plan, mode=mode)

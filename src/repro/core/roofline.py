@@ -1,0 +1,167 @@
+"""Instruction-throughput-aware roofline model (paper §4, Eq. 6).
+
+P  <=  min( pi,  beta * I_MEM,  gamma * I_COP )
+
+with pi = peak matmul FLOP/s, beta = HBM bytes/s, gamma = peak
+coefficient-wise op (COP) throughput.  Includes the paper's Table 1 hardware
+plus TPU v5e (this repo's deployment target) and the kernel cost accounting
+of Appendix A.3/A.5 (I_MEM Eq. 20, COPs-per-dot C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+__all__ = [
+    "Hardware",
+    "HARDWARE",
+    "KernelCost",
+    "attainable_flops",
+    "bottleneck",
+    "partial_reduce_cost",
+    "RooflineTerms",
+    "roofline_terms",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # pi  [FLOP/s]
+    hbm_bandwidth: float       # beta [bytes/s]
+    peak_cops: float           # gamma [COP/s]
+    hbm_bytes: float = 16e9    # per-chip HBM capacity
+    ici_bandwidth: float = 50e9  # per-link interconnect [bytes/s]
+
+
+HARDWARE: Dict[str, Hardware] = {
+    # Paper Table 1.
+    "v100": Hardware("GPU V100", 125e12, 900e9, 15.7e12),
+    "a100": Hardware("GPU A100", 312e12, 1555e9, 19.5e12),
+    "tpu_v3": Hardware("TPU V3", 126e12, 858e9, 4.0e12),
+    "tpu_v4": Hardware("TPU V4", 274e12, 1144e9, 4.3e12),
+    # Deployment target for this repo (brief): 197 bf16 TFLOP/s, 819 GB/s HBM,
+    # ~50 GB/s/link ICI.  gamma estimated from VPU geometry (8x128 lanes x 2
+    # unit x ~940MHz x 2 cores) ~= 3.9 TCOP/s, same methodology as Table 1.
+    "tpu_v5e": Hardware("TPU v5e", 197e12, 819e9, 3.9e12, hbm_bytes=16e9),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Workload description of one kernel: FLOPs, HBM bytes, COPs."""
+
+    flops: float
+    hbm_bytes: float
+    cops: float
+
+    @property
+    def i_mem(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1e-30)
+
+    @property
+    def i_cop(self) -> float:
+        return self.flops / max(self.cops, 1e-30)
+
+
+def attainable_flops(cost: KernelCost, hw: Hardware) -> float:
+    """Eq. 6: attainable performance of a kernel on given hardware."""
+    return min(hw.peak_flops, hw.hbm_bandwidth * cost.i_mem, hw.peak_cops * cost.i_cop)
+
+
+def bottleneck(cost: KernelCost, hw: Hardware) -> str:
+    terms = {
+        "compute": hw.peak_flops,
+        "memory": hw.hbm_bandwidth * cost.i_mem,
+        "instruction": hw.peak_cops * cost.i_cop,
+    }
+    return min(terms, key=terms.get)
+
+
+def partial_reduce_cost(
+    m: int,
+    n: int,
+    d: int,
+    l: int,
+    *,
+    cops_per_dot: float = 3.0,
+    block_rows: int = 512,
+    dtype_bytes: int = 4,
+) -> KernelCost:
+    """Cost model of the PartialReduce kernel (Appendix A.3).
+
+    FLOPs  = 2MND (the einsum)
+    bytes  = 4(MD + MND/ib + 2ML)  -- Eq. 20, ib = query block rows
+    COPs   = C * M * N             -- C per dot product (A.5 accounting)
+    """
+    flops = 2.0 * m * n * d
+    hbm = dtype_bytes * (m * d + (m / block_rows) * n * d + 2 * m * l)
+    cops = cops_per_dot * m * n
+    return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
+def cops_per_dot(
+    *,
+    base: int = 3,
+    l2: bool = False,
+    non_pow2_n: bool = False,
+    padded_d: bool = False,
+    broadcast_norm: bool = False,
+) -> int:
+    """Appendix A.5 COP accounting: 3 base + 1 per listed condition."""
+    c = base
+    c += int(l2)              # relaxed distance subtract
+    c += int(non_pow2_n)      # database masking
+    c += int(padded_d)        # D not a multiple of 128
+    c += int(broadcast_norm)  # broadcasting ||x||^2/2
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term time decomposition for a compiled step on a mesh."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        # Lower bound: perfectly-overlapped execution is max(); serialized is
+        # sum().  We report the max-model (roofline convention).
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(
+    *,
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    hw: Hardware,
+    ici_links: int = 1,
+) -> RooflineTerms:
+    """Brief-specified three-term roofline for a whole compiled step.
+
+    compute    = FLOPs / (chips * pi)
+    memory     = bytes / (chips * HBM bw)
+    collective = collective bytes / (chips * ici_links * link bw)
+
+    ici_links defaults to 1 (the brief's convention: ~50 GB/s/link and one
+    link's worth of bandwidth counted per chip).
+    """
+    return RooflineTerms(
+        compute_s=hlo_flops / (chips * hw.peak_flops),
+        memory_s=hlo_bytes / (chips * hw.hbm_bandwidth),
+        collective_s=collective_bytes / (chips * ici_links * hw.ici_bandwidth),
+    )

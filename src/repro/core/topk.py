@@ -1,0 +1,87 @@
+"""approx_max_k / approx_min_k — the paper's public operator.
+
+Mirrors the interface the authors upstreamed to JAX/XLA
+(``jax.lax.approx_max_k``) but is implemented from scratch on top of
+``core.partial_reduce`` + ``core.rescoring`` so the repro owns the algorithm.
+
+Options (paper Appendix A.1):
+  * recall_target          -> derives the bin count L (Eq. 14)
+  * reduction_input_size_override -> recall accounting N for sharded inputs
+  * aggregate_to_topk      -> emit the ExactRescoring kernel (default True)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.binning import plan_bins
+from repro.core.partial_reduce import partial_reduce_with_plan
+from repro.core.rescoring import exact_rescoring
+
+__all__ = ["approx_max_k", "approx_min_k"]
+
+
+def _approx_k(
+    operand: jnp.ndarray,
+    k: int,
+    *,
+    mode: str,
+    recall_target: float,
+    reduction_input_size_override: int,
+    aggregate_to_topk: bool,
+    use_bitonic: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = operand.shape[-1]
+    plan = plan_bins(
+        n,
+        k,
+        recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+    vals, idxs = partial_reduce_with_plan(operand, plan, mode=mode)
+    if not aggregate_to_topk:
+        return vals, idxs
+    return exact_rescoring(vals, idxs, k, mode=mode, use_bitonic=use_bitonic)
+
+
+def approx_max_k(
+    operand: jnp.ndarray,
+    k: int,
+    *,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximate top-k maxima along the last axis (paper Listing 1)."""
+    return _approx_k(
+        operand,
+        k,
+        mode="max",
+        recall_target=recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+        aggregate_to_topk=aggregate_to_topk,
+        use_bitonic=use_bitonic,
+    )
+
+
+def approx_min_k(
+    operand: jnp.ndarray,
+    k: int,
+    *,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximate top-k minima along the last axis (paper Listing 2)."""
+    return _approx_k(
+        operand,
+        k,
+        mode="min",
+        recall_target=recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+        aggregate_to_topk=aggregate_to_topk,
+        use_bitonic=use_bitonic,
+    )

@@ -1,0 +1,60 @@
+"""Elastic scaling: rebuild the mesh for whatever devices survive and
+re-shard state from the last checkpoint.
+
+Because checkpoints store full logical arrays and all sharding is derived
+from logical axis rules (parallel.sharding), a restart at a different chip
+count is: pick the new mesh shape -> rebuild NamedShardings -> device_put.
+``choose_mesh_shape`` keeps the model axis fixed when possible (TP degree is
+baked into kernel efficiency) and shrinks the data axis, which only changes
+the gradient all-reduce span — the train step lowers unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.sharding import logical_to_spec, use_mesh
+
+__all__ = ["choose_mesh_shape", "remesh_state", "survivors_mesh"]
+
+
+def choose_mesh_shape(
+    n_devices: int, *, model_parallel: int = 16, multi_pod_threshold: int = 512
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable mesh for n_devices, preferring to keep TP width."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    dp = n_devices // mp
+    if n_devices >= multi_pod_threshold:
+        pods = n_devices // multi_pod_threshold
+        while dp % pods:
+            pods //= 2
+        return (pods, dp // pods, mp), ("pod", "data", "model")
+    return (dp, mp), ("data", "model")
+
+
+def survivors_mesh(devices: Optional[Sequence] = None, *, model_parallel: int = 16) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape, axes = choose_mesh_shape(len(devices), model_parallel=model_parallel)
+    usable = 1
+    for s in shape:
+        usable *= s
+    import numpy as np
+
+    arr = np.array(devices[:usable]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def remesh_state(state, axes_tree, new_mesh: Mesh):
+    """Re-shard a (host or device) state pytree onto a new mesh."""
+    with use_mesh(new_mesh):
+        shardings = jax.tree.map(
+            lambda axes: NamedSharding(new_mesh, logical_to_spec(axes)),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(e is None or isinstance(e, str) for e in x),
+        )
+    return jax.tree.map(jax.device_put, state, shardings)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused score + PartialReduce (paper Alg. 2).
+
+One grid step computes a (block_m, block_n) tile of the query-database score
+matrix on the MXU and immediately reduces it to the top-1 (value, index) of
+each bin of size 2**W — the O(M*N) score tile never leaves VMEM, which is
+the whole point of the paper (I_MEM ~ O(min(M, N)), Eq. 10).
+
+COP accounting (Appendix A.5): the in-tile reduction uses exactly 3
+coefficient-wise ops per score (compare/select for the running max, the
+iota compare, and the index min) = the paper's C=3.  The bias row fuses both
+the non-power-of-2 masking COP and the L2 halved-norm COP into one add.
+
+Tiling contract (enforced by ops.py):
+  * D is padded to a multiple of 128 (MXU lane width),
+  * block_n is a multiple of the bin size 2**W,
+  * N is padded to a multiple of block_n (bias = -inf on the padding),
+  * block_m rows of queries are resident in VMEM across the j-loop
+    (temporal locality of Alg. 2 line 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["partial_reduce_pallas"]
+
+
+def _partial_reduce_kernel(
+    q_ref,      # (block_m, d)      VMEM
+    x_ref,      # (block_n, d)      VMEM
+    bias_ref,   # (1, block_n)      VMEM: -inf mask and/or -||x||^2/2
+    v_ref,      # (block_m, bins_per_block) VMEM out
+    a_ref,      # (block_m, bins_per_block) VMEM out
+    *,
+    block_n: int,
+    bin_size: int,
+):
+    block_m = q_ref.shape[0]
+    bins_per_block = block_n // bin_size
+    j = pl.program_id(1)
+
+    # MXU: one (block_m, d) x (d, block_n) matmul, f32 accumulation.
+    scores = jax.lax.dot_general(
+        q_ref[...],
+        x_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores + bias_ref[...]  # fused mask / halved-norm (1 COP)
+
+    # Bin-wise top-1: reshape puts each bin in the minor (lane) dimension.
+    binned = scores.reshape(block_m, bins_per_block, bin_size)
+    vmax = jnp.max(binned, axis=-1)                        # COP 1: running max
+    lane = jax.lax.broadcasted_iota(jnp.int32, binned.shape, 2)
+    hit = jnp.where(binned == vmax[..., None], lane, bin_size)  # COP 2: cmp+sel
+    amax = jnp.min(hit, axis=-1)                           # COP 3: index min
+
+    base = j * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, bins_per_block), 1
+    ) * bin_size
+    v_ref[...] = vmax
+    a_ref[...] = base + amax
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bin_size", "block_m", "block_n", "interpret",
+    ),
+)
+def partial_reduce_pallas(
+    queries: jnp.ndarray,   # (m, d)  m % block_m == 0, d % 128 == 0
+    database: jnp.ndarray,  # (n, d)  n % block_n == 0
+    bias: jnp.ndarray,      # (1, n)  f32
+    *,
+    bin_size: int,
+    block_m: int = 256,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused score+reduce. Returns (values, indices), both (m, n // bin_size).
+
+    Shapes must already satisfy the tiling contract — use
+    ``repro.kernels.ops`` for the padding/planning front-end.
+    """
+    m, d = queries.shape
+    n, d2 = database.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: {d} vs {d2}")
+    if d % 128 or m % block_m or n % block_n or block_n % bin_size:
+        raise ValueError(
+            f"tiling contract violated: m={m} d={d} n={n} "
+            f"block_m={block_m} block_n={block_n} bin_size={bin_size}"
+        )
+    num_bins = n // bin_size
+    bins_per_block = block_n // bin_size
+    grid = (m // block_m, n // block_n)
+
+    kernel = functools.partial(
+        _partial_reduce_kernel, block_n=block_n, bin_size=bin_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, bins_per_block), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, bins_per_block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, num_bins), jnp.float32),
+            jax.ShapeDtypeStruct((m, num_bins), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, database, bias)

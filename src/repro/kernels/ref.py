@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused PartialReduce kernel.
+
+Mirrors ``partial_reduce_pallas`` semantics exactly (same padding, same bias
+fusion, same lowest-index tie-break) so kernel tests can assert_allclose.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["partial_reduce_ref"]
+
+
+def partial_reduce_ref(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    bin_size: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m, d = queries.shape
+    n = database.shape[0]
+    scores = (
+        jnp.einsum(
+            "ik,jk->ij", queries, database, preferred_element_type=jnp.float32
+        )
+        + bias
+    )
+    num_bins = n // bin_size
+    binned = scores.reshape(m, num_bins, bin_size)
+    vals = jnp.max(binned, axis=-1)
+    args = jnp.argmax(binned, axis=-1)  # first occurrence == lowest index
+    offsets = jnp.arange(num_bins, dtype=jnp.int32) * bin_size
+    return vals, offsets[None, :] + args.astype(jnp.int32)

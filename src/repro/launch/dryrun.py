@@ -1,0 +1,312 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (into --out, default benchmarks/results/dryrun):
+  {arch}_{shape}_{mesh}.json with
+    * compiled cost analysis (FLOPs, bytes),
+    * memory analysis (per-device argument/output/temp/peak bytes),
+    * collective wire bytes parsed from the post-SPMD HLO,
+    * the three §Roofline terms for TPU v5e,
+    * MODEL_FLOPS = 6*N(_active)*D and the useful-compute ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import collective_bytes, op_census
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.roofline import HARDWARE
+from repro.launch import shardspecs as SS
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.parallel.sharding import use_mesh
+
+
+def _knn_attn_for_cell(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k uses the paper's knn top-k attention for KV-cache archs."""
+    if shape.name != "long_500k":
+        return False
+    kinds = set(cfg.layer_kinds())
+    return any(k in kinds for k in ("dense", "moe", "mla_dense", "mla_moe", "dec"))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6 * N(_active) * tokens (+ attention KV term on decode)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token/sequence + attention reads of the cache
+    tokens = shape.global_batch
+    attn = 0.0
+    hd = cfg.resolved_head_dim
+    for kind in cfg.layer_kinds():
+        if kind in ("dense", "moe", "dec", "enc"):
+            attn += 4.0 * cfg.num_heads * hd * shape.seq_len
+        elif kind.startswith("mla"):
+            attn += 4.0 * cfg.num_heads * cfg.kv_lora_rank * shape.seq_len
+        elif kind == "local_attn":
+            attn += 4.0 * cfg.num_heads * hd * min(cfg.local_window, shape.seq_len)
+    return (2.0 * n + attn) * tokens
+
+
+def ideal_memory_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Unavoidable global HBM traffic per step (roofline denominator).
+
+    train:   read f32 params + m + v, write all three, plus one bf16
+             read/write of activations at the layer boundaries.
+    prefill: read bf16 params once + write the KV cache.
+    decode:  read bf16 active params + read the whole cache once.
+    """
+    n = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        act = 2.0 * tokens * cfg.d_model * max(
+            len(cfg.layer_kinds()), 1
+        ) * 2  # save + reload once per layer boundary
+        return 6.0 * 4.0 * n_total + act
+    from repro.serving.kvcache import cache_bytes_per_token
+
+    cache = cache_bytes_per_token(cfg) * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_total + cache
+    return 2.0 * n + cache
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Build abstract args + shardings and lower the right step function."""
+    specs = M.input_specs(cfg, shape)
+    if shape.kind == "train":
+        step = M.make_train_step(cfg, microbatches=cfg.train_microbatches)
+        state_abs = jax.eval_shape(
+            functools.partial(M.init_train_state, cfg=cfg), jax.random.PRNGKey(0)
+        )
+        state_sh = SS.sanitize_tree(
+            SS.train_state_shardings(cfg, mesh, shape), state_abs, mesh
+        )
+        batch_sh = SS.sanitize_tree(
+            SS.batch_shardings(cfg, shape, mesh), specs, mesh
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        return fn.lower(state_abs, specs)
+    if shape.kind == "prefill":
+        step = M.make_prefill_step(cfg)
+        params_abs = jax.eval_shape(
+            functools.partial(tfm.init_model, cfg=cfg), jax.random.PRNGKey(0)
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                SS.sanitize_tree(SS.param_shardings(cfg, mesh, shape), params_abs, mesh),
+                SS.sanitize_tree(SS.batch_shardings(cfg, shape, mesh), specs, mesh),
+            ),
+        )
+        return fn.lower(params_abs, specs)
+    # decode
+    use_knn = _knn_attn_for_cell(cfg, shape)
+    step = M.make_decode_step(cfg, use_knn=use_knn)
+    params_abs = jax.eval_shape(
+        functools.partial(tfm.init_model, cfg=cfg), jax.random.PRNGKey(0)
+    )
+    arg_sh = SS.decode_arg_shardings(cfg, shape, mesh)
+    arg_sh["params"] = SS.sanitize_tree(arg_sh["params"], params_abs, mesh)
+    arg_sh["caches"] = SS.sanitize_tree(arg_sh["caches"], specs["caches"], mesh)
+    if "cross_kv" in arg_sh:
+        arg_sh["cross_kv"] = SS.sanitize_tree(arg_sh["cross_kv"], specs["cross_kv"], mesh)
+    args = [params_abs, specs["tokens"], specs["caches"], specs["cur_index"], specs["rng"]]
+    shardings = [arg_sh["params"], arg_sh["tokens"], arg_sh["caches"],
+                 arg_sh["cur_index"], arg_sh["rng"]]
+    if cfg.is_encoder_decoder:
+        args.append(specs["cross_kv"])
+        shardings.append(arg_sh["cross_kv"])
+        fn = jax.jit(
+            step,
+            in_shardings=tuple(shardings),
+            out_shardings=(None, None, arg_sh["caches"]),
+            donate_argnums=(2,),
+        )
+        return fn.lower(*args)
+    fn = jax.jit(
+        step,
+        in_shardings=tuple(shardings),
+        out_shardings=(None, None, arg_sh["caches"]),
+        donate_argnums=(2,),
+    )
+    return fn.lower(*args)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             hw_name: str = "tpu_v5e") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "knn_attention": _knn_attn_for_cell(cfg, shape),
+    }
+    t0 = time.time()
+    rules = SS.cell_rules(cfg, shape, mesh)
+    with use_mesh(mesh, rules=rules):
+        lowered = lower_cell(cfg, shape, mesh)
+    result["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    except Exception as e:  # pragma: no cover
+        ca = {}
+        result["cost_analysis_error"] = str(e)
+    # XLA:CPU cost_analysis counts while bodies ONCE (scan undercount); kept
+    # for reference only.  The roofline uses the trip-count-aware HLO walk.
+    result["xla_cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    try:
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(ma, "peak_memory_in_bytes",
+                        getattr(ma, "temp_size_in_bytes", 0))
+            ),
+        }
+    except Exception as e:  # pragma: no cover
+        result["memory_error"] = str(e)
+
+    hlo = compiled.as_text()
+    t2 = time.time()
+    cost = analyze_hlo(hlo)  # per-partition program: all quantities per-device
+    coll_total, coll_kinds = collective_bytes(hlo)
+    result["analyze_s"] = round(time.time() - t2, 2)
+    result["hlo_flops_per_device"] = cost.dot_flops
+    result["hlo_bytes_per_device"] = cost.hbm_bytes
+    result["hlo_cops_per_device"] = cost.cop_count
+    result["hlo_flops"] = cost.dot_flops * chips
+    result["hlo_bytes"] = cost.hbm_bytes * chips
+    result["while_trips"] = cost.while_trips
+    result["collective_bytes"] = coll_total
+    result["collective_breakdown"] = coll_kinds
+    census = op_census(hlo)
+    result["collective_counts"] = {
+        k: v for k, v in census.items()
+        if any(s in k for s in ("all-", "reduce-scatter", "collective"))
+    }
+
+    hw = HARDWARE[hw_name]
+    compute_s = cost.dot_flops / hw.peak_flops
+    memory_s = cost.hbm_bytes / hw.hbm_bandwidth
+    collective_s = coll_total / hw.ici_bandwidth
+    instruction_s = cost.cop_count / hw.peak_cops  # the paper's third wall
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s, "instruction": instruction_s}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(cfg, shape)
+    mf_per_device = mf / chips
+    # Ideal step time: the better of the compute roofline and the
+    # unavoidable-traffic memory roofline — decode is *supposed* to be
+    # memory-bound, so MFU alone would misgrade it.
+    ideal_bytes_dev = ideal_memory_bytes(cfg, shape) / chips
+    t_ideal = max(mf_per_device / hw.peak_flops, ideal_bytes_dev / hw.hbm_bandwidth)
+    result["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "instruction_s": instruction_s,
+        "dominant": dominant,
+        "step_time_s": step_time,
+        "model_flops": mf,
+        "ideal_bytes_per_device": ideal_bytes_dev,
+        "ideal_step_s": t_ideal,
+        "useful_ratio": mf_per_device / cost.dot_flops if cost.dot_flops else 0.0,
+        "mfu_bound": (mf_per_device / hw.peak_flops) / step_time if step_time else 0.0,
+        "roofline_fraction": t_ideal / step_time if step_time else 0.0,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(args.out, f"{arch}_{shape}_{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {path}")
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_kind} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_kind)
+                    dom = res["roofline"]["dominant"]
+                    print(
+                        f"  ok: compile={res['compile_s']}s flops={res['hlo_flops']:.3e} "
+                        f"coll={res['collective_bytes']:.3e}B dominant={dom}",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures += 1
+                    res = {
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Build NamedSharding pytrees for every (arch x shape x mesh) cell.
+
+Policy (DESIGN.md §6):
+  * params: Megatron TP over "model" (heads/ffn/experts/vocab); archs with
+    ``fsdp_params`` additionally shard the embed dim over ("pod","data")
+    (ZeRO-3-style, all-gathered per layer inside the scan).
+  * train batch: sharded over ("pod","data").
+  * decode caches: kv-heads over "model" when divisible, else the cache
+    sequence is context-parallel over "model"; long_500k (batch=1) shards
+    the sequence over every mesh axis.
+  * optimizer state: exactly like params (partitioned optimizer for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.model import TrainState
+from repro.optim.adamw import AdamWState
+from repro.parallel.sharding import LOGICAL_RULES, logical_to_spec, use_mesh
+
+__all__ = [
+    "cell_rules",
+    "param_shardings",
+    "train_state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "decode_arg_shardings",
+    "sanitize_tree",
+]
+
+
+def _sanitize_spec(sharding: NamedSharding, aval, mesh: Mesh) -> NamedSharding:
+    """Drop mesh axes whose product doesn't divide the tensor dim.
+
+    E.g. kv_heads=8 over a 16-way "model" axis falls back to replication
+    (Megatron's GQA convention when kv < TP degree)."""
+    if not hasattr(aval, "shape"):
+        return sharding
+    spec = sharding.spec
+    new_axes = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(aval.shape):
+            new_axes.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            if aval.shape[i] % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        new_axes.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return NamedSharding(mesh, P(*new_axes))
+
+
+def sanitize_tree(shardings, abstract, mesh: Mesh):
+    """Apply _sanitize_spec leaf-wise (shardings tree must match abstract)."""
+    return jax.tree.map(
+        lambda s, a: _sanitize_spec(s, a, mesh) if isinstance(s, NamedSharding) else s,
+        shardings,
+        abstract,
+    )
+
+_AXES_LEAF = lambda x: isinstance(x, tuple) and all(
+    e is None or isinstance(e, str) for e in x
+)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return n
+
+
+def cell_rules(cfg: ModelConfig, shape: Optional[ShapeConfig], mesh: Mesh):
+    """Logical rule table adjusted for this cell."""
+    rules = dict(LOGICAL_RULES)
+    if shape is not None and shape.kind == "decode" and shape.global_batch < _dp_size(mesh):
+        # batch too small to shard (long_500k): context-parallel everything.
+        rules["batch"] = None
+        rules["cp_seq"] = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return tuple(rules.items())
+
+
+def _param_rules(cfg: ModelConfig, base_rules):
+    rules = dict(base_rules)
+    if cfg.fsdp_params:
+        rules["embed"] = ("pod", "data")
+    return tuple(rules.items())
+
+
+def _spec_tree(axes_tree, mesh: Mesh, rules):
+    with use_mesh(mesh, rules=rules):
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, logical_to_spec(axes)),
+            axes_tree,
+            is_leaf=_AXES_LEAF,
+        )
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, shape=None):
+    rules = _param_rules(cfg, cell_rules(cfg, shape, mesh))
+    return _spec_tree(tfm.model_axes(cfg), mesh, rules)
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, shape=None) -> TrainState:
+    p = param_shardings(cfg, mesh, shape)
+    repl = NamedSharding(mesh, P())
+    return TrainState(step=repl, params=p, opt_state=AdamWState(m=p, v=p))
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = NamedSharding(mesh, P(dp))
+    b2 = NamedSharding(mesh, P(dp, None))
+    b3 = NamedSharding(mesh, P(dp, None, None))
+    repl = NamedSharding(mesh, P())
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeddings" and not cfg.is_encoder_decoder:
+            out["embeddings"] = b3
+        else:
+            out["tokens"] = b2
+        if shape.kind == "train":
+            out["labels"] = b2
+        if cfg.is_encoder_decoder:
+            out["enc_embeds"] = b3
+        if cfg.mrope:
+            out["mrope_positions"] = repl
+    return out
+
+
+def _cache_axes_for_kind(cfg: ModelConfig, kind: str, shape: ShapeConfig, mesh: Mesh):
+    model_n = mesh.shape.get("model", 1)
+    kv_shardable = (
+        cfg.num_kv_heads % model_n == 0 and cfg.num_kv_heads >= model_n
+        and not cfg.use_mla
+    )
+    small_batch = shape.global_batch < _dp_size(mesh)
+    if kind == "ssm":
+        from repro.models.ssm import SSMCache
+
+        return SSMCache(
+            state=("layers", "batch", "ssm_heads", None, None),
+            conv=("layers", "batch", None, "conv_dim"),
+        )
+    if kind == "rglru":
+        from repro.models.rglru import RGLRUCache
+
+        return RGLRUCache(
+            state=("layers", "batch", "lru_width"),
+            conv=("layers", "batch", None, "lru_width"),
+        )
+    if kind == "local_attn":
+        return tfm.LocalKVCache(
+            k=("layers", "batch", None, None, None),
+            v=("layers", "batch", None, None, None),
+            pos=("layers", None),
+        )
+    if kind.startswith("mla"):
+        from repro.models.attention import MLACache
+
+        return MLACache(
+            c_kv=("layers", "batch", "cp_seq", None),
+            k_rope=("layers", "batch", "cp_seq", None),
+        )
+    from repro.models.attention import KVCache
+
+    if kv_shardable and not small_batch:
+        axes = ("layers", "batch", None, "kv_heads", None)
+    else:
+        axes = ("layers", "batch", "cp_seq", None, None)
+    return KVCache(k=axes, v=axes)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    rules = cell_rules(cfg, shape, mesh)
+    axes = [
+        _cache_axes_for_kind(cfg, kind, shape, mesh) for kind, _ in tfm.runs_of(cfg)
+    ]
+    return _spec_tree(axes, mesh, rules)
+
+
+def decode_arg_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Shardings for decode_step(params, tokens, caches, cur_index, rng[, cross_kv])."""
+    rules = cell_rules(cfg, shape, mesh)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    small_batch = shape.global_batch < _dp_size(mesh)
+    bspec = NamedSharding(mesh, P(None if small_batch else dp, None))
+    repl = NamedSharding(mesh, P())
+    args = {
+        "params": param_shardings(cfg, mesh, shape),
+        "tokens": bspec,
+        "caches": cache_shardings(cfg, shape, mesh),
+        "cur_index": repl,
+        "rng": repl,
+    }
+    if cfg.is_encoder_decoder:
+        cross = []
+        for kind, _ in tfm.runs_of(cfg):
+            if kind != "dec":
+                cross.append(None)
+                continue
+            from repro.models.attention import KVCache
+
+            ax = KVCache(
+                k=("layers", "batch", None, "heads", None),
+                v=("layers", "batch", None, "heads", None),
+            )
+            cross.append(_spec_tree(ax, mesh, rules))
+        args["cross_kv"] = cross
+    return args

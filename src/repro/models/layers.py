@@ -1,0 +1,74 @@
+"""Common layers: norms, gated MLP, embedding / unembedding."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "mlp_defs",
+    "mlp_apply",
+    "embed_defs",
+    "embed_apply",
+    "unembed_apply",
+]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_defs(d_model: int, d_ff: int, *, gated: bool = True) -> Dict[str, ParamDef]:
+    defs = {
+        "wi": ParamDef((d_model, d_ff), ("embed", "ffn")),
+        "wo": ParamDef((d_ff, d_model), ("ffn", "embed")),
+    }
+    if gated:
+        defs["wg"] = ParamDef((d_model, d_ff), ("embed", "ffn"))
+    return defs
+
+
+def mlp_apply(params, x, *, act: str = "silu"):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if "wg" in params:
+        h = _act(act)(jnp.einsum("...d,df->...f", x, params["wg"])) * h
+    else:
+        h = _act(act)(h)
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def embed_defs(vocab: int, d_model: int) -> Dict[str, ParamDef]:
+    return {"embedding": ParamDef((vocab, d_model), ("vocab", "embed"), 1.0)}
+
+
+def embed_apply(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Final-hidden x unembedding -> logits (the MIPS of paper Listing 1)."""
+    logits = jnp.einsum("...d,vd->...v", x, params["embedding"])
+    return shard(logits, "batch", None, "vocab")

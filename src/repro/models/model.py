@@ -1,0 +1,244 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``train_step`` / ``prefill_step`` / ``decode_step`` are the exact callables
+the launcher jits and the dry-run lowers.  ``input_specs`` produces
+ShapeDtypeStruct stand-ins (no allocation) for each shape kind; modality
+frontends (whisper audio conv, qwen2-vl vision patches) are stubs that
+surface as precomputed embedding inputs, per the brief.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.topk import approx_max_k
+from repro.models import transformer as tfm
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "loss_fn",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "input_specs",
+    "init_train_state",
+    "TrainState",
+]
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def _model_inputs(cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    use_embeds = cfg.input_mode == "embeddings" and not cfg.is_encoder_decoder
+    main = batch["embeddings"] if use_embeds else batch["tokens"]
+    kwargs = {}
+    if cfg.is_encoder_decoder:
+        kwargs["enc_embeds"] = batch["enc_embeds"]
+    if cfg.mrope and "mrope_positions" in batch:
+        kwargs["mrope_positions"] = batch["mrope_positions"]
+    return main, kwargs
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token cross entropy (labels provided explicitly)."""
+    main, kwargs = _model_inputs(cfg, batch)
+    logits = tfm.forward_train(params, cfg, main, **kwargs)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = logits - 1e9 * pad_mask
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    take = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(take * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, *, learning_rate: float = 3e-4,
+                    weight_decay: float = 0.1, grad_clip: float = 1.0,
+                    grad_dtype: Optional[str] = None, microbatches: int = 1):
+    """Build train_step(state, batch) -> (state, metrics).
+
+    ``grad_dtype="bfloat16"`` enables compressed gradient all-reduce: grads
+    are cast before the (GSPMD-inserted) data-parallel reduction and
+    re-expanded inside the optimizer.
+
+    ``microbatches > 1`` scans the global batch in chunks with f32 gradient
+    accumulation — peak activation residency drops by the microbatch factor
+    (the knob that makes the 236B train_4k cell fit v5e HBM; see
+    EXPERIMENTS.md §Perf cell B).
+    """
+
+    def _grads(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, cfg, batch)
+
+        bsz = batch["labels"].shape[0]
+        split_keys = {
+            k for k, v in batch.items()
+            if hasattr(v, "shape") and v.ndim >= 1 and v.shape[0] == bsz
+        }
+        static = {k: v for k, v in batch.items() if k not in split_keys}
+        mb = {
+            k: batch[k].reshape(
+                (microbatches, bsz // microbatches) + batch[k].shape[1:]
+            )
+            for k in split_keys
+        }
+
+        def body(acc, micro):
+            loss_sum, g_acc = acc
+            loss, g = jax.value_and_grad(loss_fn)(params, cfg, {**static, **micro})
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            return (loss_sum + loss, g_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = _grads(state.params, batch)
+        if grad_dtype == "bfloat16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        params, opt_state = adamw_update(
+            state.params, grads, state.opt_state,
+            step=state.step, learning_rate=learning_rate,
+            weight_decay=weight_decay,
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": state.step}
+        return TrainState(step=state.step + 1, params=params, opt_state=opt_state), metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.float32) -> TrainState:
+    params = tfm.init_model(key, cfg, dtype)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=adamw_init(params),
+    )
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        main, kwargs = _model_inputs(cfg, batch)
+        enc = kwargs.get("enc_embeds")
+        if cfg.is_encoder_decoder:
+            enc_out = tfm._encode(params, cfg, enc)
+            logits, caches = tfm.forward_prefill(params, cfg, main, enc_embeds=enc)
+            cross_kv = tfm.build_cross_kv(params, cfg, enc_out)
+            return logits, caches, cross_kv
+        logits, caches = tfm.forward_prefill(params, cfg, main)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, use_knn: bool = False,
+                     sample: str = "approx_topk", temperature: float = 0.8):
+    """decode_step(params, tokens, caches, cur_index, rng[, cross_kv]).
+
+    Sampling runs the paper's op over the vocabulary: approx_max_k picks the
+    top ``cfg.decode_sample_k`` logits (MIPS against the unembedding), then a
+    gumbel draw over those candidates.
+    """
+
+    def sample_tokens(logits, rng):
+        logits = logits[:, -1].astype(jnp.float32)  # (B, V)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = logits - 1e9 * pad_mask
+        if sample == "greedy":
+            return jnp.argmax(logits, -1)[:, None]
+        vals, idxs = approx_max_k(
+            logits, cfg.decode_sample_k, recall_target=cfg.knn_recall_target
+        )
+        g = jax.random.gumbel(rng, vals.shape)
+        choice = jnp.argmax(vals / temperature + g, axis=-1)
+        return jnp.take_along_axis(idxs, choice[:, None], axis=-1)
+
+    def decode_step(params, tokens, caches, cur_index, rng, cross_kv=None):
+        logits, caches = tfm.forward_decode(
+            params, cfg, tokens, caches, cur_index,
+            use_knn=use_knn, cross_kv=cross_kv,
+        )
+        next_tokens = sample_tokens(logits, rng)
+        return next_tokens.astype(jnp.int32), logits, caches
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Abstract input specs (ShapeDtypeStruct, no allocation)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for one (arch x shape) cell.
+
+    train/prefill: token (or stub-embedding) batch + labels.
+    decode: single token + fully-populated caches + cur_index + rng.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"labels": _sds((b, s), jnp.int32)}
+        if cfg.input_mode == "embeddings" and not cfg.is_encoder_decoder:
+            batch["embeddings"] = _sds((b, s, cfg.d_model), f)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.is_encoder_decoder:
+            batch["enc_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model), f)
+        if cfg.mrope:
+            batch["mrope_positions"] = _sds((3, s), jnp.int32)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: cache stand-ins via eval_shape over init_caches (b, s static)
+    caches = jax.eval_shape(lambda: tfm.init_caches(cfg, b, s))
+    spec = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "caches": caches,
+        "cur_index": _sds((), jnp.int32),
+        "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    if cfg.is_encoder_decoder:
+        from repro.models.attention import KVCache
+
+        hd = cfg.resolved_head_dim
+        spec["cross_kv"] = [
+            KVCache(
+                k=_sds((count, b, cfg.encoder_seq, cfg.num_heads, hd), f),
+                v=_sds((count, b, cfg.encoder_seq, cfg.num_heads, hd), f),
+            )
+            if kind == "dec"
+            else None
+            for kind, count in tfm.runs_of(cfg)
+        ]
+    return spec

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer: token-choice top-k routing, GShard-style grouped
+capacity dispatch (TPU-native: all einsums, EP-sharded over "model" mesh axis),
+plus deepseek-style shared experts.
+
+Router top-k is ``exact`` (lax.top_k) by default; ``approx`` switches to the
+paper's approx_max_k.  Note (DESIGN.md §Arch-applicability): for E <= a few
+hundred experts the Eq. 14 bin budget L ~ (K-1)/(1-r) is comparable to E, so
+approx routing buys nothing — it exists for completeness and for very large
+expert counts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import approx_max_k
+from repro.models.params import ParamDef
+from repro.parallel.sharding import shard
+
+__all__ = ["moe_defs", "moe_apply"]
+
+
+def moe_defs(
+    d_model: int,
+    moe_d_ff: int,
+    num_experts: int,
+    *,
+    num_shared_experts: int = 0,
+):
+    defs = {
+        "router": ParamDef((d_model, num_experts), ("embed", None)),
+        "wi": ParamDef((num_experts, d_model, moe_d_ff), ("experts", "embed", "moe_ffn")),
+        "wg": ParamDef((num_experts, d_model, moe_d_ff), ("experts", "embed", "moe_ffn")),
+        "wo": ParamDef((num_experts, moe_d_ff, d_model), ("experts", "moe_ffn", "embed")),
+    }
+    if num_shared_experts:
+        shared_ff = num_shared_experts * moe_d_ff
+        defs["shared_wi"] = ParamDef((d_model, shared_ff), ("embed", "ffn"))
+        defs["shared_wg"] = ParamDef((d_model, shared_ff), ("embed", "ffn"))
+        defs["shared_wo"] = ParamDef((shared_ff, d_model), ("ffn", "embed"))
+    return defs
+
+
+def _router_topk(logits, k, routing: str, recall_target: float):
+    if routing == "approx" and k > 1 and logits.shape[-1] >= 2 * k:
+        return approx_max_k(logits, k, recall_target=recall_target)
+    vals, idx = jax.lax.top_k(logits, k)
+    return vals, idx
+
+
+def moe_apply(
+    params: Dict,
+    x: jnp.ndarray,                  # (B, S, d)
+    *,
+    experts_per_token: int,
+    num_experts: int,
+    capacity_factor: float = 1.5,
+    group_size: int = 1024,
+    routing: str = "exact",          # "exact" | "approx"
+    recall_target: float = 0.95,
+    router_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-capacity MoE forward.
+
+    Tokens are reshaped to (G, g); each group independently dispatches to
+    (E, Cap) slots via one-hot einsums — the canonical TPU MoE lowering whose
+    all-to-all GSPMD generates when experts are sharded over "model".
+    """
+    b, s, d = x.shape
+    k = experts_per_token
+    tokens = b * s
+    g = min(group_size, tokens)
+    assert tokens % g == 0, f"tokens {tokens} not divisible by group {g}"
+    n_groups = tokens // g
+    cap = int(min(g, max(k, round(g * k / num_experts * capacity_factor))))
+    xt = x.reshape(n_groups, g, d)
+
+    logits = jnp.einsum("Gtd,de->Gte", xt, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = _router_topk(probs, k, routing, recall_target)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise
+    if router_scale:
+        top_p = top_p * router_scale
+
+    # Position of each (token, slot) within its expert queue.
+    sel = jax.nn.one_hot(top_e, num_experts, dtype=jnp.int32)     # (G, t, k, E)
+    pos_in_expert = jnp.cumsum(sel.reshape(n_groups, g * k, num_experts), axis=1)
+    pos_in_expert = pos_in_expert.reshape(n_groups, g, k, num_experts) * sel - 1
+    keep = (pos_in_expert >= 0) & (pos_in_expert < cap)            # (G, t, k, E)
+    slot = jnp.where(keep, pos_in_expert, 0)
+
+    # Build dispatch/combine (G, t, E, Cap) with a python loop over the k
+    # slots so the 5-D (G,t,k,E,Cap) tensor never materialises (k is 2..8).
+    dispatch = jnp.zeros((n_groups, g, num_experts, cap), x.dtype)
+    combine = jnp.zeros((n_groups, g, num_experts, cap), x.dtype)
+    for kk in range(k):
+        e_k = top_e[:, :, kk]                                       # (G, t)
+        slot_k = jnp.take_along_axis(slot[:, :, kk], e_k[..., None], -1)[..., 0]
+        keep_k = jnp.take_along_axis(keep[:, :, kk], e_k[..., None], -1)[..., 0]
+        e_oh = jax.nn.one_hot(e_k, num_experts, dtype=x.dtype)
+        e_oh = e_oh * keep_k[..., None].astype(x.dtype)             # drop overflow
+        c_oh = jax.nn.one_hot(slot_k, cap, dtype=x.dtype)
+        pair = jnp.einsum("GtE,Gtc->GtEc", e_oh, c_oh)
+        dispatch = dispatch + pair
+        combine = combine + pair * top_p[:, :, kk, None, None].astype(x.dtype)
+    dispatch = shard(dispatch, "batch", None, "experts", None)
+    combine = shard(combine, "batch", None, "experts", None)
+
+    # Gather expert inputs, run the expert FFNs, scatter back.
+    expert_in = jnp.einsum("GtEc,Gtd->GEcd", dispatch, xt)
+    expert_in = shard(expert_in, "batch", "experts", None, None)
+    h = jnp.einsum("GEcd,Edf->GEcf", expert_in, params["wi"])
+    gate = jnp.einsum("GEcd,Edf->GEcf", expert_in, params["wg"])
+    h = jax.nn.silu(gate) * h
+    h = shard(h, "batch", "experts", None, "moe_ffn")
+    expert_out = jnp.einsum("GEcf,Efd->GEcd", h, params["wo"])
+    y = jnp.einsum("GtEc,GEcd->Gtd", combine, expert_out)
+
+    if "shared_wi" in params:
+        sh = jax.nn.silu(jnp.einsum("Gtd,df->Gtf", xt, params["shared_wg"]))
+        sh = sh * jnp.einsum("Gtd,df->Gtf", xt, params["shared_wi"])
+        y = y + jnp.einsum("Gtf,fd->Gtd", sh, params["shared_wo"])
+    return y.reshape(b, s, d)

@@ -1,0 +1,71 @@
+"""Parameter definition helpers: one source of truth for shape + logical axes.
+
+A module describes its parameters as ``{name: ParamDef(shape, axes, scale)}``;
+``init_params`` materialises them, ``param_axes`` returns the matching
+logical-axes tree (used to build NamedShardings for pjit), and both stay in
+sync by construction.  Stacked (scanned) layers prepend a "layers" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamDef", "init_params", "param_axes", "stack_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    # None -> fan-in scaled normal; float -> explicit stddev; "zeros"/"ones".
+    init: object = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self.shape} vs {self.axes}")
+
+
+def _stddev(shape: Tuple[int, ...]) -> float:
+    fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def init_params(key: jax.Array, defs, dtype=jnp.float32):
+    """Materialise a (possibly nested) tree of ParamDefs."""
+    flat, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, d in zip(keys, flat):
+        if d.init == "zeros":
+            leaves.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            leaves.append(jnp.ones(d.shape, dtype))
+        elif isinstance(d.init, float):
+            leaves.append(d.init * jax.random.normal(k, d.shape, dtype))
+        else:
+            leaves.append(_stddev(d.shape) * jax.random.normal(k, d.shape, dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def param_axes(defs):
+    """Logical-axes tree with the same structure as ``init_params`` output."""
+    return jax.tree.map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def stack_axes(axes_tree):
+    """Prepend the scanned-layers axis to every leaf of an axes tree."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x
+        ),
+    )

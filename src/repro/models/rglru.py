@@ -1,0 +1,162 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = (linear -> short conv -> RG-LRU) ⊙ (linear -> GeLU), then out-proj.
+The RG-LRU diagonal recurrence h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)
+is evaluated with an associative scan in training (log-depth, O(S) work — the
+reason long_500k is native for this family) and one step in decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import shard
+
+__all__ = ["rglru_defs", "rglru_train", "rglru_decode", "RGLRUCache", "rglru_init_cache"]
+
+CONV_W = 4
+_C = 8.0  # the paper's fixed recurrence temperature
+
+
+class RGLRUCache(NamedTuple):
+    state: jnp.ndarray   # (B, lru_width) recurrent state
+    conv: jnp.ndarray    # (B, CONV_W - 1, lru_width)
+
+
+def rglru_defs(d_model: int, lru_width: int, *, gate_blocks: int = 0):
+    """RG-LRU parameters.
+
+    ``gate_blocks > 0`` uses block-diagonal input/recurrence gates (the
+    Griffin/RecurrentGemma design): W is (blocks, lru/blocks, lru/blocks),
+    sharded on the block dim — the gate matmul then never contracts across
+    the TP shard, removing one f32 (B,S,lru) all-reduce per gate per layer.
+    ``gate_blocks == 0`` keeps dense gates (this repo's original baseline;
+    see EXPERIMENTS.md §Perf cell A).
+    """
+    defs = {
+        "wx": ParamDef((d_model, lru_width), ("embed", "lru_width")),
+        "wy": ParamDef((d_model, lru_width), ("embed", "lru_width")),
+        "conv_w": ParamDef((CONV_W, lru_width), (None, "lru_width")),
+        "conv_b": ParamDef((lru_width,), ("lru_width",), "zeros"),
+        "b_input_gate": ParamDef((lru_width,), ("lru_width",), "zeros"),
+        "b_rec_gate": ParamDef((lru_width,), ("lru_width",), "zeros"),
+        # Lambda init so a = sigmoid(L)^(c*r) starts near 0.9..0.999.
+        "lam": ParamDef((lru_width,), ("lru_width",), 0.8),
+        "wo": ParamDef((lru_width, d_model), ("lru_width", "embed")),
+    }
+    if gate_blocks:
+        blk = lru_width // gate_blocks
+        defs["w_input_gate"] = ParamDef(
+            (gate_blocks, blk, blk), ("lru_width", None, None)
+        )
+        defs["w_rec_gate"] = ParamDef(
+            (gate_blocks, blk, blk), ("lru_width", None, None)
+        )
+    else:
+        defs["w_input_gate"] = ParamDef((lru_width, lru_width), ("lru_width", None))
+        defs["w_rec_gate"] = ParamDef((lru_width, lru_width), ("lru_width", None))
+    return defs
+
+
+def _gate_matmul(x, w):
+    if w.ndim == 3:  # block-diagonal (blocks, blk, blk)
+        blocks, blk, _ = w.shape
+        xb = x.reshape(x.shape[:-1] + (blocks, blk))
+        return jnp.einsum("...hk,hkl->...hl", xb, w).reshape(x.shape)
+    return jnp.einsum("...k,kl->...l", x, w)
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(
+        _gate_matmul(x, params["w_rec_gate"]) + params["b_rec_gate"]
+    )
+    i = jax.nn.sigmoid(
+        _gate_matmul(x, params["w_input_gate"]) + params["b_input_gate"]
+    )
+    log_a = -_C * r * jax.nn.softplus(params["lam"])   # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    gated_x = i * x
+    # sqrt(1 - a^2) input normaliser.
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a.astype(jnp.float32), (beta * gated_x).astype(jnp.float32)
+
+
+def _conv(params, x, s):
+    x_pad = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    return sum(
+        x_pad[:, i : i + s] * params["conv_w"][i] for i in range(CONV_W)
+    ) + params["conv_b"]
+
+
+def rglru_train(params: Dict, u: jnp.ndarray, *, return_cache: bool = False,
+                scan_impl: str = "associative", scan_chunk: int = 256):
+    """RG-LRU over a full sequence.
+
+    scan_impl:
+      * "associative" — log-depth jax.lax.associative_scan: minimal latency
+        but materialises O(log S) full (B, S, lru) f32 intermediates.
+      * "linear" — chunked sequential scan (what Griffin's own Pallas kernel
+        does): intra-chunk associative scan + sequential chunk recurrence,
+        so the big intermediates are O(B, chunk, lru) and HBM traffic drops
+        by ~S/chunk per stage (EXPERIMENTS.md §Perf cell A, iteration 2).
+    """
+    b, s, d = u.shape
+    x_raw = jnp.einsum("bsd,dk->bsk", u, params["wx"])
+    x_raw = shard(x_raw, "batch", None, "lru_width")
+    x = _conv(params, x_raw, s)
+    a, bx = _gates(params, x)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    if scan_impl == "linear" and s > scan_chunk and s % scan_chunk == 0:
+        nc = s // scan_chunk
+        lru = a.shape[-1]
+        ar = a.reshape(b, nc, scan_chunk, lru).transpose(1, 0, 2, 3)
+        br = bx.reshape(b, nc, scan_chunk, lru).transpose(1, 0, 2, 3)
+
+        def chunk_body(h0, inp):
+            a_c, b_c = inp
+            # intra-chunk associative scan (small: (B, chunk, lru))
+            pa, pb = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+            h_c = pb + pa * h0[:, None, :]
+            return h_c[:, -1], h_c
+
+        h0 = jnp.zeros((b, lru), jnp.float32)
+        _, hs = jax.lax.scan(chunk_body, h0, (ar, br))
+        h = hs.transpose(1, 0, 2, 3).reshape(b, s, lru)
+    else:
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", u, params["wy"]))
+    out = jnp.einsum("bsk,kd->bsd", h.astype(u.dtype) * gate, params["wo"])
+    if return_cache:
+        cache = RGLRUCache(state=h[:, -1], conv=x_raw[:, -(CONV_W - 1):])
+        return out, cache
+    return out
+
+
+def rglru_init_cache(batch: int, lru_width: int, dtype=jnp.float32) -> RGLRUCache:
+    return RGLRUCache(
+        state=jnp.zeros((batch, lru_width), jnp.float32),
+        conv=jnp.zeros((batch, CONV_W - 1, lru_width), dtype),
+    )
+
+
+def rglru_decode(
+    params: Dict, u: jnp.ndarray, cache: RGLRUCache
+) -> Tuple[jnp.ndarray, RGLRUCache]:
+    b, _, d = u.shape
+    x = jnp.einsum("bsd,dk->bsk", u, params["wx"])[:, 0]
+    window = jnp.concatenate([cache.conv, x[:, None]], axis=1)
+    x = jnp.einsum("bwk,wk->bk", window, params["conv_w"]) + params["conv_b"]
+    a, bx = _gates(params, x)
+    h = a * cache.state + bx
+    gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", u, params["wy"])[:, 0])
+    y = jnp.einsum("bk,kd->bd", h.astype(u.dtype) * gate, params["wo"])[:, None]
+    return y, RGLRUCache(state=h, conv=window[:, 1:])

@@ -1,0 +1,71 @@
+"""Rotary position embeddings: standard RoPE, partial-rotary, and M-RoPE.
+
+M-RoPE (qwen2-vl): head_dim channels are split into (temporal, height,
+width) sections, each rotated by its own position stream.  For text tokens
+all three streams coincide, recovering standard RoPE.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope", "default_mrope_positions"]
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for a (possibly partial) rotary dim."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jnp.ndarray,                # (..., seq, heads, head_dim)
+    positions: jnp.ndarray,        # (..., seq)
+    *,
+    theta: float = 10000.0,
+    rotary_dim: Optional[int] = None,
+) -> jnp.ndarray:
+    head_dim = x.shape[-1]
+    rd = rotary_dim or head_dim
+    freqs = rope_freqs(rd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, rd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    rot, rest = x[..., :rd], x[..., rd:]
+    rot = _rotate(rot.astype(jnp.float32), cos, sin).astype(x.dtype)
+    return jnp.concatenate([rot, rest], axis=-1) if rd < head_dim else rot
+
+
+def default_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """Text-only M-RoPE positions: all three streams equal (..., seq) -> (3, ..., seq)."""
+    return jnp.stack([positions, positions, positions], axis=0)
+
+
+def apply_mrope(
+    x: jnp.ndarray,                # (..., seq, heads, head_dim)
+    positions3: jnp.ndarray,       # (3, ..., seq): (t, h, w) streams
+    *,
+    theta: float = 10000.0,
+    sections: Tuple[int, int, int] = (2, 1, 1),  # fractions of rd/2 (t,h,w) in 4ths
+) -> jnp.ndarray:
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    s_t = half * sections[0] // 4
+    s_h = half * sections[1] // 4
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    # Select which position stream drives each frequency channel.
+    ch = jnp.arange(half)
+    stream = jnp.where(ch < s_t, 0, jnp.where(ch < s_t + s_h, 1, 2))
+    pos = jnp.take(positions3, stream, axis=0)  # (half, ..., seq) -> move axis
+    pos = jnp.moveaxis(pos, 0, -1)              # (..., seq, half)
+    angles = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training uses the chunked SSD algorithm: intra-chunk attention-like einsums
+plus an inter-chunk recurrence over the (H, P, N) state — O(S) in sequence
+length.  Decode is a single recurrent state update, O(1) per token, which is
+why long_500k runs natively for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import shard
+
+__all__ = ["ssm_defs", "ssm_train", "ssm_decode", "SSMCache", "ssm_init_cache"]
+
+CONV_W = 4  # short causal conv window
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N) recurrent SSM state
+    conv: jnp.ndarray        # (B, CONV_W - 1, conv_dim) conv tail
+
+
+def ssm_dims(d_model: int, *, expand: int = 2, head_dim: int = 64, n_state: int = 128):
+    d_inner = expand * d_model
+    num_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_state  # x, B, C go through the conv
+    return d_inner, num_heads, conv_dim
+
+
+def ssm_defs(d_model: int, *, expand: int = 2, head_dim: int = 64, n_state: int = 128):
+    d_inner, num_heads, conv_dim = ssm_dims(
+        d_model, expand=expand, head_dim=head_dim, n_state=n_state
+    )
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "in_proj": ParamDef(
+            (d_model, 2 * d_inner + 2 * n_state + num_heads), ("embed", "conv_dim")
+        ),
+        "conv_w": ParamDef((CONV_W, conv_dim), (None, "conv_dim")),
+        "conv_b": ParamDef((conv_dim,), ("conv_dim",), "zeros"),
+        "a_log": ParamDef((num_heads,), ("ssm_heads",), 0.5),
+        "d_skip": ParamDef((num_heads,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamDef((num_heads,), ("ssm_heads",), "zeros"),
+        "norm": ParamDef((d_inner,), ("conv_dim",), "ones"),
+        "out_proj": ParamDef((d_inner, d_model), ("conv_dim", "embed")),
+    }
+
+
+def _split_proj(proj, d_inner, n_state, num_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * n_state]
+    dt = proj[..., 2 * d_inner + 2 * n_state :]
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def ssm_train(
+    params: Dict,
+    u: jnp.ndarray,          # (B, S, d_model)
+    *,
+    expand: int = 2,
+    head_dim: int = 64,
+    n_state: int = 128,
+    chunk: int = 256,
+    return_cache: bool = False,
+):
+    b, s, d_model = u.shape
+    d_inner, nh, conv_dim = ssm_dims(
+        d_model, expand=expand, head_dim=head_dim, n_state=n_state
+    )
+    p = head_dim
+    proj = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, nh)
+    # Short causal conv over (x, B, C).
+    xbc_pad = jnp.pad(xbc, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + s] * params["conv_w"][i] for i in range(CONV_W)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    x = conv[..., :d_inner].reshape(b, s, nh, p)
+    x = shard(x, "batch", None, "ssm_heads", None)
+    B = conv[..., d_inner : d_inner + n_state]            # (B, S, N), 1 group
+    C = conv[..., d_inner + n_state :]
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B, S, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))     # (H,) negative
+    da = dt.astype(jnp.float32) * a                       # (B, S, H) log-decay
+
+    nc = s // chunk
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    xr = x.reshape(b, nc, chunk, nh, p)
+    Br = B.reshape(b, nc, chunk, n_state)
+    Cr = C.reshape(b, nc, chunk, n_state)
+    dar = da.reshape(b, nc, chunk, nh)
+    dtr = dt.reshape(b, nc, chunk, nh)
+
+    # Intra-chunk cumulative decays.
+    cum = jnp.cumsum(dar, axis=2)                          # (B, nc, c, H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B, nc, c, c, H) log decay i<-j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # Diagonal (intra-chunk) term: Y_intra = (C Bᵀ ⊙ decay ⊙ dt) X
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)             # (B, nc, c, c)
+    w = cb[..., None] * decay * dtr[:, :, None, :, :]      # (B, nc, c, c, H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xr)
+
+    # Chunk-final states: S_n = sum_j exp(cum_end - cum_j) dt_j B_j x_jᵀ
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)           # (B, nc, c, H)
+    contrib = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn",
+        (end_decay * dtr).astype(x.dtype), Br, xr,
+    )                                                      # (B, nc, H, P, N)
+
+    # Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(jnp.sum(dar, axis=2))            # (B, nc, H)
+
+    def scan_body(state, inp):
+        contrib_n, decay_n = inp
+        new = state * decay_n[..., None, None] + contrib_n
+        return new, state                                   # emit state *before* chunk
+
+    init = jnp.zeros((b, nh, p, n_state), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (contrib.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B, nc, H, P, N)
+
+    # Inter-chunk term: Y_inter[i] = C_i · (decay_to_i * prev_state)
+    in_decay = jnp.exp(cum)                                 # decay from chunk start
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        Cr, prev_states.astype(x.dtype), in_decay.astype(x.dtype),
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, nh, p)
+    y = y + x * params["d_skip"][None, None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(b, s, d_inner), z, params["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    if return_cache:
+        cache = SSMCache(state=final_state, conv=xbc[:, -(CONV_W - 1):])
+        return out, cache
+    return out
+
+
+def ssm_init_cache(batch: int, d_model: int, *, expand=2, head_dim=64, n_state=128, dtype=jnp.float32):
+    d_inner, nh, conv_dim = ssm_dims(d_model, expand=expand, head_dim=head_dim, n_state=n_state)
+    return SSMCache(
+        state=jnp.zeros((batch, nh, head_dim, n_state), jnp.float32),
+        conv=jnp.zeros((batch, CONV_W - 1, conv_dim), dtype),
+    )
+
+
+def ssm_decode(
+    params: Dict,
+    u: jnp.ndarray,          # (B, 1, d_model)
+    cache: SSMCache,
+    *,
+    expand: int = 2,
+    head_dim: int = 64,
+    n_state: int = 128,
+) -> Tuple[jnp.ndarray, SSMCache]:
+    b, _, d_model = u.shape
+    d_inner, nh, conv_dim = ssm_dims(
+        d_model, expand=expand, head_dim=head_dim, n_state=n_state
+    )
+    p = head_dim
+    proj = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])[:, 0]
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, nh)
+    window = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # (B, W, conv)
+    conv = jnp.einsum("bwk,wk->bk", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    x = conv[:, :d_inner].reshape(b, nh, p)
+    B = conv[:, d_inner : d_inner + n_state]
+    C = conv[:, d_inner + n_state :]
+    dt = jax.nn.softplus(dt + params["dt_bias"])            # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)             # (B, H)
+    new_state = (
+        cache.state * decay[..., None, None]
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, B, x).astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C, new_state.astype(x.dtype))
+    y = y + x * params["d_skip"][None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(b, d_inner), z, params["norm"])
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None]
+    return out, SSMCache(state=new_state, conv=window[:, 1:])

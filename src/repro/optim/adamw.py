@@ -1,0 +1,82 @@
+"""AdamW optimizer + LR schedules, pure pytree implementation.
+
+Optimizer state shards exactly like the parameters (the NamedShardings built
+from model_axes apply to m/v too), so on FSDP-sharded archs this is
+ZeRO-style partitioned optimizer state for free.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule", "linear_warmup"]
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params), v=jax.tree.map(zeros, params))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    step,
+    learning_rate=3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """One AdamW step.  ``learning_rate`` may be a float or callable(step)."""
+    lr = learning_rate(step) if callable(learning_rate) else learning_rate
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        p2 = p.astype(jnp.float32) - lr * (update + weight_decay * p.astype(jnp.float32))
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(m=new_m, v=new_v)
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def sched(step):
+        return base_lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+
+    return sched
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def sched(step):
+        warm = jnp.minimum(1.0, (step + 1) / warmup_steps)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return base_lr * warm * cos
+
+    return sched

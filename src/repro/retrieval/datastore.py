@@ -1,0 +1,76 @@
+"""Distributed kNN-LM datastore: the paper's §7 multi-chip extension as a
+retrieval service for language models.
+
+The datastore holds (key, value-token) pairs sharded over the mesh's model
+axis.  A lookup is the paper's distributed MIPS: local PartialReduce on each
+shard (recall accounted against the *global* N via
+reduction_input_size_override), all-gather of the L bin winners, global
+ExactRescoring.  ``knn_lm_logits`` turns neighbour distances into the
+classic kNN-LM interpolation distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import make_sharded_searcher
+
+__all__ = ["KNNDatastore", "knn_lm_logits"]
+
+
+class KNNDatastore:
+    def __init__(
+        self,
+        keys: jnp.ndarray,           # (N, D) retrieval keys
+        value_tokens: jnp.ndarray,   # (N,) token id each key predicts
+        mesh: Optional[Mesh] = None,
+        *,
+        k: int = 32,
+        recall_target: float = 0.95,
+        db_axis: str = "model",
+        batch_axis: Optional[str] = "data",
+    ):
+        self.mesh = mesh
+        self.k = k
+        self.value_tokens = value_tokens
+        if mesh is not None:
+            self.keys = jax.device_put(
+                keys, NamedSharding(mesh, P(db_axis, None))
+            )
+            self._search = make_sharded_searcher(
+                mesh, k=k, recall_target=recall_target,
+                db_axis=db_axis, batch_axis=batch_axis, metric="mips",
+            )
+        else:
+            self.keys = keys
+            from repro.core.knn import mips
+
+            self._search = lambda q, db: mips(
+                q, db, k, recall_target=recall_target
+            )
+
+    def lookup(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (scores (M, k), neighbour value tokens (M, k))."""
+        vals, idxs = self._search(queries, self.keys)
+        return vals, jnp.take(self.value_tokens, idxs, axis=0)
+
+
+def knn_lm_logits(
+    lm_logits: jnp.ndarray,        # (M, V)
+    knn_scores: jnp.ndarray,       # (M, k) inner-product scores
+    knn_tokens: jnp.ndarray,       # (M, k)
+    *,
+    lam: float = 0.25,
+    temperature: float = 1.0,
+) -> jnp.ndarray:
+    """Interpolate p_LM with the neighbour distribution (Khandelwal et al.)."""
+    vocab = lm_logits.shape[-1]
+    w = jax.nn.softmax(knn_scores / temperature, axis=-1)
+    p_knn = jax.vmap(
+        lambda wk, tk: jnp.zeros((vocab,)).at[tk].add(wk)
+    )(w, knn_tokens)
+    p_lm = jax.nn.softmax(lm_logits, axis=-1)
+    return jnp.log((1 - lam) * p_lm + lam * p_knn + 1e-20)

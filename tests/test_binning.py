@@ -1,0 +1,91 @@
+"""Recall analytics (paper Eq. 13/14) — unit + hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binning import (
+    bins_for_recall,
+    bins_for_recall_approx,
+    expected_recall,
+    plan_bins,
+)
+
+
+def test_expected_recall_k1_is_one():
+    assert expected_recall(1, 1) == 1.0
+    assert expected_recall(100, 1) == 1.0
+
+
+def test_expected_recall_matches_formula():
+    # Eq. 13: ((L-1)/L)^(K-1)
+    assert expected_recall(100, 10) == pytest.approx((99 / 100) ** 9)
+    assert expected_recall(2, 2) == pytest.approx(0.5)
+
+
+def test_bins_for_recall_paper_example():
+    # K=10, r=0.95: L >= 1/(1-0.95^(1/9)) ~= 176; approx (K-1)/(1-r) = 180.
+    l = bins_for_recall(10, 0.95)
+    assert 170 <= l <= 180
+    assert abs(bins_for_recall_approx(10, 0.95) - 180) < 1e-9
+
+
+@given(k=st.integers(2, 128), r=st.floats(0.5, 0.999))
+@settings(max_examples=200, deadline=None)
+def test_bins_meet_recall_target(k, r):
+    """The chosen L always achieves E[recall] >= r (the paper's guarantee)."""
+    l = bins_for_recall(k, r)
+    assert expected_recall(l, k) >= r
+    # And L-1 would not (minimality), modulo the k>=L floor.
+    if l > 1:
+        assert expected_recall(l - 1, k) < r or l == k
+
+
+@given(k=st.integers(2, 64), r=st.floats(0.8, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_approximation_is_upper_bound_region(k, r):
+    """(K-1)/(1-r) approximates the exact bound within ~15% (Appendix A.4)."""
+    exact = bins_for_recall(k, r)
+    approx = bins_for_recall_approx(k, r)
+    # ceil() on the exact bound can cost one extra bin at small k.
+    assert approx >= 0.85 * exact - 1
+
+
+@given(
+    n=st.integers(100, 2_000_000),
+    k=st.integers(1, 64),
+    r=st.floats(0.6, 0.99),
+)
+@settings(max_examples=200, deadline=None)
+def test_plan_bins_invariants(n, k, r):
+    if k > n:
+        return
+    plan = plan_bins(n, k, r)
+    assert plan.num_bins * plan.bin_size == plan.padded_n
+    assert plan.padded_n >= n
+    assert plan.num_bins >= min(k, n)
+    assert plan.bin_size == 1 << plan.log2_bin_size
+    # bins cover the input without >2x overshoot
+    assert plan.padded_n < 2 * n + plan.bin_size
+
+
+def test_plan_bins_sharded_accounting():
+    """reduction_input_size_override spreads the global bin budget (§7)."""
+    full = plan_bins(1_000_000, 10, 0.95)
+    shard = plan_bins(1_000_000 // 8, 10, 0.95, reduction_input_size_override=1_000_000)
+    # Each shard holds ~1/8th of the bins at the same bin size scale.
+    assert shard.num_bins * 8 >= full.num_bins * 0.5
+    assert shard.expected_recall >= 0.93
+
+
+def test_plan_bins_degenerate_small_n():
+    plan = plan_bins(16, 10, 0.95)
+    assert plan.bin_size == 1  # falls back to exact layout
+    assert plan.num_bins == 16
+
+
+def test_plan_bins_rejects_bad_input():
+    with pytest.raises(ValueError):
+        plan_bins(10, 11, 0.95)
+    with pytest.raises(ValueError):
+        bins_for_recall(10, 1.5)

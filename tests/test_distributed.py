@@ -1,0 +1,64 @@
+"""Distributed KNN (paper §7) on 8 fake devices.
+
+Runs in a subprocess so the main pytest process keeps a single CPU device
+(the brief forbids setting xla_force_host_platform_device_count globally).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.distributed import sharded_mips, sharded_l2nns
+from repro.retrieval.datastore import KNNDatastore, knn_lm_logits
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+key = jax.random.PRNGKey(0)
+q = jax.random.normal(key, (16, 64))
+db = jax.random.normal(jax.random.PRNGKey(1), (4096, 64))
+qs = jax.device_put(q, NamedSharding(mesh, P("data", None)))
+dbs = jax.device_put(db, NamedSharding(mesh, P("model", None)))
+
+def recall(a, e):
+    return np.mean([len(set(x.tolist()) & set(y.tolist()))/len(y)
+                    for x, y in zip(np.asarray(a), np.asarray(e))])
+
+_, i = sharded_mips(qs, dbs, 10, mesh, batch_axis="data", recall_target=0.95)
+_, ei = jax.lax.top_k(q @ db.T, 10)
+r = recall(i, ei)
+assert r >= 0.9, f"mips recall {r}"
+
+_, i2 = sharded_l2nns(qs, dbs, 10, mesh, batch_axis="data", recall_target=0.95)
+d = np.linalg.norm(np.asarray(q)[:,None]-np.asarray(db)[None], axis=-1)
+ei2 = np.argsort(d, -1)[:, :10]
+r2 = recall(i2, ei2)
+assert r2 >= 0.9, f"l2 recall {r2}"
+
+# kNN-LM datastore over the mesh
+tokens = jax.random.randint(jax.random.PRNGKey(2), (4096,), 0, 1000)
+ds = KNNDatastore(db, tokens, mesh, k=8)
+scores, toks = ds.lookup(qs)
+assert scores.shape == (16, 8) and toks.shape == (16, 8)
+lm_logits = jax.random.normal(jax.random.PRNGKey(3), (16, 1000))
+mixed = knn_lm_logits(lm_logits, scores, toks)
+assert mixed.shape == (16, 1000)
+assert bool(jnp.all(jnp.isfinite(mixed)))
+print("DISTRIBUTED_OK")
+"""
+
+
+def test_distributed_knn_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,79 @@
+"""KNN search ops: MIPS / L2 / cosine, the Eq. 19 halved-norm trick."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.knn import (
+    cosine_nns,
+    exact_l2nns,
+    exact_mips,
+    half_norms,
+    l2nns,
+    mips,
+)
+
+
+def _recall(approx_idx, exact_idx):
+    r = []
+    for a, e in zip(np.asarray(approx_idx), np.asarray(exact_idx)):
+        r.append(len(set(a.tolist()) & set(e.tolist())) / len(e))
+    return float(np.mean(r))
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64, 64))
+    db = jax.random.normal(jax.random.PRNGKey(1), (8192, 64))
+    return q, db
+
+
+def test_mips_recall(data):
+    q, db = data
+    _, idx = mips(q, db, 10, recall_target=0.95)
+    _, exact = exact_mips(q, db, 10)
+    assert _recall(idx, exact) >= 0.9
+
+
+def test_l2_recall(data):
+    q, db = data
+    _, idx = l2nns(q, db, 10, recall_target=0.95)
+    d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(db)[None], axis=-1)
+    exact = np.argsort(d, axis=-1)[:, :10]
+    assert _recall(idx, exact) >= 0.9
+
+
+def test_l2_halfnorm_equivalence(data):
+    """Eq. 15-19: argmin ||q-x|| == argmin ||x||^2/2 - <q,x>."""
+    q, db = data
+    d_true = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(db)[None], axis=-1)
+    relaxed = np.asarray(half_norms(db))[None, :] - np.asarray(q) @ np.asarray(db).T
+    np.testing.assert_array_equal(
+        np.argsort(d_true, axis=-1)[:, :20], np.argsort(relaxed, axis=-1)[:, :20]
+    )
+
+
+def test_l2_exact_path_matches_numpy(data):
+    q, db = data
+    _, idx = exact_l2nns(q, db, 10)
+    d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(db)[None], axis=-1)
+    exact = np.argsort(d, axis=-1)[:, :10]
+    assert _recall(idx, exact) == 1.0
+
+
+def test_cosine_equals_mips_on_normalized(data):
+    q, db = data
+    dbn = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+    _, i_cos = cosine_nns(q, dbn, 10, recall_target=0.99)
+    scores = np.asarray(q / jnp.linalg.norm(q, axis=-1, keepdims=True)) @ np.asarray(dbn).T
+    exact = np.argsort(-scores, axis=-1)[:, :10]
+    assert _recall(i_cos, exact) >= 0.95
+
+
+def test_precomputed_half_norms_path(data):
+    q, db = data
+    hn = half_norms(db)
+    v1, i1 = l2nns(q, db, 5, db_half_norm=hn, recall_target=0.99)
+    v2, i2 = l2nns(q, db, 5, recall_target=0.99)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode parity.
+
+One forward/train step per assigned arch asserting output shapes + no NaNs,
+plus decode-replay-vs-full-forward parity for representative families and
+correctness of the paper-integrated KNN attention path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+from repro.models import transformer as tfm
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=jax.random.PRNGKey(0)):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.input_mode == "embeddings" and not cfg.is_encoder_decoder:
+        batch["embeddings"] = jax.random.normal(key, (B, S, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.mrope:
+        pos = jnp.arange(S)
+        batch["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke_forward_and_loss(arch):
+    cfg = get_config(arch + "-smoke")
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    main = batch.get("tokens", batch.get("embeddings"))
+    kwargs = {}
+    if cfg.is_encoder_decoder:
+        kwargs["enc_embeds"] = batch["enc_embeds"]
+    if cfg.mrope:
+        kwargs["mrope_positions"] = batch["mrope_positions"]
+    logits = tfm.forward_train(params, cfg, main, **kwargs)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss = M.loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    state = M.init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(M.make_train_step(cfg, learning_rate=1e-3))
+    state2, metrics = step(state, _batch(cfg))
+    assert int(state2.step) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state.params, state2.params,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["internlm2-1.8b", "deepseek-v2-236b", "mamba2-2.7b", "recurrentgemma-9b",
+     "whisper-medium"],
+)
+def test_decode_replay_matches_full_forward(arch):
+    """Replaying tokens through decode reproduces full-forward logits."""
+    cfg = get_config(arch + "-smoke")
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    kwargs = {}
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        enc = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.encoder_seq, cfg.d_model))
+        kwargs["enc_embeds"] = enc
+        enc_out = tfm._encode(params, cfg, enc)
+        cross_kv = tfm.build_cross_kv(params, cfg, enc_out)
+
+    caches = tfm.init_caches(cfg, B, S + 4)
+    dec = jax.jit(M.make_decode_step(cfg, sample="greedy"), static_argnames=())
+    lt = None
+    for t in range(S):
+        _, lt, caches = dec(
+            params, tokens[:, t : t + 1], caches, jnp.int32(t),
+            jax.random.PRNGKey(t), cross_kv,
+        )
+    full = tfm.forward_train(params, cfg, tokens, **kwargs)
+    diff = float(
+        jnp.max(jnp.abs(full[:, -1].astype(jnp.float32) - lt[:, -1].astype(jnp.float32)))
+    )
+    assert diff < 0.05, f"decode/train divergence {diff}"
+
+
+def test_knn_attention_approximates_exact():
+    """KNN top-k decode attention ~= exact attention when k covers the mass."""
+    from repro.models.attention import knn_decode_attention, _NEG_INF
+
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 1024, 4, 32
+    q = jax.random.normal(key, (b, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    valid = jnp.ones((s,), bool)
+    out_knn = knn_decode_attention(q, k, v, valid, k=256, recall_target=0.99)
+    scores = jnp.einsum("bhd,bkhd->bhk", q, k) * hd**-0.5
+    probs = jax.nn.softmax(scores, -1)
+    out_exact = jnp.einsum("bhk,bkhd->bhd", probs, v)
+    # top-256 of 1024 keys carries almost all softmax mass here
+    err = float(jnp.max(jnp.abs(out_knn - out_exact)))
+    assert err < 0.15, err
+
+
+def test_moe_routing_is_topk_and_normalized():
+    from repro.models.moe import moe_apply, moe_defs
+    from repro.models.params import init_params
+
+    cfg_d, e, k = 32, 8, 2
+    params = init_params(jax.random.PRNGKey(0), moe_defs(cfg_d, 16, e))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg_d))
+    y = moe_apply(params, x, experts_per_token=k, num_experts=e,
+                  group_size=32, capacity_factor=4.0)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # approx routing path also runs
+    y2 = moe_apply(params, x, experts_per_token=k, num_experts=e,
+                   group_size=32, capacity_factor=4.0, routing="approx")
+    assert bool(jnp.all(jnp.isfinite(y2)))
+
+
+def test_vocab_padding_never_sampled():
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    # force a padded vocab
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, vocab_size=250)  # padded to 256
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    caches = tfm.init_caches(cfg, 4, 16)
+    dec = jax.jit(M.make_decode_step(cfg))
+    toks = jnp.zeros((4, 1), jnp.int32)
+    for t in range(8):
+        toks, _, caches = dec(params, toks, caches, jnp.int32(t), jax.random.PRNGKey(t))
+        assert int(toks.max()) < 250
