@@ -12,8 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.knn import mips
 from repro.core.roofline import HARDWARE, KernelCost, attainable_flops
+from repro.search import mips
 
 
 def _time(fn, *args, iters=3):

@@ -8,7 +8,7 @@ classic two-term roofline cannot explain it.
 from __future__ import annotations
 
 from repro.configs.knn_workloads import KNN_WORKLOADS
-from repro.core.binning import plan_bins
+from repro.search import plan_bins
 from repro.core.roofline import (
     HARDWARE,
     attainable_flops,

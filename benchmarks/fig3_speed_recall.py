@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.knn import exact_mips, mips
 from repro.data.pipeline import make_vector_dataset
+from repro.search import Index, exact_mips
 
 
 def _recall(approx_idx, exact_idx):
@@ -93,7 +93,8 @@ def main(emit, n=100_000, d=64, m=256, k=10):
     emit(f"fig3,flat,recall=1.000,us_per_query={1e6 * t_flat / m:.1f}")
 
     for rt in (0.8, 0.9, 0.95, 0.99):
-        ours = jax.jit(lambda q, db, rt=rt: mips(q, db, k, recall_target=rt))
+        index = Index.build(db, metric="mips", k=k, recall_target=rt)
+        ours = lambda q, db: index.search(q)  # noqa: E731 - db owned by index
         t = _time(ours, q, db)
         _, idx = ours(q, db)
         emit(
@@ -115,7 +116,7 @@ def main(emit, n=100_000, d=64, m=256, k=10):
     a6 = jax.jit(a6_reshape_argmax)
     t = _time(a6, q, db)
     _, idx = a6(q, db)
-    from repro.core.rescoring import exact_rescoring
+    from repro.search import exact_rescoring
 
     v, i2 = a6(q, db)
     tv, ti = exact_rescoring(v, i2, k, mode="max")

@@ -5,8 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core.binning import expected_recall, plan_bins
-from repro.core.topk import approx_max_k
+from repro.search import approx_max_k, expected_recall, plan_bins
 
 
 def main(emit, n=65536, m=128):

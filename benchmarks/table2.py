@@ -8,8 +8,8 @@ refined roofline (Eq. 6) next to the paper's measured numbers for v3/v4.
 from __future__ import annotations
 
 from repro.configs.knn_workloads import KNN_WORKLOADS
-from repro.core.binning import plan_bins
 from repro.core.roofline import HARDWARE, attainable_flops, partial_reduce_cost
+from repro.search import plan_bins
 
 PAPER_MEASURED = {  # GFLOP/s from Table 2
     ("glove1.2m", "tpu_v3"): 118_524,

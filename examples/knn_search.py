@@ -1,8 +1,10 @@
-"""Distributed KNN example (paper §7): shard a datastore over a device mesh,
-run PartialReduce per shard, all-gather the bin winners, rescore globally.
+"""Distributed KNN example (paper §7) through the unified search API: shard
+an ``Index`` over a device mesh, PartialReduce per shard, all-gather the bin
+winners, rescore globally.
 
-Also demonstrates the kNN-LM retrieval integration.  Uses 8 simulated
-devices (safe to re-exec: this file sets XLA_FLAGS before importing jax).
+Also demonstrates the kNN-LM retrieval integration and index-free updates on
+the sharded index.  Uses 8 simulated devices (safe to re-exec: this file
+sets XLA_FLAGS before importing jax).
 
   PYTHONPATH=src python examples/knn_search.py
 """
@@ -13,11 +15,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.distributed import sharded_l2nns, sharded_mips  # noqa: E402
 from repro.data.pipeline import make_vector_dataset  # noqa: E402
 from repro.retrieval.datastore import KNNDatastore, knn_lm_logits  # noqa: E402
+from repro.search import Index, exact_search  # noqa: E402
 
 
 def recall(a, e):
@@ -28,29 +29,31 @@ def recall(a, e):
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     db = jnp.asarray(make_vector_dataset(65536, 64, metric="cosine", seed=0))
     q = jnp.asarray(make_vector_dataset(64, 64, metric="cosine", seed=1))
-    qs = jax.device_put(q, NamedSharding(mesh, P("data", None)))
-    dbs = jax.device_put(db, NamedSharding(mesh, P("model", None)))
-    print(f"database sharded: {dbs.sharding.spec}, "
-          f"{db.shape[0] // mesh.shape['model']} rows/shard")
 
-    _, idx = sharded_mips(qs, dbs, 10, mesh, batch_axis="data")
-    _, exact = jax.lax.top_k(q @ db.T, 10)
-    print(f"distributed MIPS recall: {recall(idx, exact):.3f}")
+    for metric in ("mips", "l2"):
+        index = Index.build(db, metric=metric, k=10, recall_target=0.95)
+        sharded = index.shard(mesh, db_axis="model", batch_axis="data")
+        _, idx = sharded.search(q)
+        _, exact = exact_search(q, db, 10, metric=metric)
+        print(f"distributed {metric:4s} recall: {recall(idx, exact):.3f}  "
+              f"({sharded!r})")
 
-    _, idx2 = sharded_l2nns(qs, dbs, 10, mesh, batch_axis="data")
-    d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(db)[None], axis=-1)
-    print(f"distributed L2   recall: {recall(idx2, np.argsort(d, -1)[:, :10]):.3f}")
+    # Index-free updates work sharded too: append rows, tombstone others.
+    sharded = Index.build(db[:65024], k=10).shard(mesh, db_axis="model")
+    sharded.add(db[65024:])
+    _, idx = sharded.search(q)
+    _, exact = exact_search(q, db, 10)
+    print(f"after sharded add:   recall={recall(idx, exact):.3f}")
 
     # kNN-LM: retrieve neighbour tokens and interpolate with LM logits.
     value_tokens = jax.random.randint(jax.random.PRNGKey(2), (db.shape[0],), 0, 1000)
     store = KNNDatastore(db, value_tokens, mesh, k=16)
-    scores, toks = store.lookup(qs)
+    scores, toks = store.lookup(q)
     lm_logits = jax.random.normal(jax.random.PRNGKey(3), (q.shape[0], 1000))
     mixed = knn_lm_logits(lm_logits, scores, toks, lam=0.25)
     print(f"kNN-LM mixed logits: {mixed.shape}, "

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.binning import plan_bins
+from repro.search import plan_bins
 from repro.models import model as M
 from repro.models import transformer as tfm
 

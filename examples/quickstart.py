@@ -1,18 +1,23 @@
-"""Quickstart: the paper's two listings, end to end.
+"""Quickstart: the paper's algorithm behind the unified ``repro.search`` API.
 
-Runs MIPS and Euclidean NN search with the repro's approx_max_k (pure-JAX
-path and the fused Pallas kernel in interpret mode) and prints recall vs the
-exact answer — reproducing the paper's analytic recall guarantee on random
-data in a few seconds on CPU.
+One front door for every metric and backend:
+
+    index = Index.build(db, metric=..., k=..., recall_target=...)
+    values, indices = index.search(queries)
+
+Runs MIPS, L2 and cosine search on the XLA and (interpret-mode) Pallas
+backends, shows the paper-promised frequent-update path (add/delete with no
+rebuild), and prints recall vs the exact answer — reproducing the analytic
+recall guarantee on random data in a few seconds on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import approx_max_k, l2nns, mips, plan_bins
-from repro.kernels.ops import mips_topk
+from repro.search import Index, exact_search
+
+K = 10
 
 
 def recall(approx_idx, exact_idx):
@@ -23,32 +28,40 @@ def recall(approx_idx, exact_idx):
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    qy = jax.random.normal(key, (128, 128))
+    qy = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
     db = jax.random.normal(jax.random.PRNGKey(1), (100_000, 128))
 
-    # --- Paper Listing 1: MIPS -------------------------------------------
-    plan = plan_bins(db.shape[0], 10, 0.95)
-    print(f"binning plan: L={plan.num_bins} bins of 2^{plan.log2_bin_size}, "
-          f"E[recall]={plan.expected_recall:.3f}")
-    vals, idxs = jax.jit(lambda q, d: mips(q, d, 10, recall_target=0.95))(qy, db)
-    _, exact = jax.lax.top_k(qy @ db.T, 10)
-    print(f"MIPS   (pure JAX)        recall={recall(idxs, exact):.3f}")
+    # --- one Index, every metric, every backend ---------------------------
+    for metric in ("mips", "l2", "cosine"):
+        _, exact = exact_search(qy, db, K, metric=metric)
+        for backend in ("xla", "pallas"):  # pallas: interpret on CPU
+            index = Index.build(
+                db, metric=metric, k=K, recall_target=0.95, backend=backend
+            )
+            _, idxs = index.search(qy)
+            print(
+                f"{metric:6s} {backend:6s} recall={recall(idxs, exact):.3f} "
+                f"(plan E[recall]={index.expected_recall:.3f}, "
+                f"L={index.plan.num_bins} bins of 2^{index.plan.log2_bin_size})"
+            )
 
-    # fused Pallas kernel (interpret mode on CPU; compiled on real TPU)
-    _, idxs_k = mips_topk(qy, db, 10, 0.95, interpret=True)
-    print(f"MIPS   (Pallas kernel)   recall={recall(idxs_k, exact):.3f}")
+    # --- frequent updates: no index rebuild (paper's usability claim) -----
+    index = Index.build(db[:90_000], metric="mips", k=K, recall_target=0.95)
+    index.add(db[90_000:])                      # append the rest
+    _, exact = exact_search(qy, db, K, metric="mips")
+    _, idxs = index.search(qy)
+    print(f"after add:    recall={recall(idxs, exact):.3f} "
+          f"(size={index.size})")
 
-    # --- Paper Listing 2: Euclidean NN (Eq. 19 halved norms) -------------
-    _, idxs_l2 = jax.jit(lambda q, d: l2nns(q, d, 10, recall_target=0.95))(qy, db)
-    d_true = np.linalg.norm(np.asarray(qy)[:, None] - np.asarray(db)[None], axis=-1)
-    exact_l2 = np.argsort(d_true, axis=-1)[:, :10]
-    print(f"L2 NNS (halved norms)    recall={recall(idxs_l2, exact_l2):.3f}")
+    top1 = np.asarray(exact)[:, 0]
+    index.delete(top1)                          # tombstone each query's top-1
+    _, idxs = index.search(qy)
+    leaked = set(np.asarray(idxs).ravel().tolist()) & set(top1.tolist())
+    print(f"after delete: top-1 rows gone={not leaked} (size={index.size})")
 
-    # --- raw operator -----------------------------------------------------
-    scores = jnp.einsum("ik,jk->ij", qy, db)
-    v, i = approx_max_k(scores, k=10, recall_target=0.95)
-    print(f"approx_max_k direct      recall={recall(i, exact):.3f}")
+    # --- compile cache: repeat same-shape searches never retrace ----------
+    index.search(qy)
+    print(f"compile cache: {index.cache_info()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point.
+#
+#   scripts/ci.sh          # fast subset: skips tests marked @pytest.mark.slow
+#   scripts/ci.sh full     # the tier-1 command (everything, -x -q)
+#
+# Run from the repo root. Keeps the fast path under a few minutes on CPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-fast}" == "full" ]]; then
+    exec python -m pytest -x -q
+else
+    exec python -m pytest -x -q -m "not slow"
+fi

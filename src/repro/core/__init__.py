@@ -6,7 +6,15 @@ from repro.core.binning import (
     expected_recall,
     plan_bins,
 )
-from repro.core.knn import cosine_nns, exact_l2nns, exact_mips, half_norms, l2nns, mips
+from repro.core.knn import (
+    cosine_nns,
+    exact_cosine_nns,
+    exact_l2nns,
+    exact_mips,
+    half_norms,
+    l2nns,
+    mips,
+)
 from repro.core.partial_reduce import partial_reduce, partial_reduce_with_plan
 from repro.core.rescoring import bitonic_sort_pairs, exact_rescoring
 from repro.core.roofline import (

@@ -1,41 +1,24 @@
-"""Distributed KNN (paper §7): shard the database, PartialReduce locally,
-all-gather the L bin-winners, ExactRescore globally.
+"""DEPRECATED shim — use ``repro.search`` instead.
 
-Built with shard_map so the communication pattern is explicit:
-  * database rows sharded over ``db_axis`` (each shard holds N/S rows),
-  * queries replicated over ``db_axis`` (optionally sharded over a batch axis),
-  * each shard reduces its N/S scores to L/S candidates using the *global* N
-    for recall accounting (``reduction_input_size_override``),
-  * one all-gather of (M, L/S) values+indices per shard group,
-  * rescoring runs replicated (L is tiny).
+The distributed KNN pattern (paper §7: shard the database, PartialReduce
+locally with global-N recall accounting, all-gather the bin winners,
+ExactRescore globally) now lives in
+``repro.search.backends.make_sharded_search_fn``; the convenient way to use
+it is ``repro.search.Index.build(db).shard(mesh, db_axis=...)``.
 
-This same pattern is reused by ``models.attention.knn_topk_attention`` for
-sequence-sharded KV caches (context-parallel long-context decode).
+These wrappers preserve the historical signatures (including the
+positive-half-norm convention of ``db_half_norm``).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.binning import plan_bins
-from repro.core.partial_reduce import partial_reduce_with_plan
-from repro.core.rescoring import exact_rescoring
+from repro.search.backends import make_sharded_search_fn
 
 __all__ = ["sharded_mips", "sharded_l2nns", "make_sharded_searcher"]
-
-
-def _local_partial_reduce(scores, *, global_n, k, recall_target, shard_offset):
-    """PartialReduce on a local score shard; indices are globalized."""
-    n_local = scores.shape[-1]
-    plan = plan_bins(
-        n_local, k, recall_target, reduction_input_size_override=global_n
-    )
-    vals, idxs = partial_reduce_with_plan(scores, plan, mode="max")
-    return vals, idxs + shard_offset
 
 
 def make_sharded_searcher(
@@ -52,55 +35,14 @@ def make_sharded_searcher(
     database is expected sharded P(db_axis, None); queries sharded
     P(batch_axis, None) (or replicated when batch_axis is None).
     """
+    fn = make_sharded_search_fn(
+        mesh, metric=metric, k=k, recall_target=recall_target,
+        db_axis=db_axis, batch_axis=batch_axis,
+    )
 
     def searcher(queries, database, db_half_norm=None):
-        global_n = database.shape[0]
-        n_shards = mesh.shape[db_axis]
-        if global_n % n_shards:
-            raise ValueError(
-                f"database rows {global_n} not divisible by {n_shards} shards"
-            )
-
-        qspec = P(batch_axis, None) if batch_axis else P(None, None)
-        hspec = P(db_axis) if db_half_norm is not None else None
-        out_batch = batch_axis  # rescoring output keeps the query sharding
-
-        def local_fn(q, db, hn):
-            axis_idx = jax.lax.axis_index(db_axis)
-            n_local = db.shape[0]
-            offset = axis_idx.astype(jnp.int32) * n_local
-            scores = jnp.einsum("ik,jk->ij", q, db)
-            if metric == "l2":
-                scores = scores - hn[None, :]  # == -(||x||^2/2 - <q,x>)
-            vals, idxs = _local_partial_reduce(
-                scores,
-                global_n=global_n,
-                k=k,
-                recall_target=recall_target,
-                shard_offset=offset,
-            )
-            # Gather the candidate lists from every database shard.
-            vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
-            idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
-            top_v, top_i = exact_rescoring(vals, idxs, k, mode="max")
-            if metric == "l2":
-                top_v = -top_v
-            return top_v, top_i
-
-        in_specs = (qspec, P(db_axis, None), P(db_axis))
-        out_specs = (P(out_batch, None), P(out_batch, None))
-        hn = (
-            db_half_norm
-            if db_half_norm is not None
-            else jnp.zeros((global_n,), queries.dtype)
-        )
-        # check_vma=False: the all_gather over db_axis makes outputs
-        # replicated over that axis, which the static VMA check cannot infer.
-        fn = jax.shard_map(
-            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-        return fn(queries, database, hn)
+        row_bias = None if db_half_norm is None else -db_half_norm
+        return fn(queries, database, row_bias)
 
     return searcher
 

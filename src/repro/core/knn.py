@@ -1,101 +1,33 @@
-"""K-nearest-neighbour search ops (paper Listings 1 & 2).
+"""DEPRECATED shim — use ``repro.search`` instead.
 
-All three distance modes reduce to a single MXU einsum plus at most one COP
-per dot product:
-  * MIPS:    argmax  <q, x>
-  * cosine:  MIPS on l2-normalised vectors
-  * L2:      argmin  ||x||^2/2 - <q, x>   (halved-norm trick, Eq. 19 — 1 COP)
+The five historical entry points were unified behind ``repro.search``
+(``Index.build(...).search(...)`` or the functional ``repro.search.search``).
+This module re-exports the functional equivalents with their original
+signatures so existing callers keep working; new code should not import it.
+
+Value/sign conventions (including the L2 relaxed-distance contract) are
+documented once, in ``repro.search.metrics``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import jax  # noqa: F401  (kept at module top; was function-local pre-shim)
 
-import jax.numpy as jnp
+from repro.search.functional import (
+    cosine_nns,
+    exact_cosine_nns,
+    exact_l2nns,
+    exact_mips,
+    half_norms,
+    l2nns,
+    mips,
+)
 
-from repro.core.topk import approx_max_k
-
-__all__ = ["half_norms", "mips", "l2nns", "cosine_nns", "exact_mips", "exact_l2nns"]
-
-
-def half_norms(database: jnp.ndarray) -> jnp.ndarray:
-    """Precomputed ||x||^2 / 2 per database row (Eq. 19)."""
-    return 0.5 * jnp.sum(jnp.square(database), axis=-1)
-
-
-def mips(
-    queries: jnp.ndarray,
-    database: jnp.ndarray,
-    k: int = 10,
-    *,
-    recall_target: float = 0.95,
-    reduction_input_size_override: int = -1,
-    aggregate_to_topk: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Maximum inner product search (paper Listing 1)."""
-    scores = jnp.einsum("ik,jk->ij", queries, database)
-    return approx_max_k(
-        scores,
-        k,
-        recall_target=recall_target,
-        reduction_input_size_override=reduction_input_size_override,
-        aggregate_to_topk=aggregate_to_topk,
-    )
-
-
-def l2nns(
-    queries: jnp.ndarray,
-    database: jnp.ndarray,
-    k: int = 10,
-    *,
-    db_half_norm: Optional[jnp.ndarray] = None,
-    recall_target: float = 0.95,
-    reduction_input_size_override: int = -1,
-    aggregate_to_topk: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Euclidean NN search (paper Listing 2, relaxed distance Eq. 19).
-
-    Note the returned "values" are the relaxed scores ||x||^2/2 - <q,x>,
-    monotone in true L2 distance for each query (the query norm is dropped).
-    """
-    if db_half_norm is None:
-        db_half_norm = half_norms(database)
-    dots = jnp.einsum("ik,jk->ij", queries, database)
-    dists = db_half_norm[None, :] - dots
-    # approx_min == approx_max on negated scores; keeps a single kernel.
-    neg_vals, idxs = approx_max_k(
-        -dists,
-        k,
-        recall_target=recall_target,
-        reduction_input_size_override=reduction_input_size_override,
-        aggregate_to_topk=aggregate_to_topk,
-    )
-    return -neg_vals, idxs
-
-
-def cosine_nns(
-    queries: jnp.ndarray,
-    database_normalized: jnp.ndarray,
-    k: int = 10,
-    **kwargs,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Cosine similarity search == MIPS on l2-normalised data (paper §2)."""
-    q = queries / jnp.linalg.norm(queries, axis=-1, keepdims=True)
-    return mips(q, database_normalized, k, **kwargs)
-
-
-# --- Exact baselines (for recall evaluation / Faiss-Flat analogue) ---------
-
-
-def exact_mips(queries, database, k=10):
-    scores = jnp.einsum("ik,jk->ij", queries, database)
-    import jax
-
-    return jax.lax.top_k(scores, k)
-
-
-def exact_l2nns(queries, database, k=10):
-    dists = half_norms(database)[None, :] - jnp.einsum("ik,jk->ij", queries, database)
-    import jax
-
-    vals, idxs = jax.lax.top_k(-dists, k)
-    return -vals, idxs
+__all__ = [
+    "half_norms",
+    "mips",
+    "l2nns",
+    "cosine_nns",
+    "exact_mips",
+    "exact_l2nns",
+    "exact_cosine_nns",
+]

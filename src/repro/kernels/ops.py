@@ -1,33 +1,33 @@
-"""jit'd front-ends for the fused PartialReduce Pallas kernel.
+"""DEPRECATED shim — use ``repro.search`` instead.
 
-Handles the paper's preprocessing (Appendix A.5):
-  * pad D to a multiple of 128 ("Padded to 128" row of Table 2),
-  * pad N to the tile grid and mask the tail via the bias row
-    (the non-power-of-2 masking COP),
-  * fold the L2 halved norm into the same bias row (Eq. 19),
-then plans bins for the recall target and runs kernel + ExactRescoring.
+``mips_topk`` / ``l2_topk`` forward to the Pallas backend of the unified
+search API (``repro.search.backends.pallas_search``), which also owns the
+padding/bias preprocessing these wrappers used to implement
+(``prepare_pallas_inputs``).  Original signatures are preserved.
+
+Note one behavior change inherited from the unified backend: candidate
+rescoring defaults to ``lax.top_k`` rather than the bitonic network (results
+are identical — both are exact over the L candidates — but compiling the
+bitonic sort inside jit is pathologically slow on CPU XLA).  Pass the
+paper-faithful path via ``repro.search.SearchSpec(use_bitonic=True)``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-
-from repro.core.binning import plan_bins
-from repro.core.rescoring import exact_rescoring
-from repro.kernels.partial_reduce import partial_reduce_pallas
 
 __all__ = ["mips_topk", "l2_topk", "prepare_inputs"]
 
-_NEG_INF = float(np.finfo(np.float32).min)  # finite -inf surrogate: keeps the
-# MXU path free of NaN propagation from 0 * -inf on padded dims.
+# repro.search.backends imports repro.kernels.partial_reduce, which executes
+# this package's __init__ (and thus this module) first — so the backend
+# import must be deferred past module load time.
 
 
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+def _backends():
+    from repro.search import backends
+
+    return backends
 
 
 def prepare_inputs(
@@ -41,38 +41,16 @@ def prepare_inputs(
     half_norms: Optional[jnp.ndarray] = None,
     reduction_input_size_override: int = -1,
 ):
-    """Pad inputs to the tiling contract and build the fused bias row."""
-    m, d = queries.shape
-    n = database.shape[0]
-    plan = plan_bins(
-        n, k, recall_target,
+    """Legacy padding front-end (half-norm convention): see
+    ``repro.search.backends.prepare_pallas_inputs`` for the generic version."""
+    return _backends().prepare_pallas_inputs(
+        queries, database, k, recall_target,
+        block_m=block_m, max_block_n=max_block_n,
+        row_bias=None if half_norms is None else -half_norms,
         reduction_input_size_override=reduction_input_size_override,
     )
-    bin_size = plan.bin_size
-    block_n = bin_size * max(1, max_block_n // bin_size)
-    n_pad = _round_up(max(n, block_n), block_n)
-    m_pad = _round_up(max(m, block_m), block_m)
-    d_pad = _round_up(d, 128)
-
-    q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
-    db = jnp.pad(database, ((0, n_pad - n), (0, d_pad - d)))
-    bias = jnp.full((n_pad,), _NEG_INF, jnp.float32)
-    body = (
-        jnp.zeros((n,), jnp.float32)
-        if half_norms is None
-        else -half_norms.astype(jnp.float32)
-    )
-    bias = bias.at[:n].set(body)
-    return q, db, bias[None, :], plan, bin_size, block_n, (m, n)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "recall_target", "block_m", "max_block_n", "interpret",
-        "aggregate_to_topk", "reduction_input_size_override",
-    ),
-)
 def mips_topk(
     queries: jnp.ndarray,
     database: jnp.ndarray,
@@ -86,28 +64,15 @@ def mips_topk(
     reduction_input_size_override: int = -1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused-kernel MIPS (paper Listing 1, via the Pallas PartialReduce)."""
-    q, db, bias, plan, bin_size, block_n, (m, n) = prepare_inputs(
-        queries, database, k, recall_target,
-        block_m=block_m, max_block_n=max_block_n,
+    return _backends().pallas_search(
+        queries, database, None,
+        metric="mips", k=k, recall_target=recall_target,
+        block_m=block_m, max_block_n=max_block_n, interpret=interpret,
+        aggregate_to_topk=aggregate_to_topk,
         reduction_input_size_override=reduction_input_size_override,
     )
-    vals, idxs = partial_reduce_pallas(
-        q, db, bias, bin_size=bin_size,
-        block_m=block_m, block_n=block_n, interpret=interpret,
-    )
-    vals, idxs = vals[:m], jnp.minimum(idxs[:m], n - 1)
-    if not aggregate_to_topk:
-        return vals, idxs
-    return exact_rescoring(vals, idxs, k, mode="max")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "recall_target", "block_m", "max_block_n", "interpret",
-        "aggregate_to_topk", "reduction_input_size_override",
-    ),
-)
 def l2_topk(
     queries: jnp.ndarray,
     database: jnp.ndarray,
@@ -123,22 +88,15 @@ def l2_topk(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused-kernel Euclidean NN (paper Listing 2 / Eq. 19).
 
-    Maximizes <q,x> - ||x||^2/2; returned values are the relaxed distances
-    ||x||^2/2 - <q,x> (negated kernel output), monotone in true L2.
+    Values follow the L2 contract in ``repro.search.metrics``: relaxed
+    distances ``||x||^2/2 - <q,x>``, ascending.
     """
     if half_norms is None:
         half_norms = 0.5 * jnp.sum(jnp.square(database), axis=-1)
-    q, db, bias, plan, bin_size, block_n, (m, n) = prepare_inputs(
-        queries, database, k, recall_target,
-        block_m=block_m, max_block_n=max_block_n, half_norms=half_norms,
+    return _backends().pallas_search(
+        queries, database, -half_norms,
+        metric="l2", k=k, recall_target=recall_target,
+        block_m=block_m, max_block_n=max_block_n, interpret=interpret,
+        aggregate_to_topk=aggregate_to_topk,
         reduction_input_size_override=reduction_input_size_override,
     )
-    vals, idxs = partial_reduce_pallas(
-        q, db, bias, bin_size=bin_size,
-        block_m=block_m, block_n=block_n, interpret=interpret,
-    )
-    vals, idxs = vals[:m], jnp.minimum(idxs[:m], n - 1)
-    if not aggregate_to_topk:
-        return -vals, idxs
-    top_v, top_i = exact_rescoring(vals, idxs, k, mode="max")
-    return -top_v, top_i

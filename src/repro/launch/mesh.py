@@ -12,13 +12,21 @@ import jax
 __all__ = ["make_production_mesh", "make_host_mesh"]
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType (explicit-sharding meshes) only exists in newer
+    # jax; Auto is the default either way, so omit it when unavailable.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -27,7 +35,4 @@ def make_host_mesh(model_parallel: int = 1):
     mp = model_parallel
     while mp > 1 and n % mp:
         mp //= 2
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((n // mp, mp), ("data", "model"))

@@ -1,12 +1,11 @@
-"""Distributed kNN-LM datastore: the paper's §7 multi-chip extension as a
-retrieval service for language models.
+"""Distributed kNN-LM datastore on the unified search API.
 
-The datastore holds (key, value-token) pairs sharded over the mesh's model
-axis.  A lookup is the paper's distributed MIPS: local PartialReduce on each
-shard (recall accounted against the *global* N via
-reduction_input_size_override), all-gather of the L bin winners, global
-ExactRescoring.  ``knn_lm_logits`` turns neighbour distances into the
-classic kNN-LM interpolation distribution.
+The datastore is a ``repro.search.Index`` over (key, value-token) pairs —
+optionally mesh-sharded (paper §7: local PartialReduce with global-N recall
+accounting, all-gather, global ExactRescoring) — plus the kNN-LM
+interpolation head.  Because the Index is index-free, the datastore supports
+frequent updates: ``extend`` appends new pairs and ``forget`` tombstones old
+ones with no rebuild.
 """
 from __future__ import annotations
 
@@ -14,9 +13,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.distributed import make_sharded_searcher
+from repro.search import Index
 
 __all__ = ["KNNDatastore", "knn_lm_logits"]
 
@@ -32,30 +31,56 @@ class KNNDatastore:
         recall_target: float = 0.95,
         db_axis: str = "model",
         batch_axis: Optional[str] = "data",
+        metric: str = "mips",
     ):
+        self.index = Index.build(
+            keys, metric=metric, k=k, recall_target=recall_target
+        )
+        if mesh is not None:
+            self.index = self.index.shard(
+                mesh, db_axis=db_axis, batch_axis=batch_axis
+            )
         self.mesh = mesh
         self.k = k
-        self.value_tokens = value_tokens
-        if mesh is not None:
-            self.keys = jax.device_put(
-                keys, NamedSharding(mesh, P(db_axis, None))
-            )
-            self._search = make_sharded_searcher(
-                mesh, k=k, recall_target=recall_target,
-                db_axis=db_axis, batch_axis=batch_axis, metric="mips",
-            )
-        else:
-            self.keys = keys
-            from repro.core.knn import mips
+        self.value_tokens = jnp.asarray(value_tokens)
 
-            self._search = lambda q, db: mips(
-                q, db, k, recall_target=recall_target
-            )
+    @property
+    def keys(self) -> jnp.ndarray:
+        return self.index._db
+
+    def __len__(self) -> int:
+        return len(self.index)
 
     def lookup(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """-> (scores (M, k), neighbour value tokens (M, k))."""
-        vals, idxs = self._search(queries, self.keys)
+        vals, idxs = self.index.search(queries)
         return vals, jnp.take(self.value_tokens, idxs, axis=0)
+
+    # -- frequent updates (the paper's "no index maintenance" claim) ---------
+
+    def extend(self, keys: jnp.ndarray, value_tokens: jnp.ndarray) -> "KNNDatastore":
+        """Append (key, token) pairs in place; no rebuild."""
+        keys = jnp.atleast_2d(jnp.asarray(keys))
+        value_tokens = jnp.atleast_1d(jnp.asarray(value_tokens))
+        if keys.shape[0] != value_tokens.shape[0]:
+            raise ValueError(
+                f"{keys.shape[0]} keys vs {value_tokens.shape[0]} tokens"
+            )
+        start = self.index.num_appended
+        self.index.add(keys)
+        # Keep value_tokens aligned with the index's append-only row space.
+        pad = self.index.capacity - self.value_tokens.shape[0]
+        if pad > 0:
+            self.value_tokens = jnp.pad(self.value_tokens, (0, pad))
+        self.value_tokens = self.value_tokens.at[
+            start : start + value_tokens.shape[0]
+        ].set(value_tokens.astype(self.value_tokens.dtype))
+        return self
+
+    def forget(self, ids) -> "KNNDatastore":
+        """Tombstone datastore rows by index (e.g. stale documents)."""
+        self.index.delete(ids)
+        return self
 
 
 def knn_lm_logits(

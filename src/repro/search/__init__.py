@@ -1,0 +1,91 @@
+"""repro.search — the unified front door for TPU-KNN search.
+
+One API over every backend (paper Listings 1/2, Alg. 2, §7):
+
+    from repro.search import Index
+
+    index = Index.build(db, metric="l2", k=10, recall_target=0.95)
+    values, indices = index.search(queries)      # auto backend, auto-tiled
+    index.add(new_rows).delete([3, 17])          # index-free updates
+    sharded = index.shard(mesh, db_axis="model") # distributed search
+
+Backends: "auto" | "xla" | "pallas" | "sharded" (``SearchSpec.backend``).
+Metrics: "mips" | "l2" | "cosine", extensible via ``register_metric``; the
+value/sign contract lives in ``repro.search.metrics``.
+
+``repro.core.knn``, ``repro.kernels.ops`` and ``repro.core.distributed``
+remain as deprecated thin shims over this package.
+"""
+from repro.core.binning import (  # re-export: planning is part of the API
+    BinPlan,
+    bins_for_recall,
+    expected_recall,
+    plan_bins,
+)
+from repro.core.rescoring import exact_rescoring
+from repro.core.topk import approx_max_k, approx_min_k
+from repro.search.backends import (
+    MASK_VALUE,
+    CompileCache,
+    default_backend,
+    dense_search,
+    make_sharded_search_fn,
+    pallas_search,
+)
+from repro.search.functional import (
+    cosine_nns,
+    exact_cosine_nns,
+    exact_l2nns,
+    exact_mips,
+    exact_search,
+    half_norms,
+    l2nns,
+    mips,
+    search,
+)
+from repro.search.index import Index, SearchResult
+from repro.search.metrics import (
+    Metric,
+    available_metrics,
+    get_metric,
+    register_metric,
+)
+from repro.search.spec import BACKENDS, SearchSpec
+
+__all__ = [
+    # front door
+    "Index",
+    "SearchResult",
+    "SearchSpec",
+    "BACKENDS",
+    "search",
+    # metric registry
+    "Metric",
+    "register_metric",
+    "get_metric",
+    "available_metrics",
+    # functional + exact baselines
+    "mips",
+    "l2nns",
+    "cosine_nns",
+    "half_norms",
+    "exact_mips",
+    "exact_l2nns",
+    "exact_cosine_nns",
+    "exact_search",
+    # backends
+    "default_backend",
+    "dense_search",
+    "pallas_search",
+    "make_sharded_search_fn",
+    "CompileCache",
+    "MASK_VALUE",
+    # planning / operator re-exports
+    "BinPlan",
+    "plan_bins",
+    "bins_for_recall",
+    "expected_recall",
+    "approx_max_k",
+    "approx_min_k",
+    "exact_rescoring",
+]

@@ -1,0 +1,327 @@
+"""Backend implementations behind the unified search API.
+
+Three interchangeable executions of the same algorithm (score matmul ->
+PartialReduce -> ExactRescoring), all consuming metric-prepared operands and
+an additive per-row bias (metric bias + tombstone mask), all returning the
+*internal* max-convention first and negating once for distance metrics:
+
+  * ``dense_search``  — pure-XLA reference path (einsum + approx_max_k).
+  * ``pallas_search`` — fused Pallas PartialReduce kernel (interpret mode on
+    CPU, compiled on TPU); cosine works here too since it is biased MIPS.
+  * ``make_sharded_search_fn`` — shard_map over a database axis with
+    ``reduction_input_size_override`` recall accounting (paper §7).
+
+``TRACE_COUNTS`` increments once per *trace* of each backend (the body of a
+jitted function only runs while tracing), which is how the compile-cache
+tests assert "no retrace on same-shape repeat searches".
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.binning import plan_bins
+from repro.core.partial_reduce import partial_reduce_with_plan
+from repro.core.rescoring import exact_rescoring
+from repro.core.topk import approx_max_k
+from repro.kernels.partial_reduce import partial_reduce_pallas
+from repro.parallel.sharding import shard_map_compat
+from repro.search.metrics import get_metric
+
+__all__ = [
+    "MASK_VALUE",
+    "TRACE_COUNTS",
+    "CompileCache",
+    "dense_search",
+    "pallas_search",
+    "prepare_pallas_inputs",
+    "make_sharded_search_fn",
+    "default_backend",
+]
+
+# Finite -inf surrogate (float32 min): keeps the MXU/VPU paths free of NaN
+# propagation while still losing every comparison against real scores.
+MASK_VALUE = float(np.finfo(np.float32).min)
+
+# backend name -> number of jit traces (test observability hook).
+TRACE_COUNTS = collections.Counter()
+
+
+def default_backend(mesh: Optional[Mesh] = None) -> str:
+    """Resolve backend="auto": sharded with a mesh, pallas on TPU, else xla."""
+    if mesh is not None:
+        return "sharded"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+class CompileCache:
+    """Shape/spec-keyed cache of built search callables.
+
+    jax.jit already memoizes traces per callable; this cache additionally
+    memoizes the *callables* (closures over static config) so repeat
+    searches at the same shape hit the same jitted function — and exposes
+    hit/miss counters so tests and users can verify no retracing happens.
+    """
+
+    def __init__(self):
+        self._fns = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, builder: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = builder()
+        else:
+            self.hits += 1
+        return fn
+
+    def info(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self._fns)}
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# --- XLA backend ------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "recall_target", "reduction_input_size_override",
+        "aggregate_to_topk", "use_bitonic",
+    ),
+)
+def dense_search(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: Optional[jnp.ndarray] = None,
+    *,
+    metric: str = "mips",
+    k: int = 10,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-XLA search: full score matrix + approx_max_k (paper Listings 1/2).
+
+    ``database`` must already be metric-prepared (e.g. normalized for
+    cosine); ``row_bias`` carries the metric bias and/or tombstone mask.
+    """
+    m = get_metric(metric)
+    TRACE_COUNTS["xla"] += 1
+    q = m.prepare_queries(queries)
+    scores = jnp.einsum("ik,jk->ij", q, database)
+    if row_bias is not None:
+        scores = scores + row_bias[None, :]
+    vals, idxs = approx_max_k(
+        scores,
+        k,
+        recall_target=recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+        aggregate_to_topk=aggregate_to_topk,
+        use_bitonic=use_bitonic,
+    )
+    if m.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
+# --- Pallas backend ---------------------------------------------------------
+
+
+def prepare_pallas_inputs(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    k: int,
+    recall_target: float,
+    *,
+    block_m: int,
+    max_block_n: int = 1024,
+    row_bias: Optional[jnp.ndarray] = None,
+    reduction_input_size_override: int = -1,
+):
+    """Pad operands to the kernel tiling contract and build the fused bias row.
+
+    The bias row fuses (Appendix A.5) the non-power-of-2 tail mask, the
+    metric's additive per-row bias (e.g. -||x||^2/2 for L2), and any
+    tombstone mask into a single COP.
+    """
+    m, d = queries.shape
+    n = database.shape[0]
+    plan = plan_bins(
+        n, k, recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+    bin_size = plan.bin_size
+    block_n = bin_size * max(1, max_block_n // bin_size)
+    n_pad = _round_up(max(n, block_n), block_n)
+    m_pad = _round_up(max(m, block_m), block_m)
+    d_pad = _round_up(d, 128)
+
+    q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
+    db = jnp.pad(database, ((0, n_pad - n), (0, d_pad - d)))
+    bias = jnp.full((n_pad,), MASK_VALUE, jnp.float32)
+    body = (
+        jnp.zeros((n,), jnp.float32)
+        if row_bias is None
+        else jnp.maximum(row_bias.astype(jnp.float32), MASK_VALUE)
+    )
+    bias = bias.at[:n].set(body)
+    return q, db, bias[None, :], plan, bin_size, block_n, (m, n)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "recall_target", "block_m", "max_block_n", "interpret",
+        "aggregate_to_topk", "use_bitonic", "reduction_input_size_override",
+    ),
+)
+def _pallas_search_jit(
+    queries,
+    database,
+    row_bias,
+    *,
+    metric,
+    k,
+    recall_target,
+    block_m,
+    max_block_n,
+    interpret,
+    aggregate_to_topk,
+    use_bitonic,
+    reduction_input_size_override,
+):
+    m_obj = get_metric(metric)
+    TRACE_COUNTS["pallas"] += 1
+    q = m_obj.prepare_queries(queries)
+    q, db, bias, plan, bin_size, block_n, (m, n) = prepare_pallas_inputs(
+        q, database, k, recall_target,
+        block_m=block_m, max_block_n=max_block_n, row_bias=row_bias,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+    vals, idxs = partial_reduce_pallas(
+        q, db, bias, bin_size=bin_size,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    vals, idxs = vals[:m], jnp.minimum(idxs[:m], n - 1)
+    if aggregate_to_topk:
+        vals, idxs = exact_rescoring(
+            vals, idxs, k, mode="max", use_bitonic=use_bitonic
+        )
+    if m_obj.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
+def pallas_search(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: Optional[jnp.ndarray] = None,
+    *,
+    metric: str = "mips",
+    k: int = 10,
+    recall_target: float = 0.95,
+    block_m: int = 256,
+    max_block_n: int = 1024,
+    interpret: Optional[bool] = None,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+    reduction_input_size_override: int = -1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-kernel search (paper Alg. 2). Interpret mode auto-enables off-TPU.
+
+    Same operand contract as ``dense_search`` (metric-prepared database,
+    additive ``row_bias``); all three built-in metrics work here — cosine is
+    plain MIPS after preparation, closing the old cosine-only-on-XLA gap.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _pallas_search_jit(
+        queries, database, row_bias,
+        metric=metric, k=k, recall_target=recall_target,
+        block_m=block_m, max_block_n=max_block_n, interpret=interpret,
+        aggregate_to_topk=aggregate_to_topk, use_bitonic=use_bitonic,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+
+
+# --- Sharded backend (paper §7) ---------------------------------------------
+
+
+def make_sharded_search_fn(
+    mesh: Mesh,
+    *,
+    metric: str = "mips",
+    k: int = 10,
+    recall_target: float = 0.95,
+    db_axis: str = "model",
+    batch_axis: Optional[str] = None,
+    use_bitonic: bool = False,
+):
+    """Build (queries, database, row_bias) -> (values, indices) over a mesh.
+
+    database sharded P(db_axis, None); queries replicated over db_axis and
+    optionally sharded over ``batch_axis``; ``row_bias`` sharded P(db_axis).
+    Each shard PartialReduces its rows with recall accounted against the
+    *global* N (``reduction_input_size_override``), the L bin winners are
+    all-gathered, and ExactRescoring runs replicated.
+    """
+    m_obj = get_metric(metric)
+
+    def searcher(queries, database, row_bias=None):
+        global_n = database.shape[0]
+        n_shards = mesh.shape[db_axis]
+        if global_n % n_shards:
+            raise ValueError(
+                f"database rows {global_n} not divisible by {n_shards} shards"
+            )
+        TRACE_COUNTS["sharded"] += 1
+        q = m_obj.prepare_queries(queries)
+        bias = (
+            row_bias
+            if row_bias is not None
+            else jnp.zeros((global_n,), jnp.float32)
+        )
+        qspec = P(batch_axis, None) if batch_axis else P(None, None)
+
+        def local_fn(q, db, b):
+            axis_idx = jax.lax.axis_index(db_axis)
+            n_local = db.shape[0]
+            offset = axis_idx.astype(jnp.int32) * n_local
+            scores = jnp.einsum("ik,jk->ij", q, db) + b[None, :]
+            plan = plan_bins(
+                n_local, k, recall_target,
+                reduction_input_size_override=global_n,
+            )
+            vals, idxs = partial_reduce_with_plan(scores, plan, mode="max")
+            idxs = idxs + offset
+            vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
+            idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
+            top_v, top_i = exact_rescoring(
+                vals, idxs, k, mode="max", use_bitonic=use_bitonic
+            )
+            if m_obj.negate_output:
+                top_v = -top_v
+            return top_v, top_i
+
+        fn = shard_map_compat(
+            local_fn,
+            mesh=mesh,
+            in_specs=(qspec, P(db_axis, None), P(db_axis)),
+            out_specs=(P(batch_axis, None), P(batch_axis, None)),
+        )
+        return fn(q, database, bias)
+
+    return searcher

@@ -1,0 +1,151 @@
+"""Functional one-shot search API (and the engine behind the legacy shims).
+
+Prefer ``repro.search.Index`` for anything called more than once — it
+precomputes the metric preparation, owns the compile cache, and supports
+in-place updates.  These functions cover the one-shot case and keep the old
+``core.knn`` / ``kernels.ops`` signatures alive as thin forwarders.
+
+Value conventions are owned by ``repro.search.metrics`` (module docstring).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.search import backends
+from repro.search.metrics import (
+    exact_cosine_nns,
+    exact_l2nns,
+    exact_mips,
+    exact_search,
+    get_metric,
+    half_norms,
+)
+
+__all__ = [
+    "search",
+    "mips",
+    "l2nns",
+    "cosine_nns",
+    "half_norms",
+    "exact_mips",
+    "exact_l2nns",
+    "exact_cosine_nns",
+    "exact_search",
+]
+
+
+def search(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    *,
+    metric: str = "mips",
+    k: int = 10,
+    recall_target: float = 0.95,
+    backend: str = "auto",
+    mesh: Optional[Mesh] = None,
+    db_axis: str = "model",
+    batch_axis: Optional[str] = None,
+    row_bias: Optional[jnp.ndarray] = None,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+    block_m: int = 256,
+    max_block_n: int = 1024,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-shot search of ``queries`` against a raw ``database``.
+
+    The database is metric-prepared on every call — use ``Index.build`` to
+    amortize that (and everything else) across calls.
+    """
+    m_obj = get_metric(metric)
+    db, metric_bias = m_obj.prepare_database(database)
+    if metric_bias is not None:
+        row_bias = metric_bias if row_bias is None else row_bias + metric_bias
+    if backend == "auto":
+        backend = backends.default_backend(mesh)
+    if backend == "xla":
+        return backends.dense_search(
+            queries, db, row_bias,
+            metric=metric, k=k, recall_target=recall_target,
+            reduction_input_size_override=reduction_input_size_override,
+            aggregate_to_topk=aggregate_to_topk,
+        )
+    if backend == "pallas":
+        return backends.pallas_search(
+            queries, db, row_bias,
+            metric=metric, k=k, recall_target=recall_target,
+            block_m=block_m, max_block_n=max_block_n, interpret=interpret,
+            aggregate_to_topk=aggregate_to_topk,
+            reduction_input_size_override=reduction_input_size_override,
+        )
+    if backend == "sharded":
+        if mesh is None:
+            raise ValueError("backend='sharded' requires a mesh")
+        fn = backends.make_sharded_search_fn(
+            mesh, metric=metric, k=k, recall_target=recall_target,
+            db_axis=db_axis, batch_axis=batch_axis,
+        )
+        return fn(queries, db, row_bias)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# --- Legacy-signature functional entry points -------------------------------
+
+
+def mips(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    k: int = 10,
+    *,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Maximum inner product search (paper Listing 1)."""
+    return backends.dense_search(
+        queries, database, None,
+        metric="mips", k=k, recall_target=recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+        aggregate_to_topk=aggregate_to_topk,
+    )
+
+
+def l2nns(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    k: int = 10,
+    *,
+    db_half_norm: Optional[jnp.ndarray] = None,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Euclidean NN search (paper Listing 2); values follow the L2 contract
+    in ``repro.search.metrics`` (relaxed distances, ascending)."""
+    if db_half_norm is None:
+        db_half_norm = half_norms(database)
+    return backends.dense_search(
+        queries, database, -db_half_norm,
+        metric="l2", k=k, recall_target=recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+        aggregate_to_topk=aggregate_to_topk,
+    )
+
+
+def cosine_nns(
+    queries: jnp.ndarray,
+    database_normalized: jnp.ndarray,
+    k: int = 10,
+    **kwargs,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cosine search == MIPS on l2-normalized operands (paper §2).
+
+    Legacy contract: ``database_normalized`` rows are already unit-norm;
+    queries are normalized here.  ``Index`` with metric="cosine" handles
+    raw databases instead.
+    """
+    q = get_metric("cosine").prepare_queries(queries)
+    return mips(q, database_normalized, k, **kwargs)

@@ -1,0 +1,405 @@
+"""Index: the index-free front door of the unified search API.
+
+"Index" in the Faiss sense of the word only — true to the paper there is no
+graph/IVF data structure to build or maintain.  ``Index.build`` does the
+only precompute the algorithm needs (metric preparation: half norms or row
+normalization, O(N) element-wise), so updates are cheap:
+
+  * ``add(rows)``    appends into spare capacity (amortized growth),
+  * ``delete(ids)``  tombstones rows via the kernel bias row,
+  * bin plans and metric precompute are re-derived lazily on next search —
+    no rebuild, the paper's "suitable for frequent updates" claim.
+
+``search`` auto-tiles large query batches (``spec.query_block``) so the
+score tile stays bounded, dispatches to the xla / pallas / sharded backend,
+and memoizes compiled callables per (shape, dtype, spec) in a
+``CompileCache`` — repeat same-shape searches never retrace.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.binning import BinPlan, plan_bins
+from repro.search import backends
+from repro.search.metrics import Metric, get_metric
+from repro.search.spec import SearchSpec
+
+__all__ = ["Index", "SearchResult"]
+
+
+class SearchResult(NamedTuple):
+    """(values, indices), both (M, k); value conventions per the metric
+    contract in ``repro.search.metrics``."""
+
+    values: jnp.ndarray
+    indices: jnp.ndarray
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+class Index:
+    """Searchable database under one ``SearchSpec``.
+
+    Build one with ``Index.build(db, metric=..., k=..., ...)``; never call
+    the constructor directly.  All mutating methods (``add``, ``delete``)
+    update in place and return ``self`` for chaining.
+    """
+
+    def __init__(
+        self,
+        spec: SearchSpec,
+        db: jnp.ndarray,
+        live: jnp.ndarray,
+        size: int,
+        num_live: int,
+        *,
+        capacity_block: int = 1024,
+        mesh: Optional[Mesh] = None,
+        db_axis: str = "model",
+        batch_axis: Optional[str] = None,
+        interpret: Optional[bool] = None,
+    ):
+        self.spec = spec
+        self._db = db
+        self._live = live
+        self._size = size          # append high-water mark (<= capacity)
+        self._num_live = num_live  # live rows (size minus tombstones)
+        self._capacity_block = capacity_block
+        self._mesh = mesh
+        self._db_axis = db_axis
+        self._batch_axis = batch_axis
+        self._interpret = interpret
+        self._db_proc = None       # metric-prepared database (lazy)
+        self._metric_bias = None   # metric's additive row bias (lazy)
+        self._bias = None          # metric bias + tombstone mask (lazy)
+        self._cache = backends.CompileCache()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        database: jnp.ndarray,
+        *,
+        metric: str = "mips",
+        k: int = 10,
+        recall_target: float = 0.95,
+        backend: str = "auto",
+        spec: Optional[SearchSpec] = None,
+        capacity: Optional[int] = None,
+        capacity_block: int = 1024,
+        interpret: Optional[bool] = None,
+        **spec_kwargs,
+    ) -> "Index":
+        """Create an index over ``database`` rows (N, D).
+
+        ``spec`` overrides the individual (metric, k, ...) arguments when
+        given.  ``capacity`` pre-allocates room for ``add`` beyond N;
+        ``interpret`` forces Pallas interpret mode (auto: on except on TPU).
+        """
+        if spec is None:
+            spec = SearchSpec(
+                metric=metric, k=k, recall_target=recall_target,
+                backend=backend, **spec_kwargs,
+            )
+        get_metric(spec.metric)  # validate eagerly
+        database = jnp.asarray(database)
+        if database.ndim != 2:
+            raise ValueError(f"database must be (N, D), got {database.shape}")
+        n = database.shape[0]
+        cap = max(n, capacity or n)
+        if cap > n:
+            cap = _round_up(cap, capacity_block)
+            database = jnp.pad(database, ((0, cap - n), (0, 0)))
+        live = jnp.zeros((cap,), bool).at[:n].set(True)
+        return cls(
+            spec, database, live, size=n, num_live=n,
+            capacity_block=capacity_block, interpret=interpret,
+        )
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def metric(self) -> Metric:
+        return get_metric(self.spec.metric)
+
+    @property
+    def capacity(self) -> int:
+        return self._db.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._db.shape[1]
+
+    @property
+    def size(self) -> int:
+        """Number of live (searchable) rows."""
+        return self._num_live
+
+    @property
+    def num_appended(self) -> int:
+        """Rows ever appended (live + tombstoned) — the append high-water
+        mark.  Row-aligned side tables (e.g. value tokens) must cover at
+        least this many rows."""
+        return self._size
+
+    def __len__(self) -> int:
+        return self._num_live
+
+    @property
+    def plan(self) -> BinPlan:
+        """Bin plan (and analytic E[recall], Eq. 13) for the current shape."""
+        return plan_bins(
+            self.capacity, self.spec.k, self.spec.recall_target,
+            reduction_input_size_override=self.spec.reduction_input_size_override,
+        )
+
+    @property
+    def expected_recall(self) -> float:
+        return self.plan.expected_recall
+
+    def cache_info(self) -> dict:
+        return self._cache.info()
+
+    def __repr__(self) -> str:
+        mesh = f", mesh={dict(self._mesh.shape)}" if self._mesh else ""
+        return (
+            f"Index(metric={self.spec.metric!r}, k={self.spec.k}, "
+            f"backend={self._resolve_backend()!r}, size={self.size}, "
+            f"capacity={self.capacity}, dim={self.dim}{mesh})"
+        )
+
+    # -- derived state -------------------------------------------------------
+
+    def _resolve_backend(self) -> str:
+        b = self.spec.backend
+        if b == "auto":
+            return backends.default_backend(self._mesh)
+        if b == "sharded" and self._mesh is None:
+            raise ValueError(
+                "backend='sharded' requires a mesh — call "
+                ".shard(mesh, db_axis=...) first"
+            )
+        return b
+
+    def _prepared(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(metric-prepared db, combined bias row) with lazy re-derivation."""
+        if self._db_proc is None:
+            db = self._db
+            if self.spec.dtype is not None:
+                db = db.astype(jnp.dtype(self.spec.dtype))
+            self._db_proc, self._metric_bias = self.metric.prepare_database(db)
+            self._bias = None
+        if self._bias is None:
+            tomb = jnp.where(self._live, 0.0, backends.MASK_VALUE).astype(
+                jnp.float32
+            )
+            bias = (
+                tomb
+                if self._metric_bias is None
+                else jnp.maximum(
+                    tomb + self._metric_bias.astype(jnp.float32),
+                    backends.MASK_VALUE,
+                )
+            )
+            self._bias = bias
+        return self._db_proc, self._bias
+
+    def _invalidate(self, *, rows_changed: bool):
+        if rows_changed:
+            self._db_proc = None
+            self._metric_bias = None
+        self._bias = None
+
+    # -- search --------------------------------------------------------------
+
+    def search(self, queries: jnp.ndarray) -> SearchResult:
+        """Top-k neighbours of each query row: (M, D) -> SearchResult (M, k).
+
+        Query batches larger than ``spec.query_block`` are processed in
+        equal-shaped tiles (one compiled program) to bound the score tile.
+        If fewer than k live rows exist (mass deletes), the tail of each
+        result row is filled with sentinel values (float32 min) and
+        arbitrary indices of masked rows.
+        """
+        queries = jnp.asarray(queries)
+        if queries.ndim != 2:
+            raise ValueError(f"queries must be (M, D), got {queries.shape}")
+        if queries.shape[1] != self.dim:
+            raise ValueError(
+                f"query dim {queries.shape[1]} != index dim {self.dim}"
+            )
+        if self.spec.dtype is not None:
+            queries = queries.astype(jnp.dtype(self.spec.dtype))
+        m = queries.shape[0]
+        qb = self.spec.query_block
+        if m <= qb:
+            return SearchResult(*self._search_block(queries))
+        m_pad = _round_up(m, qb)
+        padded = jnp.pad(queries, ((0, m_pad - m), (0, 0)))
+        vals, idxs = [], []
+        for start in range(0, m_pad, qb):
+            v, i = self._search_block(padded[start : start + qb])
+            vals.append(v)
+            idxs.append(i)
+        return SearchResult(
+            jnp.concatenate(vals, axis=0)[:m],
+            jnp.concatenate(idxs, axis=0)[:m],
+        )
+
+    def _search_block(self, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        backend = self._resolve_backend()
+        db, bias = self._prepared()
+        spec = self.spec
+        key = (backend, q.shape, str(q.dtype), self.capacity, spec)
+
+        if backend == "xla":
+            def build():
+                def fn(q, db, bias):
+                    return backends.dense_search(
+                        q, db, bias,
+                        metric=spec.metric, k=spec.k,
+                        recall_target=spec.recall_target,
+                        reduction_input_size_override=
+                            spec.reduction_input_size_override,
+                        aggregate_to_topk=spec.aggregate_to_topk,
+                        use_bitonic=spec.use_bitonic,
+                    )
+                return fn
+        elif backend == "pallas":
+            interpret = self._interpret
+            def build():
+                def fn(q, db, bias):
+                    return backends.pallas_search(
+                        q, db, bias,
+                        metric=spec.metric, k=spec.k,
+                        recall_target=spec.recall_target,
+                        block_m=spec.block_m, max_block_n=spec.max_block_n,
+                        interpret=interpret,
+                        aggregate_to_topk=spec.aggregate_to_topk,
+                        use_bitonic=spec.use_bitonic,
+                        reduction_input_size_override=
+                            spec.reduction_input_size_override,
+                    )
+                return fn
+        elif backend == "sharded":
+            mesh, db_axis = self._mesh, self._db_axis
+            batch_axis = self._batch_axis
+            if batch_axis is not None and q.shape[0] % mesh.shape[batch_axis]:
+                batch_axis = None  # replicate queries that do not divide
+            key = key + (id(mesh), db_axis, batch_axis)
+            def build():
+                searcher = backends.make_sharded_search_fn(
+                    mesh, metric=spec.metric, k=spec.k,
+                    recall_target=spec.recall_target,
+                    db_axis=db_axis, batch_axis=batch_axis,
+                    use_bitonic=spec.use_bitonic,
+                )
+                jitted = jax.jit(searcher)
+                qsharding = NamedSharding(mesh, P(batch_axis, None))
+                def fn(q, db, bias):
+                    return jitted(jax.device_put(q, qsharding), db, bias)
+                return fn
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+
+        fn = self._cache.get(key, build)
+        return fn(q, db, bias)
+
+    # -- updates (the paper's frequent-update path) --------------------------
+
+    def add(self, rows: jnp.ndarray) -> "Index":
+        """Append rows; grows capacity in ``capacity_block`` steps.
+
+        No index rebuild: the metric precompute (half norms / row
+        normalization, O(N) element-wise) and the bin plan are re-derived
+        lazily on the next search.
+        """
+        rows = jnp.atleast_2d(jnp.asarray(rows))
+        if rows.shape[1] != self.dim:
+            raise ValueError(f"row dim {rows.shape[1]} != index dim {self.dim}")
+        r = rows.shape[0]
+        required = self._size + r
+        if required > self.capacity:
+            # Linear growth in capacity_block steps, not doubling: spare
+            # capacity is tombstone-masked but still *scored* on every
+            # search, so over-allocation costs FLOPs, not just memory.
+            block = self._capacity_block
+            if self._mesh is not None:
+                block = math.lcm(block, self._mesh.shape[self._db_axis])
+            new_cap = _round_up(required, block)
+            grow = new_cap - self.capacity
+            self._db = jnp.pad(self._db, ((0, grow), (0, 0)))
+            self._live = jnp.pad(self._live, (0, grow))
+            if self._mesh is not None:
+                self._reshard()
+        self._db = self._db.at[self._size : required].set(
+            rows.astype(self._db.dtype)
+        )
+        self._live = self._live.at[self._size : required].set(True)
+        self._size = required
+        self._num_live += r
+        self._invalidate(rows_changed=True)
+        return self
+
+    def delete(self, ids) -> "Index":
+        """Tombstone rows by index: masked out via the kernel bias row.
+
+        Deleted slots are not reclaimed (append-only storage); their ids
+        never appear in subsequent search results.
+        """
+        ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
+        self._live = self._live.at[ids].set(False)
+        # Recount rather than decrement: ids may repeat (within a call or
+        # across calls) and a gather-then-sum would count those twice.
+        self._num_live = int(jnp.sum(self._live))
+        self._invalidate(rows_changed=False)
+        return self
+
+    # -- sharding ------------------------------------------------------------
+
+    def shard(
+        self,
+        mesh: Mesh,
+        *,
+        db_axis: str = "model",
+        batch_axis: Optional[str] = None,
+    ) -> "Index":
+        """Return a mesh-sharded copy: rows P(db_axis, None), queries
+        optionally sharded over ``batch_axis``.
+
+        Capacity is padded (with tombstoned rows) to a multiple of the shard
+        count; recall accounting against the global N is handled by the
+        sharded backend internally.
+        """
+        n_shards = mesh.shape[db_axis]
+        cap = _round_up(self.capacity, n_shards)
+        db, live = self._db, self._live
+        if cap > self.capacity:
+            db = jnp.pad(db, ((0, cap - self.capacity), (0, 0)))
+            live = jnp.pad(live, (0, cap - self.capacity))
+        out = Index(
+            self.spec.with_backend("sharded"), db, live,
+            size=self._size, num_live=self._num_live,
+            capacity_block=self._capacity_block,
+            mesh=mesh, db_axis=db_axis, batch_axis=batch_axis,
+            interpret=self._interpret,
+        )
+        out._reshard()
+        return out
+
+    def _reshard(self):
+        assert self._mesh is not None
+        self._db = jax.device_put(
+            self._db, NamedSharding(self._mesh, P(self._db_axis, None))
+        )
+        self._live = jax.device_put(
+            self._live, NamedSharding(self._mesh, P(self._db_axis))
+        )

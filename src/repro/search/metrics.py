@@ -1,0 +1,169 @@
+"""Metric registry: the single owner of score transforms and sign conventions.
+
+Every backend (xla, pallas, sharded) reduces every metric to ONE internal
+problem: *maximize* ``<q', x'> + bias(x')`` where ``q'``/``x'`` are the
+metric-prepared queries/database and ``bias`` is an additive per-row term
+folded into the kernel's bias row.  The registry entry for a metric supplies
+the preparation functions, the bias, and whether the public values are the
+negated internal scores.
+
+Value contract (the one place it is documented — shims and kernels refer
+here):
+
+  * ``mips``:   values are inner products ``<q, x>``; descending,
+                higher is better.
+  * ``cosine``: values are cosine similarities (queries and database rows
+                l2-normalized); descending, higher is better.
+  * ``l2``:     values are the paper's *relaxed distances*
+                ``||x||^2/2 - <q, x>`` (Eq. 19) — the query norm is dropped,
+                so they are monotone in true Euclidean distance per query
+                but are NOT the true distances; ascending, lower is better.
+                Internally every backend maximizes ``<q,x> - ||x||^2/2`` and
+                negates exactly once at the API boundary, so values agree
+                across backends to float tolerance.
+
+``exact`` baselines (Faiss-Flat analogues) follow the same contract and are
+what the parity/recall tests compare against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Metric",
+    "register_metric",
+    "get_metric",
+    "available_metrics",
+    "half_norms",
+    "l2_normalize",
+    "exact_mips",
+    "exact_l2nns",
+    "exact_cosine_nns",
+    "exact_search",
+]
+
+Array = jnp.ndarray
+
+
+def half_norms(database: Array) -> Array:
+    """Precomputed ``||x||^2 / 2`` per database row (Eq. 19)."""
+    return 0.5 * jnp.sum(jnp.square(database), axis=-1)
+
+
+def l2_normalize(x: Array, eps: float = 1e-12) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One similarity/distance mode, reduced to biased-MIPS form.
+
+    Attributes:
+      name: registry key.
+      negate_output: True when public values are ascending distances
+        (internal max-scores negated once at the API boundary).
+      prepare_database: db -> (db', row_bias or None).  Called once per
+        database change by ``Index`` (the precompute the paper calls
+        "index-free": O(N) element-wise work, no data structure).
+      prepare_queries: q -> q' applied on every search.
+      exact: (q, db_raw, k) -> (values, indices) exact baseline obeying the
+        same value contract (db_raw is the *unprepared* database).
+    """
+
+    name: str
+    negate_output: bool
+    prepare_database: Callable[[Array], Tuple[Array, Optional[Array]]]
+    prepare_queries: Callable[[Array], Array]
+    exact: Callable[[Array, Array, int], Tuple[Array, Array]]
+
+
+_REGISTRY: Dict[str, Metric] = {}
+
+
+def register_metric(metric: Metric, *, overwrite: bool = False) -> Metric:
+    if metric.name in _REGISTRY and not overwrite:
+        raise ValueError(f"metric {metric.name!r} already registered")
+    _REGISTRY[metric.name] = metric
+    return metric
+
+
+def get_metric(metric) -> Metric:
+    if isinstance(metric, Metric):
+        return metric
+    try:
+        return _REGISTRY[metric]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric {metric!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_metrics() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --- Exact baselines (recall evaluation / Faiss-Flat analogue) --------------
+
+
+def exact_mips(queries, database, k: int = 10):
+    scores = jnp.einsum("ik,jk->ij", queries, database)
+    return jax.lax.top_k(scores, k)
+
+
+def exact_l2nns(queries, database, k: int = 10):
+    dists = half_norms(database)[None, :] - jnp.einsum(
+        "ik,jk->ij", queries, database
+    )
+    vals, idxs = jax.lax.top_k(-dists, k)
+    return -vals, idxs
+
+
+def exact_cosine_nns(queries, database, k: int = 10):
+    scores = jnp.einsum(
+        "ik,jk->ij", l2_normalize(queries), l2_normalize(database)
+    )
+    return jax.lax.top_k(scores, k)
+
+
+def exact_search(queries, database, k: int = 10, *, metric="mips"):
+    """Exact top-k under any registered metric (same value contract)."""
+    return get_metric(metric).exact(queries, database, k)
+
+
+# --- Built-in metrics -------------------------------------------------------
+
+register_metric(
+    Metric(
+        name="mips",
+        negate_output=False,
+        prepare_database=lambda db: (db, None),
+        prepare_queries=lambda q: q,
+        exact=exact_mips,
+    )
+)
+
+register_metric(
+    Metric(
+        name="l2",
+        negate_output=True,
+        # bias = -||x||^2/2: maximizing <q,x> + bias == minimizing the
+        # relaxed distance (Eq. 19, one COP folded into the bias row).
+        prepare_database=lambda db: (db, -half_norms(db)),
+        prepare_queries=lambda q: q,
+        exact=exact_l2nns,
+    )
+)
+
+register_metric(
+    Metric(
+        name="cosine",
+        negate_output=False,
+        prepare_database=lambda db: (l2_normalize(db), None),
+        prepare_queries=l2_normalize,
+        exact=exact_cosine_nns,
+    )
+)

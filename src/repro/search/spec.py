@@ -1,0 +1,76 @@
+"""SearchSpec: the frozen, hashable description of a search problem.
+
+One spec owns everything that was previously scattered across keyword
+arguments of five entry points: the metric, k, the recall target, the
+backend choice, the compute dtype, and the kernel block sizes.  Because the
+spec is frozen and hashable it doubles as (part of) the compile-cache key —
+two searches with the same spec and the same operand shapes share one traced
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["BACKENDS", "SearchSpec"]
+
+BACKENDS = ("auto", "xla", "pallas", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Frozen description of an approximate-KNN search problem.
+
+    Attributes:
+      metric: registered metric name ("mips", "l2", "cosine", ...).
+      k: number of neighbours returned per query.
+      recall_target: analytic E[recall] target used to plan bins (Eq. 14).
+      backend: "auto" (sharded if a mesh is attached, else pallas on TPU,
+        else xla), or an explicit "xla" | "pallas" | "sharded".
+      dtype: optional compute dtype name (e.g. "bfloat16") the operands are
+        cast to before the distance matmul; None inherits the input dtype.
+      block_m / max_block_n: Pallas tile sizes (queries resident per grid
+        step / upper bound on the database tile, rounded to the bin size).
+      query_block: `.search` auto-tiles query batches larger than this so
+        the (query_block, N) score tile bounds VMEM/host memory.
+      aggregate_to_topk: run ExactRescoring (True) or return the raw L bin
+        winners (False).
+      use_bitonic: rescore with the paper-faithful bitonic network instead
+        of ``lax.top_k``.  Off by default: compiling the bitonic network
+        inside jit is pathologically slow on CPU XLA (minutes at L=256),
+        and ``lax.top_k`` over the L candidates is exact either way.
+      reduction_input_size_override: recall-accounting N for sharded inputs
+        (paper §7); -1 means "use the operand's own N".
+    """
+
+    metric: str = "mips"
+    k: int = 10
+    recall_target: float = 0.95
+    backend: str = "auto"
+    dtype: Optional[str] = None
+    block_m: int = 256
+    max_block_n: int = 1024
+    query_block: int = 4096
+    aggregate_to_topk: bool = True
+    use_bitonic: bool = False
+    reduction_input_size_override: int = -1
+
+    def __post_init__(self):
+        if self.k <= 0:
+            raise ValueError(f"k must be positive, got {self.k}")
+        if not 0.0 < self.recall_target < 1.0:
+            raise ValueError(
+                f"recall_target must be in (0, 1), got {self.recall_target}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}"
+            )
+        if self.block_m <= 0 or self.max_block_n <= 0 or self.query_block <= 0:
+            raise ValueError("block sizes must be positive")
+        # Metric existence is validated lazily by the registry (metrics.py)
+        # so user-registered metrics can be referenced before import order
+        # would otherwise allow.
+
+    def with_backend(self, backend: str) -> "SearchSpec":
+        return dataclasses.replace(self, backend=backend)

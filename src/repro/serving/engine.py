@@ -5,11 +5,17 @@ The engine runs a fixed decode batch; requests join at free slots after
 their (batched) prefill and leave on EOS/length.  All device work is two
 jitted callables (prefill_step, decode_step) so the engine loop is pure
 bookkeeping — this is the structure a production server keeps, minus RPC.
+
+Retrieval augmentation goes through the unified ``repro.search`` front door:
+attach an ``Index`` over retrieval keys (``attach_retrieval``) and the
+engine can look up neighbour tokens per decode step — and, because the
+index is index-free, ingest new keys between steps with no rebuild
+(``retrieval_index.add(...)``), the paper's frequent-update serving story.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models import transformer as tfm
+from repro.search import Index
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -46,6 +53,37 @@ class ServingEngine:
         self.rng = jax.random.PRNGKey(seed)
         self.cur_index = 0
         self._slots: List[Optional[Request]] = [None] * batch
+        self.retrieval_index: Optional[Index] = None
+        self.retrieval_tokens: Optional[jnp.ndarray] = None
+
+    # -- retrieval (kNN-LM style) via the unified search API ----------------
+    def attach_retrieval(
+        self, index: Index, value_tokens: jnp.ndarray
+    ) -> "ServingEngine":
+        """Attach a ``repro.search.Index`` over retrieval keys.
+
+        ``value_tokens[i]`` is the token predicted by key row ``i`` (aligned
+        with the index's append-only row space, so ``index.add`` callers
+        extend both together).
+        """
+        self.retrieval_index = index
+        self.retrieval_tokens = jnp.asarray(value_tokens)
+        return self
+
+    def retrieve(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (scores (M, k), neighbour tokens (M, k)) from the attached index."""
+        if self.retrieval_index is None:
+            raise ValueError("no retrieval index attached; call attach_retrieval")
+        if self.retrieval_tokens.shape[0] < self.retrieval_index.num_appended:
+            # jnp.take clamps out-of-range indices, which would silently map
+            # newly added keys onto the last stale token — fail loudly.
+            raise ValueError(
+                f"retrieval_tokens covers {self.retrieval_tokens.shape[0]} rows "
+                f"but the index has {self.retrieval_index.num_appended} appended "
+                "rows; extend value tokens alongside retrieval_index.add(...)"
+            )
+        vals, idxs = self.retrieval_index.search(queries)
+        return vals, jnp.take(self.retrieval_tokens, idxs, axis=0)
 
     # -- batched prefill: replay prompts through the decode step ------------
     def admit(self, requests: List[Request]):

@@ -2,6 +2,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; module skips cleanly without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.binning import (

@@ -16,9 +16,9 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.distributed import sharded_mips, sharded_l2nns
 from repro.retrieval.datastore import KNNDatastore, knn_lm_logits
+from repro.search import Index, exact_search
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 q = jax.random.normal(key, (16, 64))
 db = jax.random.normal(jax.random.PRNGKey(1), (4096, 64))
@@ -49,6 +49,21 @@ lm_logits = jax.random.normal(jax.random.PRNGKey(3), (16, 1000))
 mixed = knn_lm_logits(lm_logits, scores, toks)
 assert mixed.shape == (16, 1000)
 assert bool(jnp.all(jnp.isfinite(mixed)))
+
+# unified front door: sharded Index with add/delete on 8 real shards
+for metric in ("mips", "l2", "cosine"):
+    sharded = Index.build(db[:3072], metric=metric, k=10,
+                          recall_target=0.95).shard(
+        mesh, db_axis="model", batch_axis="data")
+    sharded.add(db[3072:])
+    _, si = sharded.search(q)
+    _, ei = exact_search(q, db, 10, metric=metric)
+    sr = recall(si, ei)
+    assert sr >= sharded.expected_recall - 0.07, f"{metric} sharded {sr}"
+sharded.delete(np.asarray(ei)[:, 0])
+_, si2 = sharded.search(q)
+assert not set(np.asarray(si2).ravel().tolist()) & set(
+    np.asarray(ei)[:, 0].tolist())
 print("DISTRIBUTED_OK")
 """
 

@@ -142,6 +142,37 @@ def test_serving_engine_generates():
     assert out == {} or all(len(v) <= 4 for v in out.values())
 
 
+def test_serving_engine_retrieval_via_search_index():
+    """The engine's retrieval hook goes through the unified repro.search
+    front door, including in-place datastore growth between lookups."""
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.search import Index
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("internlm2-1.8b-smoke")
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, batch=2, max_seq=64)
+
+    keys = jax.random.normal(jax.random.PRNGKey(1), (1024, 32))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1024,), 0, 100)
+    eng.attach_retrieval(Index.build(keys, metric="mips", k=4), tokens)
+    q = keys[:3] + 0.01  # near-duplicates: top-1 should be the row itself
+    scores, toks = eng.retrieve(q)
+    assert scores.shape == toks.shape == (3, 4)
+    _, idxs = eng.retrieval_index.search(q)
+    assert (np.asarray(idxs)[:, 0] == np.arange(3)).all()
+
+    # serve-time ingestion: add new keys, no rebuild, immediately searchable
+    new_keys = jax.random.normal(jax.random.PRNGKey(3), (8, 32))
+    eng.retrieval_index.add(new_keys)
+    with pytest.raises(ValueError, match="extend value tokens"):
+        eng.retrieve(q)  # stale token table must fail loudly, not clamp
+    eng.retrieval_tokens = jnp.pad(tokens, (0, eng.retrieval_index.capacity - 1024))
+    _, idxs = eng.retrieval_index.search(new_keys[:2] + 0.01)
+    assert (np.asarray(idxs)[:, 0] >= 1024).all()
+
+
 def test_cache_bytes_accounting():
     from repro.configs import get_config
     from repro.serving.kvcache import cache_bytes_per_token, plan_max_seq

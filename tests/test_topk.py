@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; module skips cleanly without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partial_reduce import partial_reduce
