@@ -1,0 +1,160 @@
+"""Steady-state search benchmark: QPS + dispatch overhead, stream vs loop.
+
+Measures what the packed-state PR changed — per-search host/HBM overhead —
+across a backend x metric x (M, N, D) grid:
+
+  * steady-state QPS of ``Index.search`` over pre-packed operands,
+  * dispatches per search (``backends.DISPATCH_COUNTS``): the streaming
+    executor issues ONE for a multi-block batch, the per-block Python loop
+    (``SearchSpec(stream=False)``) issues M / query_block,
+  * the stream-over-loop wall-clock speedup ("before/after" of this PR).
+
+Writes ``BENCH_search.json`` (one run per invocation; history lives in git —
+commit full-grid runs, CI smoke runs only touch the working tree).
+
+  python benchmarks/bench_search.py                  # full grid
+  python benchmarks/bench_search.py --smoke          # CI: one tiny config,
+                                                     # asserts the dispatch
+                                                     # contract + no big
+                                                     # stream regression
+
+CPU wall-clocks are machine-relative; the dispatch counts are exact
+everywhere.  On CPU the dispatch overhead is a large fraction of a small
+search, which is exactly why the smoke config can see the streaming win.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.search import Index, SearchSpec, backends
+
+# (M, N, D) grid: M spans single-block through 16-block batches at the
+# query_block below; N/D stay CPU-tractable while keeping the matmul real.
+# The (4096, 2048, 32) entry is the dispatch-bound corner (16 small blocks)
+# where the streaming executor's win is largest.
+FULL_GRID = [
+    (256, 4096, 64),
+    (1024, 4096, 64),
+    (2048, 16384, 64),
+    (2048, 4096, 128),
+    (4096, 2048, 32),
+]
+FULL_BACKENDS = ("xla", "pallas")
+FULL_METRICS = ("mips", "l2", "cosine")
+QUERY_BLOCK = 256
+
+SMOKE_GRID = [(512, 2048, 32)]
+SMOKE_QUERY_BLOCK = 32  # 512 queries = 16 blocks (criterion: M >= 4*qb)
+
+
+def _time_search(index, queries, repeats, passes=3):
+    """Best-of-``passes`` mean wall per search (min filters scheduler noise)."""
+    index.search(queries).values.block_until_ready()  # warmup/compile
+    best = float("inf")
+    for _ in range(passes):
+        backends.reset_dispatch_counts()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = index.search(queries)
+        out.values.block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / repeats)
+        dispatches = sum(backends.DISPATCH_COUNTS.values())
+    return best, dispatches / repeats
+
+
+def bench_config(backend, metric, m, n, d, query_block, repeats, emit):
+    key = jax.random.PRNGKey(0)
+    kq, kd = jax.random.split(key)
+    db = jax.random.normal(kd, (n, d))
+    queries = jax.random.normal(kq, (m, d))
+    row = {
+        "backend": backend, "metric": metric,
+        "m": m, "n": n, "d": d, "query_block": query_block,
+    }
+    for mode, stream in (("stream", True), ("loop", False)):
+        index = Index.build(
+            db,
+            spec=SearchSpec(
+                metric=metric, k=10, backend=backend,
+                query_block=query_block, stream=stream,
+            ),
+        )
+        wall, dispatches = _time_search(index, queries, repeats)
+        row[mode] = {
+            "wall_s_per_search": wall,
+            "qps": m / wall,
+            "dispatches_per_search": dispatches,
+        }
+    row["stream_speedup"] = (
+        row["loop"]["wall_s_per_search"] / row["stream"]["wall_s_per_search"]
+    )
+    emit(
+        f"{backend},{metric},M={m},N={n},D={d}: "
+        f"stream {row['stream']['qps']:.0f} qps "
+        f"({row['stream']['dispatches_per_search']:.0f} dispatch) vs "
+        f"loop {row['loop']['qps']:.0f} qps "
+        f"({row['loop']['dispatches_per_search']:.0f} dispatches) "
+        f"-> {row['stream_speedup']:.2f}x"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="BENCH_search.json")
+    ap.add_argument("--repeats", type=int, default=0, help="0 = auto")
+    args = ap.parse_args()
+
+    if args.smoke:
+        grid, bks, mets, qb = SMOKE_GRID, ("xla",), ("mips",), SMOKE_QUERY_BLOCK
+        repeats = args.repeats or 20
+    else:
+        grid, bks, mets, qb = FULL_GRID, FULL_BACKENDS, FULL_METRICS, QUERY_BLOCK
+        repeats = args.repeats or 10
+
+    results = []
+    for backend in bks:
+        for metric in mets:
+            for m, n, d in grid:
+                results.append(
+                    bench_config(backend, metric, m, n, d, qb, repeats, print)
+                )
+
+    report = {
+        "meta": {
+            "jax": jax.__version__,
+            "device": jax.default_backend(),
+            "platform": platform.platform(),
+            "repeats": repeats,
+            "smoke": args.smoke,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out} ({len(results)} configs)")
+
+    if args.smoke:
+        # The hard perf contract (deterministic): one dispatch per streamed
+        # batch, M/qb for the loop.  Wall-clock is noisy in CI, so only a
+        # gross streaming regression fails.
+        r = results[0]
+        assert r["stream"]["dispatches_per_search"] == 1, r["stream"]
+        assert r["loop"]["dispatches_per_search"] == r["m"] / r["query_block"]
+        # Wall-clock gets slack for noisy CI machines (the config above
+        # measures ~1.7x locally); only a gross regression fails.
+        assert r["stream_speedup"] > 0.8, (
+            f"streaming executor only {r['stream_speedup']:.2f}x the "
+            "per-block loop — dispatch overhead regression"
+        )
+        print("smoke contract OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,5 +13,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-fast}" == "full" ]]; then
     exec python -m pytest -x -q
 else
-    exec python -m pytest -x -q -m "not slow"
+    # Perf contract first (fail fast on re-introduced per-search padding /
+    # dispatch-loop regressions), then the benchmark smoke run, then the
+    # rest of the fast tier (test_packed already ran — don't repeat it).
+    # (smoke writes to an untracked path so it never clobbers the
+    # committed full-grid BENCH_search.json seed)
+    python -m pytest -x -q tests/test_packed.py
+    python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
+    exec python -m pytest -x -q -m "not slow" --ignore=tests/test_packed.py
 fi

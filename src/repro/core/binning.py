@@ -17,7 +17,13 @@ __all__ = [
     "bins_for_recall_approx",
     "BinPlan",
     "plan_bins",
+    "round_up",
 ]
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= ``x`` (tiling/layout helper)."""
+    return ((x + mult - 1) // mult) * mult
 
 
 def expected_recall(num_bins: int, k: int) -> float:

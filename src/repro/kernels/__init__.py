@@ -1,4 +1,4 @@
 """Pallas TPU kernels for the paper's compute hot-spot (PartialReduce)."""
 from repro.kernels.ops import l2_topk, mips_topk
-from repro.kernels.partial_reduce import partial_reduce_pallas
+from repro.kernels.partial_reduce import partial_reduce_packed, partial_reduce_pallas
 from repro.kernels.ref import partial_reduce_ref

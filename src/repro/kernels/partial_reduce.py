@@ -26,7 +26,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["partial_reduce_pallas"]
+from repro.core.binning import round_up
+
+__all__ = ["partial_reduce_packed", "partial_reduce_pallas"]
+
+
+def partial_reduce_packed(
+    queries: jnp.ndarray,   # (m, d) — any m, d <= database's lane-padded d
+    database: jnp.ndarray,  # (n_pad, d_pad) pre-packed to the tiling contract
+    bias: jnp.ndarray,      # (1, n_pad) f32, tail already masked
+    *,
+    bin_size: int,
+    block_m: int = 256,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Query-side front half of the tiling contract over packed operands.
+
+    The database and bias must already be packed (D padded to a lane
+    multiple, N padded to ``block_n`` with masked tail) — see
+    ``repro.search.packed``.  Only the (m, d) query block is padded here,
+    so repeated searches against the same database perform zero
+    database-sized copies.  Returns (values, indices) with the query
+    padding already stripped: both (m, n_pad // bin_size).
+    """
+    m, d = queries.shape
+    d_pad = database.shape[1]
+    if d > d_pad:
+        raise ValueError(f"query dim {d} exceeds packed dim {d_pad}")
+    m_pad = round_up(max(m, block_m), block_m)
+    q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
+    vals, idxs = partial_reduce_pallas(
+        q, database, bias,
+        bin_size=bin_size, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    return vals[:m], idxs[:m]
 
 
 def _partial_reduce_kernel(

@@ -6,6 +6,12 @@ accounting, all-gather, global ExactRescoring) — plus the kNN-LM
 interpolation head.  Because the Index is index-free, the datastore supports
 frequent updates: ``extend`` appends new pairs and ``forget`` tombstones old
 ones with no rebuild.
+
+Steady-state serving contract (inherited from the packed search state):
+``lookup`` never prepares or pads the (N, D) key matrix — that happened
+once at construction / ``extend`` time — and a multi-block query batch is
+one device dispatch (the streaming executor), so datastore QPS tracks the
+kernel roofline rather than dispatch overhead.
 """
 from __future__ import annotations
 
@@ -32,9 +38,16 @@ class KNNDatastore:
         db_axis: str = "model",
         batch_axis: Optional[str] = "data",
         metric: str = "mips",
+        capacity: Optional[int] = None,
     ):
+        # Pre-allocating ``capacity`` keeps ``extend`` on the cheap path:
+        # append-slice patches only, no packed-layout growth copies.
+        # With a mesh, build backend="sharded" so no throwaway unmeshed
+        # packed layout is materialized before shard() packs the real one.
         self.index = Index.build(
-            keys, metric=metric, k=k, recall_target=recall_target
+            keys, metric=metric, k=k, recall_target=recall_target,
+            capacity=capacity,
+            backend="sharded" if mesh is not None else "auto",
         )
         if mesh is not None:
             self.index = self.index.shard(
@@ -78,9 +91,20 @@ class KNNDatastore:
         return self
 
     def forget(self, ids) -> "KNNDatastore":
-        """Tombstone datastore rows by index (e.g. stale documents)."""
+        """Tombstone datastore rows by index (e.g. stale documents).
+
+        Device-side bias patch only — never blocks the decode loop on a
+        host sync (``len(datastore)`` is what materializes the count).
+        """
         self.index.delete(ids)
         return self
+
+    def stats(self) -> dict:
+        """Compile-cache and packing observability for serving dashboards."""
+        info = dict(self.index.cache_info())
+        info["capacity"] = self.index.capacity
+        info["appended"] = self.index.num_appended
+        return info
 
 
 def knn_lm_logits(

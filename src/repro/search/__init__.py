@@ -5,13 +5,39 @@ One API over every backend (paper Listings 1/2, Alg. 2, §7):
     from repro.search import Index
 
     index = Index.build(db, metric="l2", k=10, recall_target=0.95)
-    values, indices = index.search(queries)      # auto backend, auto-tiled
-    index.add(new_rows).delete([3, 17])          # index-free updates
+    values, indices = index.search(queries)      # auto backend, one dispatch
+    index.add(new_rows).delete(stale_ids)        # index-free updates
     sharded = index.shard(mesh, db_axis="model") # distributed search
 
 Backends: "auto" | "xla" | "pallas" | "sharded" (``SearchSpec.backend``).
 Metrics: "mips" | "l2" | "cosine", extensible via ``register_metric``; the
 value/sign contract lives in ``repro.search.metrics``.
+
+Packed search state (the performance-model contract, Eq. 10)
+------------------------------------------------------------
+
+``Index`` holds a device-resident ``PackedState`` (``repro.search.packed``):
+the metric-prepared database in the backend's native padded layout, plus
+one fused bias row carrying the metric bias, tombstone mask, and tail mask.
+It is built at ``Index.build`` / ``Index.shard`` time — never during a
+search — so the steady-state dispatch touches the (N, D) database exactly
+once and pads only the (M, D) query block.  Invalidation rules:
+
+  * ``add(rows)``     — patches the appended slice only; the metric
+    precompute runs on the new rows alone (``Metric.prepare_update``).
+    Capacity growth re-lays-out the packed arrays (one device copy) but
+    never re-prepares existing rows.  Non-row-wise metrics
+    (``Metric.rowwise=False``) force a full repack, still at add() time.
+  * ``delete(ids)``   — patches only the bias row (O(|ids|)); no host
+    sync: the live count stays a lazy device scalar until ``size`` reads.
+  * ``shard(mesh)``   — relayouts (copies) the packed operands onto the
+    mesh; the metric precompute carries over.
+  * a different resolved backend under ``backend="auto"`` — full repack
+    on the next ``pack()``.
+
+Multi-block query batches (M > ``SearchSpec.query_block``) execute as one
+compiled streaming program (``lax.map``) — a single device dispatch —
+unless ``SearchSpec(stream=False)`` selects the per-block loop baseline.
 
 ``repro.core.knn``, ``repro.kernels.ops`` and ``repro.core.distributed``
 remain as deprecated thin shims over this package.
@@ -25,12 +51,17 @@ from repro.core.binning import (  # re-export: planning is part of the API
 from repro.core.rescoring import exact_rescoring
 from repro.core.topk import approx_max_k, approx_min_k
 from repro.search.backends import (
+    DISPATCH_COUNTS,
     MASK_VALUE,
+    TRACE_COUNTS,
     CompileCache,
     default_backend,
     dense_search,
     make_sharded_search_fn,
     pallas_search,
+    pallas_search_packed,
+    reset_dispatch_counts,
+    reset_trace_counts,
 )
 from repro.search.functional import (
     cosine_nns,
@@ -49,6 +80,13 @@ from repro.search.metrics import (
     available_metrics,
     get_metric,
     register_metric,
+)
+from repro.search.packed import (
+    PACK_EVENTS,
+    PackedState,
+    fuse_bias,
+    pack_state,
+    reset_pack_events,
 )
 from repro.search.spec import BACKENDS, SearchSpec
 
@@ -77,9 +115,21 @@ __all__ = [
     "default_backend",
     "dense_search",
     "pallas_search",
+    "pallas_search_packed",
     "make_sharded_search_fn",
     "CompileCache",
     "MASK_VALUE",
+    # packed state
+    "PackedState",
+    "pack_state",
+    "fuse_bias",
+    # observability
+    "TRACE_COUNTS",
+    "DISPATCH_COUNTS",
+    "PACK_EVENTS",
+    "reset_trace_counts",
+    "reset_dispatch_counts",
+    "reset_pack_events",
     # planning / operator re-exports
     "BinPlan",
     "plan_bins",

@@ -13,7 +13,16 @@ an additive per-row bias (metric bias + tombstone mask), all returning the
 
 ``TRACE_COUNTS`` increments once per *trace* of each backend (the body of a
 jitted function only runs while tracing), which is how the compile-cache
-tests assert "no retrace on same-shape repeat searches".
+tests assert "no retrace on same-shape repeat searches".  ``DISPATCH_COUNTS``
+increments once per compiled-callable *invocation* from ``Index`` — the
+streaming executor's "one dispatch for an 8-block batch" contract is
+asserted against it.  Both have ``reset_*`` helpers; tests should reset
+rather than do cross-test counter arithmetic.
+
+The steady-state entry points (``dense_search``, ``pallas_search_packed``)
+consume pre-packed operands from ``repro.search.packed`` and perform no
+database-sized padding or preparation; ``pallas_search`` keeps the one-shot
+pack-inside-jit behavior for the functional API and the legacy shims.
 """
 from __future__ import annotations
 
@@ -26,23 +35,27 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.binning import plan_bins
+from repro.core.binning import plan_bins, round_up
 from repro.core.partial_reduce import partial_reduce_with_plan
 from repro.core.rescoring import exact_rescoring
 from repro.core.topk import approx_max_k
-from repro.kernels.partial_reduce import partial_reduce_pallas
+from repro.kernels.partial_reduce import partial_reduce_packed, partial_reduce_pallas
 from repro.parallel.sharding import shard_map_compat
 from repro.search.metrics import get_metric
 
 __all__ = [
     "MASK_VALUE",
     "TRACE_COUNTS",
+    "DISPATCH_COUNTS",
     "CompileCache",
     "dense_search",
     "pallas_search",
+    "pallas_search_packed",
     "prepare_pallas_inputs",
     "make_sharded_search_fn",
     "default_backend",
+    "reset_trace_counts",
+    "reset_dispatch_counts",
 ]
 
 # Finite -inf surrogate (float32 min): keeps the MXU/VPU paths free of NaN
@@ -51,6 +64,21 @@ MASK_VALUE = float(np.finfo(np.float32).min)
 
 # backend name -> number of jit traces (test observability hook).
 TRACE_COUNTS = collections.Counter()
+
+# backend name -> number of compiled-callable invocations issued by Index
+# (one per device dispatch; the streaming executor issues exactly one for
+# an arbitrarily large query batch).
+DISPATCH_COUNTS = collections.Counter()
+
+
+def reset_trace_counts() -> None:
+    """Zero ``TRACE_COUNTS`` (tests: reset, act, assert — no arithmetic)."""
+    TRACE_COUNTS.clear()
+
+
+def reset_dispatch_counts() -> None:
+    """Zero ``DISPATCH_COUNTS``."""
+    DISPATCH_COUNTS.clear()
 
 
 def default_backend(mesh: Optional[Mesh] = None) -> str:
@@ -86,9 +114,15 @@ class CompileCache:
     def info(self) -> dict:
         return {"hits": self.hits, "misses": self.misses, "entries": len(self._fns)}
 
+    def reset_counters(self) -> None:
+        """Zero hit/miss counters, keeping the compiled entries."""
+        self.hits = 0
+        self.misses = 0
 
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+    def clear(self) -> None:
+        """Drop every entry and zero the counters (forces rebuilds)."""
+        self._fns.clear()
+        self.reset_counters()
 
 
 # --- XLA backend ------------------------------------------------------------
@@ -165,9 +199,9 @@ def prepare_pallas_inputs(
     )
     bin_size = plan.bin_size
     block_n = bin_size * max(1, max_block_n // bin_size)
-    n_pad = _round_up(max(n, block_n), block_n)
-    m_pad = _round_up(max(m, block_m), block_m)
-    d_pad = _round_up(d, 128)
+    n_pad = round_up(max(n, block_n), block_n)
+    m_pad = round_up(max(m, block_m), block_m)
+    d_pad = round_up(d, 128)
 
     q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
     db = jnp.pad(database, ((0, n_pad - n), (0, d_pad - d)))
@@ -225,6 +259,55 @@ def _pallas_search_jit(
     return vals, idxs
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "n", "bin_size", "block_m", "block_n", "interpret",
+        "aggregate_to_topk", "use_bitonic",
+    ),
+)
+def pallas_search_packed(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: jnp.ndarray,
+    *,
+    metric: str,
+    k: int,
+    n: int,
+    bin_size: int,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-kernel search over pre-packed operands (steady-state path).
+
+    ``database`` (n_pad, d_pad) and ``row_bias`` (1, n_pad) must already
+    satisfy the kernel tiling contract — ``repro.search.packed`` builds
+    them once at index build/mutation time.  Only the (M, D) query block
+    is prepared and padded here, so the per-dispatch memory traffic
+    matches the paper's model (I_MEM ~ O(min(M, N)), Eq. 10).  ``n`` is
+    the logical row space (packed padding excluded).
+    """
+    m_obj = get_metric(metric)
+    TRACE_COUNTS["pallas"] += 1
+    q = m_obj.prepare_queries(queries)
+    vals, idxs = partial_reduce_packed(
+        q, database, row_bias,
+        bin_size=bin_size, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
+    if aggregate_to_topk:
+        vals, idxs = exact_rescoring(
+            vals, idxs, k, mode="max", use_bitonic=use_bitonic
+        )
+    if m_obj.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
 def pallas_search(
     queries: jnp.ndarray,
     database: jnp.ndarray,
@@ -240,11 +323,17 @@ def pallas_search(
     use_bitonic: bool = False,
     reduction_input_size_override: int = -1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused-kernel search (paper Alg. 2). Interpret mode auto-enables off-TPU.
+    """One-shot fused-kernel search (paper Alg. 2); packs inside jit.
 
     Same operand contract as ``dense_search`` (metric-prepared database,
     additive ``row_bias``); all three built-in metrics work here — cosine is
     plain MIPS after preparation, closing the old cosine-only-on-XLA gap.
+
+    Every call re-pads the (N, D) database inside the jitted program —
+    fine for one-shot functional use and the legacy ``kernels.ops`` shims,
+    wrong for a steady-state serving loop.  ``Index`` uses
+    ``pallas_search_packed`` over a ``repro.search.packed.PackedState``
+    instead.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.search import backends
+from repro.search.packed import fuse_bias
 from repro.search.metrics import (
     exact_cosine_nns,
     exact_l2nns,
@@ -57,13 +58,16 @@ def search(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-shot search of ``queries`` against a raw ``database``.
 
-    The database is metric-prepared on every call — use ``Index.build`` to
-    amortize that (and everything else) across calls.
+    The database is metric-prepared (and, on the pallas backend, re-packed
+    inside jit) on every call — use ``Index.build`` to amortize that into a
+    device-resident ``PackedState`` and get single-dispatch batch streaming.
     """
     m_obj = get_metric(metric)
     db, metric_bias = m_obj.prepare_database(database)
     if metric_bias is not None:
-        row_bias = metric_bias if row_bias is None else row_bias + metric_bias
+        # Same finite-mask clamp as the packed path (Appendix A.5 fusion).
+        fused = fuse_bias(metric_bias, num_rows=db.shape[0])
+        row_bias = fused if row_bias is None else row_bias + fused
     if backend == "auto":
         backend = backends.default_backend(mesh)
     if backend == "xla":

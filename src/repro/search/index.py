@@ -2,30 +2,37 @@
 
 "Index" in the Faiss sense of the word only — true to the paper there is no
 graph/IVF data structure to build or maintain.  ``Index.build`` does the
-only precompute the algorithm needs (metric preparation: half norms or row
-normalization, O(N) element-wise), so updates are cheap:
+only precompute the algorithm needs (metric preparation + packing into the
+backend's native layout, O(N) element-wise), held device-resident in a
+``repro.search.packed.PackedState`` so updates are cheap:
 
-  * ``add(rows)``    appends into spare capacity (amortized growth),
-  * ``delete(ids)``  tombstones rows via the kernel bias row,
-  * bin plans and metric precompute are re-derived lazily on next search —
+  * ``add(rows)``    appends into spare capacity and metric-prepares ONLY
+    the appended slice (amortized growth, no O(N) re-derivation),
+  * ``delete(ids)``  tombstones rows by patching the packed bias row —
+    no host sync, no O(N) work,
+  * the bin plan and the padded kernel layout are owned by the packed
+    state, rebuilt only on capacity/backend changes —
     no rebuild, the paper's "suitable for frequent updates" claim.
 
-``search`` auto-tiles large query batches (``spec.query_block``) so the
-score tile stays bounded, dispatches to the xla / pallas / sharded backend,
-and memoizes compiled callables per (shape, dtype, spec) in a
+``search`` dispatches pre-packed operands to the xla / pallas / sharded
+backend, so the steady-state dispatch never pads or prepares the (N, D)
+database (the paper's I_MEM ~ O(min(M, N)) bound, Eq. 10).  Query batches
+larger than ``spec.query_block`` run as ONE compiled streaming program
+(``lax.map`` over equal-shaped blocks) instead of a Python loop of
+dispatches; compiled callables are memoized per (shape, dtype, spec) in a
 ``CompileCache`` — repeat same-shape searches never retrace.
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.binning import BinPlan, plan_bins
-from repro.search import backends
+from repro.core.binning import BinPlan, plan_bins, round_up
+from repro.search import backends, packed as packedlib
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
 
@@ -38,10 +45,6 @@ class SearchResult(NamedTuple):
 
     values: jnp.ndarray
     indices: jnp.ndarray
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
 
 
 class Index:
@@ -58,7 +61,7 @@ class Index:
         db: jnp.ndarray,
         live: jnp.ndarray,
         size: int,
-        num_live: int,
+        num_live: Union[int, jnp.ndarray],
         *,
         capacity_block: int = 1024,
         mesh: Optional[Mesh] = None,
@@ -70,15 +73,13 @@ class Index:
         self._db = db
         self._live = live
         self._size = size          # append high-water mark (<= capacity)
-        self._num_live = num_live  # live rows (size minus tombstones)
+        self._num_live = num_live  # live rows; int, or a lazy device scalar
         self._capacity_block = capacity_block
         self._mesh = mesh
         self._db_axis = db_axis
         self._batch_axis = batch_axis
         self._interpret = interpret
-        self._db_proc = None       # metric-prepared database (lazy)
-        self._metric_bias = None   # metric's additive row bias (lazy)
-        self._bias = None          # metric bias + tombstone mask (lazy)
+        self._packed: Optional[packedlib.PackedState] = None
         self._cache = backends.CompileCache()
 
     # -- construction --------------------------------------------------------
@@ -103,6 +104,8 @@ class Index:
         ``spec`` overrides the individual (metric, k, ...) arguments when
         given.  ``capacity`` pre-allocates room for ``add`` beyond N;
         ``interpret`` forces Pallas interpret mode (auto: on except on TPU).
+        The packed search state (metric precompute, fused bias row, kernel
+        layout) is materialized here, at build time — not on first search.
         """
         if spec is None:
             spec = SearchSpec(
@@ -116,13 +119,17 @@ class Index:
         n = database.shape[0]
         cap = max(n, capacity or n)
         if cap > n:
-            cap = _round_up(cap, capacity_block)
+            cap = round_up(cap, capacity_block)
             database = jnp.pad(database, ((0, cap - n), (0, 0)))
         live = jnp.zeros((cap,), bool).at[:n].set(True)
-        return cls(
+        index = cls(
             spec, database, live, size=n, num_live=n,
             capacity_block=capacity_block, interpret=interpret,
         )
+        if spec.backend != "sharded":
+            # backend="sharded" has no mesh yet; ``shard`` packs instead.
+            index.pack()
+        return index
 
     # -- introspection -------------------------------------------------------
 
@@ -140,7 +147,14 @@ class Index:
 
     @property
     def size(self) -> int:
-        """Number of live (searchable) rows."""
+        """Number of live (searchable) rows.
+
+        ``delete`` keeps the live count as a lazy device scalar so the
+        dispatch pipeline is never blocked; reading ``size`` (or ``len``)
+        is what materializes it.
+        """
+        if not isinstance(self._num_live, int):
+            self._num_live = int(self._num_live)
         return self._num_live
 
     @property
@@ -151,11 +165,13 @@ class Index:
         return self._size
 
     def __len__(self) -> int:
-        return self._num_live
+        return self.size
 
     @property
     def plan(self) -> BinPlan:
         """Bin plan (and analytic E[recall], Eq. 13) for the current shape."""
+        if self._packed is not None:
+            return self._packed.plan
         return plan_bins(
             self.capacity, self.spec.k, self.spec.recall_target,
             reduction_input_size_override=self.spec.reduction_input_size_override,
@@ -176,7 +192,7 @@ class Index:
             f"capacity={self.capacity}, dim={self.dim}{mesh})"
         )
 
-    # -- derived state -------------------------------------------------------
+    # -- packed state --------------------------------------------------------
 
     def _resolve_backend(self) -> str:
         b = self.spec.backend
@@ -189,34 +205,32 @@ class Index:
             )
         return b
 
-    def _prepared(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(metric-prepared db, combined bias row) with lazy re-derivation."""
-        if self._db_proc is None:
-            db = self._db
-            if self.spec.dtype is not None:
-                db = db.astype(jnp.dtype(self.spec.dtype))
-            self._db_proc, self._metric_bias = self.metric.prepare_database(db)
-            self._bias = None
-        if self._bias is None:
-            tomb = jnp.where(self._live, 0.0, backends.MASK_VALUE).astype(
-                jnp.float32
-            )
-            bias = (
-                tomb
-                if self._metric_bias is None
-                else jnp.maximum(
-                    tomb + self._metric_bias.astype(jnp.float32),
-                    backends.MASK_VALUE,
-                )
-            )
-            self._bias = bias
-        return self._db_proc, self._bias
+    def pack(self) -> packedlib.PackedState:
+        """The device-resident packed operands for the resolved backend.
 
-    def _invalidate(self, *, rows_changed: bool):
-        if rows_changed:
-            self._db_proc = None
-            self._metric_bias = None
-        self._bias = None
+        Built at ``build``/``shard`` time and patched incrementally by
+        ``add``/``delete``; a full repack happens only if the resolved
+        backend changed under an ``auto`` spec or a non-row-wise metric
+        invalidated the state.
+        """
+        backend = self._resolve_backend()
+        if self._packed is None or self._packed.backend != backend:
+            self._packed = packedlib.pack_state(
+                self._db, self._live, self.metric, self.spec, backend
+            )
+            self._place_packed()
+        return self._packed
+
+    def _place_packed(self):
+        """Pin packed operands to the mesh layout (no-op unmeshed)."""
+        if self._mesh is None or self._packed is None:
+            return
+        self._packed.db = jax.device_put(
+            self._packed.db, NamedSharding(self._mesh, P(self._db_axis, None))
+        )
+        self._packed.bias = jax.device_put(
+            self._packed.bias, NamedSharding(self._mesh, P(self._db_axis))
+        )
 
     # -- search --------------------------------------------------------------
 
@@ -224,10 +238,13 @@ class Index:
         """Top-k neighbours of each query row: (M, D) -> SearchResult (M, k).
 
         Query batches larger than ``spec.query_block`` are processed in
-        equal-shaped tiles (one compiled program) to bound the score tile.
-        If fewer than k live rows exist (mass deletes), the tail of each
-        result row is filled with sentinel values (float32 min) and
-        arbitrary indices of masked rows.
+        equal-shaped tiles to bound the score tile — by default as a
+        single compiled streaming program (one device dispatch for the
+        whole batch); ``spec.stream=False`` falls back to the per-block
+        Python loop (bit-identical, one dispatch per block).  If fewer
+        than k live rows exist (mass deletes), the tail of each result row
+        is filled with sentinel values (float32 min) and arbitrary indices
+        of masked rows.
         """
         queries = jnp.asarray(queries)
         if queries.ndim != 2:
@@ -238,95 +255,193 @@ class Index:
             )
         if self.spec.dtype is not None:
             queries = queries.astype(jnp.dtype(self.spec.dtype))
+        if queries.shape[0] <= self.spec.query_block:
+            return SearchResult(*self._search_block(queries))
+        if self.spec.stream:
+            return self._search_stream(queries)
+        return self._search_loop(queries)
+
+    def _batch_axis_for(self, rows: int) -> Optional[str]:
+        """Query batch axis, dropped when it does not divide the block."""
+        batch_axis = self._batch_axis
+        if batch_axis is not None and rows % self._mesh.shape[batch_axis]:
+            return None  # replicate queries that do not divide
+        return batch_axis
+
+    def _search_block(self, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        backend = self._resolve_backend()
+        pk = self.pack()
+        key = ("block", backend, q.shape, str(q.dtype), self.capacity, self.spec)
+        batch_axis = None
+        if backend == "sharded":
+            batch_axis = self._batch_axis_for(q.shape[0])
+            key = key + (id(self._mesh), self._db_axis, batch_axis)
+        fn = self._cache.get(
+            key, lambda: self._build_block_fn(backend, pk, batch_axis)
+        )
+        backends.DISPATCH_COUNTS[backend] += 1
+        return fn(q, pk.db, pk.bias)
+
+    def _search_loop(self, queries: jnp.ndarray) -> SearchResult:
+        """Per-block Python loop: one dispatch per tile.
+
+        Kept as the parity oracle for the streaming executor and as the
+        benchmark's dispatch-overhead baseline (``spec.stream=False``).
+        """
         m = queries.shape[0]
         qb = self.spec.query_block
-        if m <= qb:
-            return SearchResult(*self._search_block(queries))
-        m_pad = _round_up(m, qb)
+        m_pad = round_up(m, qb)
         padded = jnp.pad(queries, ((0, m_pad - m), (0, 0)))
         vals, idxs = [], []
         for start in range(0, m_pad, qb):
             v, i = self._search_block(padded[start : start + qb])
             vals.append(v)
             idxs.append(i)
+        # stack, not concatenate: on multi-device meshes, concatenating
+        # shard_map outputs (check_rep disabled) makes the partitioner
+        # treat them as unreduced over the db axis and psum — silently
+        # scaling results by the shard count.  stack keeps the replicas.
+        k = vals[0].shape[-1]
         return SearchResult(
-            jnp.concatenate(vals, axis=0)[:m],
-            jnp.concatenate(idxs, axis=0)[:m],
+            jnp.stack(vals).reshape(m_pad, k)[:m],
+            jnp.stack(idxs).reshape(m_pad, k)[:m],
         )
 
-    def _search_block(self, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _search_stream(self, queries: jnp.ndarray) -> SearchResult:
+        """Single-program streaming executor: the whole multi-block batch
+        is ONE compiled dispatch (``lax.map`` over (B, query_block, D))."""
         backend = self._resolve_backend()
-        db, bias = self._prepared()
-        spec = self.spec
-        key = (backend, q.shape, str(q.dtype), self.capacity, spec)
+        pk = self.pack()
+        m, d = queries.shape
+        qb = self.spec.query_block
+        num_blocks = -(-m // qb)
+        m_pad = num_blocks * qb
+        blocks = jnp.pad(queries, ((0, m_pad - m), (0, 0))).reshape(
+            num_blocks, qb, d
+        )
+        key = (
+            "stream", backend, blocks.shape, str(blocks.dtype),
+            self.capacity, self.spec,
+        )
+        batch_axis = None
+        if backend == "sharded":
+            batch_axis = self._batch_axis_for(qb)
+            key = key + (id(self._mesh), self._db_axis, batch_axis)
+        fn = self._cache.get(
+            key, lambda: self._build_stream_fn(backend, pk, batch_axis)
+        )
+        backends.DISPATCH_COUNTS[backend] += 1
+        vals, idxs = fn(blocks, pk.db, pk.bias)
+        k = vals.shape[-1]
+        return SearchResult(
+            vals.reshape(m_pad, k)[:m], idxs.reshape(m_pad, k)[:m]
+        )
 
+    def _build_block_fn(self, backend, pk, batch_axis=None):
+        """(q_block, packed_db, packed_bias) -> (values, indices) callable.
+
+        Closes only over static config (spec fields, packed layout
+        constants); the packed arrays are passed as operands so bias/row
+        patches never invalidate the compiled program.
+        """
+        spec = self.spec
         if backend == "xla":
-            def build():
-                def fn(q, db, bias):
-                    return backends.dense_search(
-                        q, db, bias,
-                        metric=spec.metric, k=spec.k,
-                        recall_target=spec.recall_target,
-                        reduction_input_size_override=
-                            spec.reduction_input_size_override,
-                        aggregate_to_topk=spec.aggregate_to_topk,
-                        use_bitonic=spec.use_bitonic,
-                    )
-                return fn
-        elif backend == "pallas":
-            interpret = self._interpret
-            def build():
-                def fn(q, db, bias):
-                    return backends.pallas_search(
-                        q, db, bias,
-                        metric=spec.metric, k=spec.k,
-                        recall_target=spec.recall_target,
-                        block_m=spec.block_m, max_block_n=spec.max_block_n,
-                        interpret=interpret,
-                        aggregate_to_topk=spec.aggregate_to_topk,
-                        use_bitonic=spec.use_bitonic,
-                        reduction_input_size_override=
-                            spec.reduction_input_size_override,
-                    )
-                return fn
-        elif backend == "sharded":
-            mesh, db_axis = self._mesh, self._db_axis
-            batch_axis = self._batch_axis
-            if batch_axis is not None and q.shape[0] % mesh.shape[batch_axis]:
-                batch_axis = None  # replicate queries that do not divide
-            key = key + (id(mesh), db_axis, batch_axis)
-            def build():
-                searcher = backends.make_sharded_search_fn(
-                    mesh, metric=spec.metric, k=spec.k,
+            def fn(q, db, bias):
+                return backends.dense_search(
+                    q, db, bias,
+                    metric=spec.metric, k=spec.k,
                     recall_target=spec.recall_target,
-                    db_axis=db_axis, batch_axis=batch_axis,
+                    reduction_input_size_override=
+                        spec.reduction_input_size_override,
+                    aggregate_to_topk=spec.aggregate_to_topk,
                     use_bitonic=spec.use_bitonic,
                 )
-                jitted = jax.jit(searcher)
-                qsharding = NamedSharding(mesh, P(batch_axis, None))
-                def fn(q, db, bias):
-                    return jitted(jax.device_put(q, qsharding), db, bias)
-                return fn
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+            return fn
+        if backend == "pallas":
+            interpret = self._interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            n, bin_size, block_n = pk.n, pk.bin_size, pk.block_n
+            def fn(q, db, bias):
+                return backends.pallas_search_packed(
+                    q, db, bias,
+                    metric=spec.metric, k=spec.k, n=n,
+                    bin_size=bin_size, block_m=spec.block_m, block_n=block_n,
+                    interpret=interpret,
+                    aggregate_to_topk=spec.aggregate_to_topk,
+                    use_bitonic=spec.use_bitonic,
+                )
+            return fn
+        if backend == "sharded":
+            mesh, db_axis = self._mesh, self._db_axis
+            searcher = backends.make_sharded_search_fn(
+                mesh, metric=spec.metric, k=spec.k,
+                recall_target=spec.recall_target,
+                db_axis=db_axis, batch_axis=batch_axis,
+                use_bitonic=spec.use_bitonic,
+            )
+            jitted = jax.jit(searcher)
+            qsharding = NamedSharding(mesh, P(batch_axis, None))
+            def fn(q, db, bias):
+                return jitted(jax.device_put(q, qsharding), db, bias)
+            return fn
+        raise ValueError(f"unknown backend {backend!r}")
 
-        fn = self._cache.get(key, build)
-        return fn(q, db, bias)
+    def _build_stream_fn(self, backend, pk, batch_axis=None):
+        """(blocks (B, qb, D), db, bias) -> ((B, qb, k), (B, qb, k)).
+
+        ``lax.map`` streams the blocks through one compiled program; the
+        query buffer is donated on accelerators (it is dead after the
+        dispatch), never the shared db/bias operands.
+        """
+        if backend == "sharded":
+            mesh, spec = self._mesh, self.spec
+            searcher = backends.make_sharded_search_fn(
+                mesh, metric=spec.metric, k=spec.k,
+                recall_target=spec.recall_target,
+                db_axis=self._db_axis, batch_axis=batch_axis,
+                use_bitonic=spec.use_bitonic,
+            )
+            stream = jax.jit(
+                lambda blocks, db, bias: jax.lax.map(
+                    lambda q: searcher(q, db, bias), blocks
+                )
+            )
+            qsharding = NamedSharding(mesh, P(None, batch_axis, None))
+            def fn(blocks, db, bias):
+                return stream(jax.device_put(blocks, qsharding), db, bias)
+            return fn
+        block_fn = self._build_block_fn(backend, pk)
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(
+            lambda blocks, db, bias: jax.lax.map(
+                lambda q: block_fn(q, db, bias), blocks
+            ),
+            donate_argnums=donate,
+        )
 
     # -- updates (the paper's frequent-update path) --------------------------
 
     def add(self, rows: jnp.ndarray) -> "Index":
         """Append rows; grows capacity in ``capacity_block`` steps.
 
-        No index rebuild: the metric precompute (half norms / row
-        normalization, O(N) element-wise) and the bin plan are re-derived
-        lazily on the next search.
+        No index rebuild: only the appended slice is metric-prepared
+        (``Metric.prepare_update``) and patched into the packed state;
+        growth re-lays-out the packed operands (one device copy) without
+        re-deriving the metric precompute of existing rows.
         """
         rows = jnp.atleast_2d(jnp.asarray(rows))
         if rows.shape[1] != self.dim:
             raise ValueError(f"row dim {rows.shape[1]} != index dim {self.dim}")
         r = rows.shape[0]
         required = self._size + r
+        had_packed = self._packed is not None
+        rowwise = self.metric.rowwise
+        if not rowwise:
+            # Coupled preparation (e.g. a learned rotation refit): the
+            # incremental patches below are undefined, so drop the state
+            # now — also skips the pointless growth relayout copy.
+            self._packed = None
         if required > self.capacity:
             # Linear growth in capacity_block steps, not doubling: spare
             # capacity is tombstone-masked but still *scored* on every
@@ -334,33 +449,44 @@ class Index:
             block = self._capacity_block
             if self._mesh is not None:
                 block = math.lcm(block, self._mesh.shape[self._db_axis])
-            new_cap = _round_up(required, block)
+            new_cap = round_up(required, block)
             grow = new_cap - self.capacity
             self._db = jnp.pad(self._db, ((0, grow), (0, 0)))
             self._live = jnp.pad(self._live, (0, grow))
+            if self._packed is not None:
+                self._packed = self._packed.relayout(
+                    self._packed.backend, new_cap, self.spec
+                )
             if self._mesh is not None:
                 self._reshard()
         self._db = self._db.at[self._size : required].set(
             rows.astype(self._db.dtype)
         )
         self._live = self._live.at[self._size : required].set(True)
+        if self._packed is not None:
+            self._packed.update_rows(self._size, rows, self.metric)
         self._size = required
-        self._num_live += r
-        self._invalidate(rows_changed=True)
+        self._num_live = self._num_live + r
+        if had_packed and self._packed is None:
+            self.pack()  # full repack — still at add() time, never at search
         return self
 
     def delete(self, ids) -> "Index":
-        """Tombstone rows by index: masked out via the kernel bias row.
+        """Tombstone rows by index: masked out via the packed bias row.
 
         Deleted slots are not reclaimed (append-only storage); their ids
-        never appear in subsequent search results.
+        never appear in subsequent search results.  Pure device-side
+        patches — no host sync, so a serving loop's dispatch pipeline is
+        never blocked (the live count materializes lazily via ``size``).
         """
         ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
         self._live = self._live.at[ids].set(False)
         # Recount rather than decrement: ids may repeat (within a call or
         # across calls) and a gather-then-sum would count those twice.
-        self._num_live = int(jnp.sum(self._live))
-        self._invalidate(rows_changed=False)
+        # Kept as a device scalar; ``size`` turns it into an int on read.
+        self._num_live = jnp.sum(self._live)
+        if self._packed is not None:
+            self._packed.delete_rows(ids)
         return self
 
     # -- sharding ------------------------------------------------------------
@@ -377,10 +503,11 @@ class Index:
 
         Capacity is padded (with tombstoned rows) to a multiple of the shard
         count; recall accounting against the global N is handled by the
-        sharded backend internally.
+        sharded backend internally.  The packed layout — including the
+        metric precompute — is carried over (``relayout``), not rebuilt.
         """
         n_shards = mesh.shape[db_axis]
-        cap = _round_up(self.capacity, n_shards)
+        cap = round_up(self.capacity, n_shards)
         db, live = self._db, self._live
         if cap > self.capacity:
             db = jnp.pad(db, ((0, cap - self.capacity), (0, 0)))
@@ -392,7 +519,10 @@ class Index:
             mesh=mesh, db_axis=db_axis, batch_axis=batch_axis,
             interpret=self._interpret,
         )
+        if self._packed is not None:
+            out._packed = self._packed.relayout("sharded", cap, out.spec)
         out._reshard()
+        out.pack()
         return out
 
     def _reshard(self):
@@ -403,3 +533,4 @@ class Index:
         self._live = jax.device_put(
             self._live, NamedSharding(self._mesh, P(self._db_axis))
         )
+        self._place_packed()

@@ -66,12 +66,20 @@ class Metric:
       name: registry key.
       negate_output: True when public values are ascending distances
         (internal max-scores negated once at the API boundary).
-      prepare_database: db -> (db', row_bias or None).  Called once per
-        database change by ``Index`` (the precompute the paper calls
-        "index-free": O(N) element-wise work, no data structure).
+      prepare_database: db -> (db', row_bias or None).  Called once at
+        ``Index.build`` (the precompute the paper calls "index-free":
+        O(N) element-wise work, no data structure).
       prepare_queries: q -> q' applied on every search.
       exact: (q, db_raw, k) -> (values, indices) exact baseline obeying the
         same value contract (db_raw is the *unprepared* database).
+      rowwise: whether ``prepare_database`` is a pure per-row map, i.e.
+        ``prepare_database(db)[i] == prepare_database(db[i:i+1])[0]`` for
+        every row.  True for all built-ins (identity, half norms, row
+        normalization), and it is what lets ``Index.add`` prepare only the
+        appended slice (``prepare_update``) instead of re-deriving O(N)
+        state.  A metric whose preparation couples rows (e.g. a learned
+        rotation refit over the whole database) must set False, which
+        forces a full repack on every ``add``.
     """
 
     name: str
@@ -79,6 +87,21 @@ class Metric:
     prepare_database: Callable[[Array], Tuple[Array, Optional[Array]]]
     prepare_queries: Callable[[Array], Array]
     exact: Callable[[Array, Array, int], Tuple[Array, Array]]
+    rowwise: bool = True
+
+    def prepare_update(self, rows: Array) -> Tuple[Array, Optional[Array]]:
+        """Incremental preparation of an appended row slice.
+
+        Valid only for ``rowwise`` metrics; callers (``Index.add`` via
+        ``repro.search.packed``) must check ``rowwise`` and fall back to a
+        full ``prepare_database`` repack otherwise.
+        """
+        if not self.rowwise:
+            raise ValueError(
+                f"metric {self.name!r} is not row-wise; incremental "
+                "preparation is undefined — repack the full database"
+            )
+        return self.prepare_database(rows)
 
 
 _REGISTRY: Dict[str, Metric] = {}

@@ -1,0 +1,233 @@
+"""PackedState: device-resident, backend-layout search operands.
+
+The paper's performance model (Eq. 10) bounds memory traffic at
+``I_MEM ~ O(min(M, N))`` — which only holds if the (N, D) database is
+touched *once* per search, not re-padded / re-prepared inside every
+dispatch.  ``PackedState`` is the layer that guarantees it: at
+``Index.build`` / mutation time (never at search time) it materializes
+
+  * the metric-prepared, dtype-cast database in the resolved backend's
+    native layout (Pallas: padded to the kernel tiling contract —
+    D to a multiple of 128, N to a multiple of ``block_n``),
+  * the fused bias row — metric bias (e.g. ``-||x||^2/2`` for L2),
+    tombstone mask, and non-power-of-2 tail mask in one additive COP
+    (paper Appendix A.5),
+  * the bin plan the layout was derived from,
+
+and hands backends pre-packed operands so the steady-state search
+dispatch only ever pads the (M, D) *query* block.
+
+Mutation contract (what patches what — the invalidation rules):
+
+  * ``update_rows``  (``Index.add`` without growth): metric-prepares only
+    the appended row slice (``Metric.prepare_update``) and patches the db
+    rows + bias entries in place — O(r·D), zero O(N·D) work.
+  * ``delete_rows``  (``Index.delete``): patches the bias row entries to
+    ``MASK_VALUE`` — O(|ids|), the db rows are untouched.
+  * ``relayout``     (capacity growth / resharding / backend switch): one
+    O(N·D) device-side copy into the new layout, but *no* metric
+    re-preparation of existing rows.
+  * ``pack_state``   (build / spec change / non-rowwise metric): the only
+    full pack — dtype cast + ``Metric.prepare_database`` over all rows.
+
+``PACK_EVENTS`` counts these by name ("full_pack", "relayout",
+"rows_updated", "bias_patched") so tests and benchmarks can assert the
+steady state performs none of them.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.binning import BinPlan, plan_bins, round_up
+from repro.search.backends import MASK_VALUE
+from repro.search.metrics import Metric
+from repro.search.spec import SearchSpec
+
+__all__ = [
+    "PACK_EVENTS",
+    "PackedState",
+    "fuse_bias",
+    "pack_state",
+    "reset_pack_events",
+]
+
+# event name -> count of packing work performed (test observability hook;
+# see module docstring for the event taxonomy).
+PACK_EVENTS = collections.Counter()
+
+
+def reset_pack_events() -> None:
+    """Zero ``PACK_EVENTS`` (use in tests instead of counter arithmetic)."""
+    PACK_EVENTS.clear()
+
+
+def fuse_bias(
+    metric_bias: Optional[jnp.ndarray],
+    live: Optional[jnp.ndarray] = None,
+    *,
+    num_rows: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fuse metric bias and tombstone mask into one additive (n,) f32 row.
+
+    ``live=None`` means every row is live (the functional one-shot path).
+    The ``maximum(..., MASK_VALUE)`` clamp keeps the row finite so the
+    MXU/VPU paths stay NaN-free while still losing every comparison.
+    """
+    if live is None:
+        if metric_bias is None:
+            return jnp.zeros((num_rows,), jnp.float32)
+        return jnp.maximum(metric_bias.astype(jnp.float32), MASK_VALUE)
+    tomb = jnp.where(live, 0.0, MASK_VALUE).astype(jnp.float32)
+    if metric_bias is None:
+        return tomb
+    return jnp.maximum(tomb + metric_bias.astype(jnp.float32), MASK_VALUE)
+
+
+@dataclasses.dataclass
+class PackedState:
+    """Device-resident operands for one (backend, capacity, spec) layout.
+
+    Attributes:
+      backend: "xla" | "pallas" | "sharded" — decides the layout.
+      db: metric-prepared database.  (n, d) for xla/sharded; padded
+        (n_pad, d_pad) for pallas (tiling contract of the fused kernel).
+      bias: fused bias row.  (n,) f32 for xla/sharded; (1, n_pad) for
+        pallas with the tail positions pre-masked to ``MASK_VALUE``.
+      n: logical row space covered (== Index.capacity when packed).
+      d: logical feature dim (before lane padding).
+      plan: the BinPlan the pallas layout was derived from.
+      bin_size / block_n: pallas kernel tile parameters (block_n == 0 for
+        non-pallas layouts).
+    """
+
+    backend: str
+    db: jnp.ndarray
+    bias: jnp.ndarray
+    n: int
+    d: int
+    plan: BinPlan
+    bin_size: int
+    block_n: int
+
+    # -- logical views --------------------------------------------------------
+
+    def rows(self) -> jnp.ndarray:
+        """The prepared rows without layout padding: (n, d)."""
+        return self.db[: self.n, : self.d]
+
+    def bias_row(self) -> jnp.ndarray:
+        """The fused bias without layout padding: (n,)."""
+        flat = self.bias[0] if self.bias.ndim == 2 else self.bias
+        return flat[: self.n]
+
+    # -- in-place patches (the cheap mutations) -------------------------------
+
+    def update_rows(self, start: int, rows: jnp.ndarray, metric: Metric):
+        """Patch an appended row slice: prepare only the slice, O(r·D).
+
+        ``rows`` are raw (unprepared) and are cast to the packed dtype
+        before preparation — the same cast-then-prepare order as the full
+        pack, so incremental and full packs are numerically identical.
+        """
+        prepped, metric_bias = metric.prepare_update(
+            rows.astype(self.db.dtype)
+        )
+        r = prepped.shape[0]
+        slice_bias = fuse_bias(metric_bias, num_rows=r)
+        if prepped.shape[1] < self.db.shape[1]:  # pallas lane padding
+            prepped = jnp.pad(
+                prepped, ((0, 0), (0, self.db.shape[1] - prepped.shape[1]))
+            )
+        self.db = self.db.at[start : start + r].set(prepped)
+        if self.bias.ndim == 2:
+            self.bias = self.bias.at[0, start : start + r].set(slice_bias)
+        else:
+            self.bias = self.bias.at[start : start + r].set(slice_bias)
+        PACK_EVENTS["rows_updated"] += 1
+
+    def delete_rows(self, ids: jnp.ndarray):
+        """Tombstone rows: patch only the bias entries, O(|ids|)."""
+        if self.bias.ndim == 2:
+            self.bias = self.bias.at[0, ids].set(MASK_VALUE)
+        else:
+            self.bias = self.bias.at[ids].set(MASK_VALUE)
+        PACK_EVENTS["bias_patched"] += 1
+
+    # -- layout changes (copy, but never metric re-preparation) ---------------
+
+    def relayout(
+        self, backend: str, new_n: int, spec: SearchSpec
+    ) -> "PackedState":
+        """Re-layout for a new capacity and/or backend, reusing prepared rows.
+
+        One O(N·D) device copy; the grown region is dead (bias
+        ``MASK_VALUE``) until ``update_rows`` writes it.  This is what
+        capacity growth and ``Index.shard`` use so the packed layout — and
+        the metric precompute in it — survives the transition.
+        """
+        rows = self.rows()
+        bias = self.bias_row()
+        if new_n > self.n:
+            rows = jnp.pad(rows, ((0, new_n - self.n), (0, 0)))
+            bias = jnp.pad(
+                bias, (0, new_n - self.n), constant_values=MASK_VALUE
+            )
+        PACK_EVENTS["relayout"] += 1
+        return _layout(backend, rows, bias, new_n, self.d, spec)
+
+
+def _layout(
+    backend: str,
+    rows: jnp.ndarray,
+    bias: jnp.ndarray,
+    n: int,
+    d: int,
+    spec: SearchSpec,
+) -> PackedState:
+    """Lay prepared (rows, bias) out in the backend's native shape."""
+    plan = plan_bins(
+        n, spec.k, spec.recall_target,
+        reduction_input_size_override=spec.reduction_input_size_override,
+    )
+    bin_size = plan.bin_size
+    if backend == "pallas":
+        block_n = bin_size * max(1, spec.max_block_n // bin_size)
+        n_pad = round_up(max(n, block_n), block_n)
+        d_pad = round_up(d, 128)
+        rows = jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
+        full = jnp.full((n_pad,), MASK_VALUE, jnp.float32).at[:n].set(bias)
+        return PackedState(
+            backend=backend, db=rows, bias=full[None, :], n=n, d=d,
+            plan=plan, bin_size=bin_size, block_n=block_n,
+        )
+    return PackedState(
+        backend=backend, db=rows, bias=bias, n=n, d=d,
+        plan=plan, bin_size=bin_size, block_n=0,
+    )
+
+
+def pack_state(
+    database: jnp.ndarray,
+    live: Optional[jnp.ndarray],
+    metric: Metric,
+    spec: SearchSpec,
+    backend: str,
+) -> PackedState:
+    """Full pack: dtype cast + metric preparation over all rows + layout.
+
+    The only entry point that runs ``Metric.prepare_database`` on the
+    whole database — everything after build goes through the incremental
+    patches above.
+    """
+    n, d = database.shape
+    db = database
+    if spec.dtype is not None:
+        db = db.astype(jnp.dtype(spec.dtype))
+    db, metric_bias = metric.prepare_database(db)
+    bias = fuse_bias(metric_bias, live, num_rows=n)
+    PACK_EVENTS["full_pack"] += 1
+    return _layout(backend, db, bias, n, d, spec)

@@ -33,6 +33,11 @@ class SearchSpec:
         step / upper bound on the database tile, rounded to the bin size).
       query_block: `.search` auto-tiles query batches larger than this so
         the (query_block, N) score tile bounds VMEM/host memory.
+      stream: execute multi-block query batches as ONE compiled streaming
+        program (``lax.map`` over (num_blocks, query_block, D)) instead of
+        a Python loop of per-block dispatches.  False keeps the per-block
+        loop — bit-identical results, one dispatch per block — which is
+        the benchmark baseline and parity oracle, not a production path.
       aggregate_to_topk: run ExactRescoring (True) or return the raw L bin
         winners (False).
       use_bitonic: rescore with the paper-faithful bitonic network instead
@@ -51,6 +56,7 @@ class SearchSpec:
     block_m: int = 256
     max_block_n: int = 1024
     query_block: int = 4096
+    stream: bool = True
     aggregate_to_topk: bool = True
     use_bitonic: bool = False
     reduction_input_size_override: int = -1

@@ -11,6 +11,9 @@ attach an ``Index`` over retrieval keys (``attach_retrieval``) and the
 engine can look up neighbour tokens per decode step — and, because the
 index is index-free, ingest new keys between steps with no rebuild
 (``retrieval_index.add(...)``), the paper's frequent-update serving story.
+Per-step retrieval is a single device dispatch over pre-packed operands
+(even for multi-block query batches, via the streaming executor), so the
+decode loop never stalls on host-side search bookkeeping.
 """
 from __future__ import annotations
 
@@ -64,8 +67,11 @@ class ServingEngine:
 
         ``value_tokens[i]`` is the token predicted by key row ``i`` (aligned
         with the index's append-only row space, so ``index.add`` callers
-        extend both together).
+        extend both together).  The packed search state is materialized
+        here (normally a no-op — ``Index.build`` packs eagerly) so the
+        decode loop's ``retrieve`` calls never pay build-time packing.
         """
+        index.pack()
         self.retrieval_index = index
         self.retrieval_tokens = jnp.asarray(value_tokens)
         return self

@@ -1,0 +1,319 @@
+"""Perf-contract tests for the packed search state + streaming executor.
+
+These encode the performance model (Eq. 10: per-dispatch memory traffic
+~ O(min(M, N))) as CI assertions, so a regression that re-introduces
+per-search (N, D) padding / metric re-preparation — or per-block Python
+dispatch loops — fails the fast tier:
+
+  * steady-state repeat searches: zero packs, zero retraces, cache hits
+    only; the compiled pallas program pads nothing database-sized (jaxpr
+    inspection),
+  * ``add`` metric-prepares only the appended slice; growth relayouts
+    without a full pack; ``delete`` patches only the bias row and never
+    syncs the host,
+  * a multi-block batch is ONE dispatch, and the streaming executor is
+    bit-identical to the per-block loop for divisible and ragged M.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.search import Index, SearchSpec, backends
+from repro.search.backends import DISPATCH_COUNTS, TRACE_COUNTS
+from repro.search.packed import PACK_EVENTS, reset_pack_events
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def data():
+    q = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    db = jax.random.normal(jax.random.PRNGKey(1), (4096, 32))
+    return q, db
+
+
+@pytest.fixture(autouse=True)
+def _reset_counters():
+    backends.reset_trace_counts()
+    backends.reset_dispatch_counts()
+    reset_pack_events()
+    yield
+
+
+# --- jaxpr inspection: the compiled program pads only query-sized arrays ----
+
+
+def _subjaxprs(p):
+    if hasattr(p, "jaxpr"):  # ClosedJaxpr
+        yield p.jaxpr
+    elif hasattr(p, "eqns"):  # raw Jaxpr (e.g. pallas kernel jaxpr)
+        yield p
+    elif isinstance(p, (list, tuple)):
+        for x in p:
+            yield from _subjaxprs(x)
+
+
+def _pad_shapes(jaxpr):
+    """Every ``pad`` primitive's output shape, recursing into subjaxprs."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pad":
+            out.append(tuple(eqn.outvars[0].aval.shape))
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                out.extend(_pad_shapes(sub))
+    return out
+
+
+def test_packed_pallas_program_never_pads_database(data):
+    q, db = data
+    index = Index.build(db, metric="l2", k=K, backend="pallas")
+    pk = index.pack()
+    fn = index._build_block_fn("pallas", pk)
+    pads = _pad_shapes(jax.make_jaxpr(fn)(q, pk.db, pk.bias).jaxpr)
+    db_elems = pk.db.shape[0] * pk.db.shape[1]
+    assert pads, "query padding should still appear (sanity)"
+    assert all(int(np.prod(s)) < db_elems for s in pads), (
+        f"database-sized pad re-introduced into the search program: {pads}"
+    )
+
+
+def test_legacy_oneshot_path_does_pad_database(data):
+    """Sensitivity check: the same probe flags the pack-inside-jit path,
+    so a silent Index regression onto it cannot pass the test above."""
+    q, db = data
+    pads = _pad_shapes(
+        jax.make_jaxpr(
+            lambda a, b: backends.pallas_search(
+                a, b, None, metric="mips", interpret=True
+            )
+        )(q, db).jaxpr
+    )
+    assert any(int(np.prod(s)) >= db.shape[0] * 128 for s in pads)
+
+
+# --- steady state: zero packs, zero retraces --------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_steady_state_repeat_search_does_no_database_work(data, backend):
+    q, db = data
+    index = Index.build(db, metric="cosine", k=K, backend=backend)
+    index.search(q)  # warmup: trace + compile once
+    backends.reset_trace_counts()
+    reset_pack_events()
+    index._cache.reset_counters()
+    for _ in range(5):
+        index.search(q)
+    assert not dict(PACK_EVENTS), "repeat search repacked the database"
+    assert not dict(TRACE_COUNTS), "repeat search retraced"
+    info = index.cache_info()
+    assert info["hits"] == 5 and info["misses"] == 0
+
+
+def test_multi_block_batch_is_one_dispatch(data):
+    _, db = data
+    qb = 16
+    index = Index.build(db, k=K, backend="xla", query_block=qb)
+    big = jax.random.normal(jax.random.PRNGKey(3), (8 * qb, 32))
+    index.search(big)  # warmup
+    backends.reset_trace_counts()
+    backends.reset_dispatch_counts()
+    index._cache.reset_counters()
+    index.search(big)
+    assert DISPATCH_COUNTS["xla"] == 1, "8-block batch took >1 dispatch"
+    assert index.cache_info()["hits"] == 1
+    assert not dict(TRACE_COUNTS)
+
+
+# --- incremental mutations ---------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["mips", "l2", "cosine"])
+def test_add_prepares_only_the_appended_slice(data, metric):
+    _, db = data
+    index = Index.build(
+        db[:2048], metric=metric, k=K, backend="xla", capacity=4096
+    )
+    reset_pack_events()
+    index.add(db[2048:])
+    assert dict(PACK_EVENTS) == {"rows_updated": 1}
+    # Numerics: the incrementally packed state equals a from-scratch pack
+    # of the full database at the same capacity.
+    full = Index.build(db, metric=metric, k=K, backend="xla", capacity=4096)
+    np.testing.assert_allclose(
+        np.asarray(index.pack().db), np.asarray(full.pack().db), rtol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(index.pack().bias), np.asarray(full.pack().bias)
+    )
+
+
+def test_add_with_growth_relayouts_without_full_pack(data):
+    _, db = data
+    index = Index.build(db[:1024], metric="l2", k=K, backend="pallas")
+    reset_pack_events()
+    index.add(db[1024:1100])
+    ev = dict(PACK_EVENTS)
+    assert ev == {"relayout": 1, "rows_updated": 1}, ev
+    # grown region stays dead until written: nothing above the high-water
+    # mark is ever returned
+    q = jax.random.normal(jax.random.PRNGKey(7), (8, 32))
+    _, idxs = index.search(q)
+    assert int(np.asarray(idxs).max()) < 1100
+
+
+def test_non_rowwise_metric_forces_full_repack_at_add_time(data):
+    from repro.search import Metric, exact_mips, register_metric
+    from repro.search.metrics import _REGISTRY
+
+    register_metric(
+        Metric(
+            name="coupled-mips",
+            negate_output=False,
+            prepare_database=lambda db: (db, None),
+            prepare_queries=lambda q: q,
+            exact=exact_mips,
+            rowwise=False,
+        ),
+        overwrite=True,
+    )
+    try:
+        _, db = data
+        index = Index.build(
+            db[:2048], metric="coupled-mips", k=K, backend="xla",
+            capacity=4096,
+        )
+        reset_pack_events()
+        index.add(db[2048:])
+        ev = dict(PACK_EVENTS)
+        # repack happens (at add() time), never an undefined slice update
+        assert ev.get("full_pack") == 1 and "rows_updated" not in ev, ev
+        with pytest.raises(ValueError, match="row-wise"):
+            index.metric.prepare_update(db[:4])
+    finally:
+        _REGISTRY.pop("coupled-mips", None)
+
+
+def test_delete_patches_bias_only_and_never_syncs(data):
+    q, db = data
+    index = Index.build(db, metric="mips", k=K, backend="xla")
+    index.search(q)
+    reset_pack_events()
+    index.delete([1, 2, 3])
+    assert dict(PACK_EVENTS) == {"bias_patched": 1}
+    # live count stays a lazy device scalar until read
+    assert not isinstance(index._num_live, int)
+    assert index.size == 4093
+    assert isinstance(index._num_live, int)
+    # deleted ids are really gone from results
+    _, idxs = index.search(q)
+    assert not {1, 2, 3} & set(np.asarray(idxs).ravel().tolist())
+
+
+def test_shard_reuses_packed_layout(data):
+    q, db = data
+    mesh = jax.make_mesh((1,), ("model",))
+    index = Index.build(db, metric="cosine", k=K)
+    reset_pack_events()
+    sharded = index.shard(mesh, db_axis="model")
+    ev = dict(PACK_EVENTS)
+    assert "full_pack" not in ev and ev.get("relayout") == 1, ev
+    vals, idxs = sharded.search(q)
+    assert vals.shape == (64, K)
+
+
+# --- streaming executor parity ----------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("m", [128, 100])  # divisible / ragged by query_block
+def test_stream_matches_per_block_loop(data, backend, m):
+    _, db = data
+    queries = jax.random.normal(jax.random.PRNGKey(5), (m, 32))
+    stream = Index.build(
+        db[:1024], k=K, backend=backend, query_block=16
+    ).search(queries)
+    loop = Index.build(
+        db[:1024],
+        spec=SearchSpec(k=K, backend=backend, query_block=16, stream=False),
+    ).search(queries)
+    np.testing.assert_array_equal(
+        np.asarray(stream.indices), np.asarray(loop.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stream.values), np.asarray(loop.values)
+    )
+
+
+def test_stream_matches_loop_sharded(data):
+    _, db = data
+    mesh = jax.make_mesh((1,), ("model",))
+    queries = jax.random.normal(jax.random.PRNGKey(5), (100, 32))
+    stream = (
+        Index.build(db[:1024], k=K, query_block=16)
+        .shard(mesh, db_axis="model")
+        .search(queries)
+    )
+    loop = (
+        Index.build(
+            db[:1024], spec=SearchSpec(k=K, query_block=16, stream=False)
+        )
+        .shard(mesh, db_axis="model")
+        .search(queries)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stream.indices), np.asarray(loop.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stream.values), np.asarray(loop.values)
+    )
+
+
+_MULTIDEVICE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.search import Index, SearchSpec, exact_search
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+db = jax.random.normal(jax.random.PRNGKey(1), (4096, 64))
+q = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+
+stream = Index.build(db, k=10, query_block=32).shard(
+    mesh, db_axis="model", batch_axis="data")
+loop = Index.build(db, spec=SearchSpec(k=10, query_block=32, stream=False)
+    ).shard(mesh, db_axis="model", batch_axis="data")
+s, l = stream.search(q), loop.search(q)
+assert np.array_equal(np.asarray(s.indices), np.asarray(l.indices))
+assert np.array_equal(np.asarray(s.values), np.asarray(l.values))
+
+# both must actually be CORRECT, not merely equal: the old concatenate-based
+# loop silently psummed shard_map outputs (x n_shards) on >1 db shards.
+_, e = exact_search(q, db, 10)
+rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+               for a, b in zip(np.asarray(s.indices), np.asarray(e))])
+assert rec >= stream.expected_recall - 0.07, rec
+assert int(np.asarray(s.indices).max()) < 4096
+print("MULTIDEVICE_STREAM_OK")
+"""
+
+
+def test_stream_matches_loop_multidevice():
+    """8 fake devices in a subprocess (the main process stays 1-device):
+    multi-block sharded search is bit-identical stream vs loop AND correct
+    against the exact baseline."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTIDEVICE_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert "MULTIDEVICE_STREAM_OK" in out.stdout, out.stdout + out.stderr
