@@ -7,7 +7,11 @@ across a backend x metric x (M, N, D) grid:
   * dispatches per search (``backends.DISPATCH_COUNTS``): the streaming
     executor issues ONE for a multi-block batch, the per-block Python loop
     (``SearchSpec(stream=False)``) issues M / query_block,
-  * the stream-over-loop wall-clock speedup ("before/after" of this PR).
+  * the stream-over-loop wall-clock speedup ("before/after" of the packed
+    state PR),
+  * model-planned vs legacy hard-coded tile configs (``plan_results``):
+    the kernel planner (``repro.search.plan``) must match or beat the old
+    (256, 1024, 4096) defaults at bit-identical results.
 
 Writes ``BENCH_search.json`` (one run per invocation; history lives in git —
 commit full-grid runs, CI smoke runs only touch the working tree).
@@ -32,6 +36,10 @@ import time
 import jax
 
 from repro.search import Index, SearchSpec, backends
+
+# The pre-planner hard-coded tile configuration (PR-2 and earlier): the
+# baseline the model-planned path must match or beat.
+LEGACY_BLOCKS = dict(block_m=256, max_block_n=1024, query_block=4096)
 
 # (M, N, D) grid: M spans single-block through 16-block batches at the
 # query_block below; N/D stay CPU-tractable while keeping the matmul real.
@@ -104,6 +112,50 @@ def bench_config(backend, metric, m, n, d, query_block, repeats, emit):
     return row
 
 
+def bench_plan(backend, metric, m, n, d, repeats, emit):
+    """Model-planned tiles vs the pre-planner hard-coded defaults.
+
+    Also asserts bit-parity: the planner may only change layout/padding,
+    never results.
+    """
+    key = jax.random.PRNGKey(0)
+    kq, kd = jax.random.split(key)
+    db = jax.random.normal(kd, (n, d))
+    queries = jax.random.normal(kq, (m, d))
+    model = Index.build(db, spec=SearchSpec(metric=metric, k=10, backend=backend))
+    legacy = Index.build(
+        db, spec=SearchSpec(metric=metric, k=10, backend=backend, **LEGACY_BLOCKS)
+    )
+    vm, im = model.search(queries)
+    vl, il = legacy.search(queries)
+    assert (vm == vl).all() and (im == il).all(), (
+        f"planner changed results for {backend}/{metric} M={m} N={n} D={d}"
+    )
+    wall_model, _ = _time_search(model, queries, repeats)
+    wall_legacy, _ = _time_search(legacy, queries, repeats)
+    plan = model.kernel_plan
+    row = {
+        "backend": backend, "metric": metric, "m": m, "n": n, "d": d,
+        "planned": {
+            "block_m": plan.block_m, "block_n": plan.block_n,
+            "query_block": plan.query_block, "num_bins": plan.num_bins,
+            "bin_size": plan.bin_size, "bottleneck": plan.bottleneck,
+            "source": plan.source,
+        },
+        "model_qps": m / wall_model,
+        "legacy_qps": m / wall_legacy,
+        "model_over_legacy": wall_legacy / wall_model,
+    }
+    emit(
+        f"plan,{backend},{metric},M={m},N={n},D={d}: "
+        f"model {row['model_qps']:.0f} qps "
+        f"(bm={plan.block_m},bn={plan.block_n},qb={plan.query_block}) vs "
+        f"legacy {row['legacy_qps']:.0f} qps -> "
+        f"{row['model_over_legacy']:.2f}x"
+    )
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -126,6 +178,14 @@ def main() -> None:
                     bench_config(backend, metric, m, n, d, qb, repeats, print)
                 )
 
+    plan_results = []
+    for backend in bks:
+        for metric in mets:
+            for m, n, d in grid:
+                plan_results.append(
+                    bench_plan(backend, metric, m, n, d, repeats, print)
+                )
+
     report = {
         "meta": {
             "jax": jax.__version__,
@@ -135,6 +195,7 @@ def main() -> None:
             "smoke": args.smoke,
         },
         "results": results,
+        "plan_results": plan_results,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -153,6 +214,15 @@ def main() -> None:
             f"streaming executor only {r['stream_speedup']:.2f}x the "
             "per-block loop — dispatch overhead regression"
         )
+        # Planner contract: model-planned tiles match or beat the old
+        # hard-coded defaults on every smoke config (bit-parity is asserted
+        # inside bench_plan).  Wall-clock slack for CI noise only.
+        for p in plan_results:
+            assert p["model_over_legacy"] > 0.8, (
+                f"model-planned config {p['planned']} is "
+                f"{p['model_over_legacy']:.2f}x the legacy default "
+                f"on {p['backend']}/{p['metric']} — planner regression"
+            )
         print("smoke contract OK")
 
 

@@ -4,34 +4,36 @@ Emits, for each (dataset x hardware), where the kernel lands against the
 three walls (compute / memory / instruction) — reproducing the paper's
 finding that Sift/L2 regresses on TPU v4 because of the COP wall while the
 classic two-term roofline cannot explain it.
+
+Since the planner PR this script is a thin view over ``repro.search.plan``:
+the same ``plan_search`` that configures live ``Index.build`` kernels
+produces the figure, so the figure can never drift from the shipping
+configuration.  (One accounting difference vs the paper's Table 2: the
+fused bias row folds the ||x||^2/2 broadcast into the mask COP, so the
+planner charges Sift C=5 where the paper's unfused accounting charged 6 —
+the COP wall conclusion is unchanged.)
 """
 from __future__ import annotations
 
 from repro.configs.knn_workloads import KNN_WORKLOADS
-from repro.search import plan_bins
-from repro.core.roofline import (
-    HARDWARE,
-    attainable_flops,
-    bottleneck,
-    partial_reduce_cost,
-)
+from repro.core.roofline import HARDWARE
 
 
 def main(emit):
     for name, w in KNN_WORKLOADS.items():
-        plan = plan_bins(w.n, w.k, w.recall_target)
-        cost = partial_reduce_cost(
-            w.m, w.n, w.d_padded, plan.num_bins, cops_per_dot=w.cops_per_dot
-        )
         for hw_name in ("v100", "a100", "tpu_v3", "tpu_v4", "tpu_v5e"):
+            plan = w.plan(device=hw_name)
             hw = HARDWARE[hw_name]
-            att = attainable_flops(cost, hw)
-            classic = min(hw.peak_flops, hw.hbm_bandwidth * cost.i_mem)
+            classic = min(hw.peak_flops, hw.hbm_bandwidth * plan.i_mem)
             emit(
-                f"fig2,{name},{hw_name},bottleneck={bottleneck(cost, hw)},"
-                f"attainable={att / 1e12:.1f}TF/s,peak={hw.peak_flops / 1e12:.0f}TF/s,"
+                f"fig2,{name},{hw_name},bottleneck={plan.bottleneck},"
+                f"attainable={plan.attainable_flops / 1e12:.1f}TF/s,"
+                f"peak={hw.peak_flops / 1e12:.0f}TF/s,"
                 f"classic_model={classic / 1e12:.1f}TF/s,"
-                f"cop_wall_visible={'yes' if att < classic * 0.99 else 'no'}"
+                f"cop_wall_visible="
+                f"{'yes' if plan.attainable_flops < classic * 0.99 else 'no'},"
+                f"L={plan.num_bins},block_m={plan.block_m},"
+                f"block_n={plan.block_n}"
             )
 
 

@@ -3,6 +3,14 @@ roofline-term delta vs the stored baseline.
 
   PYTHONPATH=src python -m benchmarks.hillclimb --arch recurrentgemma-9b \
       --shape train_4k --mesh single --set moe_group_size=512 --tag g512
+
+KNN mode (--knn): sweep search-kernel tiles around the analytical plan via
+``repro.search.plan.tune_plan`` — the planner subsumed the manual
+set-a-knob-and-relower loop for search kernels, so this mode just reports
+model choice vs measured best and persists the result in the plan cache.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --knn --m 512 --n 4096 \
+      --d 64 --k 10 --metric l2 --backend xla
 """
 import os
 
@@ -30,16 +38,68 @@ def parse_val(v: str):
     return v
 
 
+def knn_main(args):
+    """Measured refinement of the analytical search plan (plan cache aware)."""
+    import jax
+
+    from repro.search import plan as planlib
+
+    model = planlib.plan_search(
+        n=args.n, d=args.d, k=args.k, m=args.m, metric=args.metric,
+        recall_target=args.recall_target, backend=args.backend,
+        device=args.device or None,
+    )
+    print(
+        f"model plan: bm={model.block_m} bn={model.block_n} "
+        f"qb={model.query_block} L={model.num_bins} W=2^{model.log2_bin_size} "
+        f"bottleneck={model.bottleneck} "
+        f"attainable={model.attainable_flops / 1e12:.1f}TF/s "
+        f"E[recall]={model.expected_recall:.4f}"
+    )
+    os.makedirs(args.out, exist_ok=True)
+    cache = planlib.PlanCache(os.path.join(args.out, "plan_cache.json"))
+    db = jax.random.normal(jax.random.PRNGKey(0), (args.n, args.d))
+    measured = planlib.tune_plan(db, model, cache=cache)
+    entry = cache.get(model) or {}
+    print(
+        f"measured best: bm={measured.block_m} bn={measured.block_n} "
+        f"qb={measured.query_block} "
+        f"wall={entry.get('wall_s', float('nan')):.6f}s "
+        f"(cache: {cache.path}, {len(cache)} entries)"
+    )
+    agrees = (measured.block_m, measured.block_n, measured.query_block) == (
+        model.block_m, model.block_n, model.query_block
+    )
+    print(f"model {'CONFIRMED' if agrees else 'REFINED'} by measurement")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--knn", action="store_true",
+                    help="sweep search-kernel tiles instead of a model cell")
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--metric", default="mips")
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--recall-target", type=float, default=0.95)
+    ap.add_argument("--device", default="",
+                    help="hardware profile name (default: auto-detect)")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (repeatable)")
     ap.add_argument("--tag", default="variant")
     ap.add_argument("--out", default="benchmarks/results/hillclimb")
     args = ap.parse_args()
+
+    if args.knn:
+        knn_main(args)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required (unless --knn)")
 
     cfg = get_config(args.arch)
     overrides = {}

@@ -63,6 +63,18 @@ def main():
     index.search(qy)
     print(f"compile cache: {index.cache_info()}")
 
+    # --- the model-driven plan behind the index (docs/performance_model.md)
+    report = index.explain()
+    plan, pred = report["plan"], report["predicted"]
+    print(
+        f"plan[{plan['source']}]: tiles=({plan['block_m']}, "
+        f"{plan['block_n']}, {plan['query_block']}) "
+        f"L={plan['num_bins']}x2^{plan['log2_bin_size']} -> "
+        f"{pred['bottleneck']}-bound, "
+        f"attainable {pred['attainable_flops'] / 1e12:.1f} TFLOP/s "
+        f"on {pred['device']}"
+    )
+
 
 if __name__ == "__main__":
     main()

@@ -11,14 +11,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-fast}" == "full" ]]; then
+    # The full tier is a superset of fast: docs lint + doctests too.
+    python scripts/docs_lint.py
+    python -m pytest -q --doctest-modules src/repro/search
     exec python -m pytest -x -q
 else
     # Perf contract first (fail fast on re-introduced per-search padding /
-    # dispatch-loop regressions), then the benchmark smoke run, then the
-    # rest of the fast tier (test_packed already ran — don't repeat it).
-    # (smoke writes to an untracked path so it never clobbers the
-    # committed full-grid BENCH_search.json seed)
+    # dispatch-loop regressions), then the benchmark smoke run (includes
+    # the planner-vs-legacy contract), docs lint + public-API doctests,
+    # then the rest of the fast tier (test_packed already ran — don't
+    # repeat it).  (smoke writes to an untracked path so it never clobbers
+    # the committed full-grid BENCH_search.json seed)
     python -m pytest -x -q tests/test_packed.py
     python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
+    python scripts/docs_lint.py
+    python -m pytest -x -q --doctest-modules src/repro/search
     exec python -m pytest -x -q -m "not slow" --ignore=tests/test_packed.py
 fi

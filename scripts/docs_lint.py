@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Docs lint (CI fast tier): keep the docs suite mechanically honest.
+
+Checks, over README.md and docs/*.md:
+
+  1. Internal markdown links resolve: relative link targets must exist on
+     disk; ``#anchor`` fragments must match a heading in the target file.
+  2. Every ``path/to/file.py::name`` token names a real file defining
+     ``name`` (function, class, method or module-level assignment).
+  3. Every equation cited in docs/performance_model.md (``Eq. N``,
+     ranges expanded) appears on at least one line that also carries a
+     valid ``file::function`` token — the "every equation maps to code"
+     acceptance criterion.
+  4. Every public ``repro.search`` symbol (``__all__``) is mentioned
+     somewhere in the docs suite.
+
+Exit code 1 with a per-problem listing on failure.  Run from the repo
+root (scripts/ci.sh does): ``python scripts/docs_lint.py``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md")
+)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TOKEN_RE = re.compile(r"([\w/\.\-]+\.py)::([A-Za-z_][A-Za-z0-9_]*)")
+EQ_RE = re.compile(r"Eq\.\s*(\d+)(?:\s*[–-]\s*(\d+))?")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (good enough for our headings)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_(),:→×‖²⟨⟩/.§]", "", s)
+    s = re.sub(r"\s+", "-", s.strip())
+    return s
+
+
+def headings_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_links(doc: str, text: str, problems: list) -> None:
+    base = os.path.dirname(os.path.join(REPO, doc))
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z]+://", target) or target.startswith("mailto:"):
+            continue
+        path, _, anchor = target.partition("#")
+        full = os.path.join(base, path) if path else os.path.join(REPO, doc)
+        if not os.path.exists(full):
+            problems.append(f"{doc}: broken link target {target!r}")
+            continue
+        if anchor and full.endswith(".md"):
+            if slugify(anchor) not in headings_of(full):
+                problems.append(
+                    f"{doc}: link anchor #{anchor} not found in {path or doc}"
+                )
+
+
+def token_defined(path: str, name: str) -> bool:
+    try:
+        with open(os.path.join(REPO, path), encoding="utf-8") as f:
+            src = f.read()
+    except OSError:
+        return False
+    return bool(
+        re.search(
+            rf"^\s*(?:def\s+{name}\s*\(|class\s+{name}\b|{name}\s*[:=])",
+            src, re.M,
+        )
+    )
+
+
+def check_tokens(doc: str, text: str, problems: list) -> set:
+    """Validate file::name tokens; return the set of valid ones."""
+    valid = set()
+    for path, name in TOKEN_RE.findall(text):
+        if not os.path.exists(os.path.join(REPO, path)):
+            problems.append(f"{doc}: token {path}::{name} — no such file")
+        elif not token_defined(path, name):
+            problems.append(
+                f"{doc}: token {path}::{name} — {name!r} not defined there"
+            )
+        else:
+            valid.add((path, name))
+    return valid
+
+
+def check_equation_map(doc: str, text: str, problems: list) -> None:
+    cited, mapped = set(), set()
+    for line in text.splitlines():
+        eqs = set()
+        for lo, hi in EQ_RE.findall(line):
+            lo = int(lo)
+            eqs.update(range(lo, int(hi) + 1) if hi else (lo,))
+        cited |= eqs
+        if eqs and TOKEN_RE.search(line):
+            # the token(s) on this line are themselves validated by
+            # check_tokens; an invalid token already fails the lint.
+            mapped |= eqs
+    for eq in sorted(cited - mapped):
+        problems.append(
+            f"{doc}: Eq. {eq} is cited but never mapped to a "
+            "file::function on any line"
+        )
+
+
+def check_public_symbols(all_text: str, problems: list) -> None:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import repro.search as search
+
+    for name in search.__all__:
+        if not re.search(rf"\b{re.escape(name)}\b", all_text):
+            problems.append(
+                f"public symbol repro.search.{name} is not mentioned in "
+                "README.md or docs/"
+            )
+
+
+def main() -> int:
+    problems: list = []
+    texts = {}
+    for doc in DOC_FILES:
+        with open(os.path.join(REPO, doc), encoding="utf-8") as f:
+            texts[doc] = f.read()
+    for doc, text in texts.items():
+        check_links(doc, text, problems)
+        check_tokens(doc, text, problems)
+        if doc.endswith("performance_model.md"):
+            check_equation_map(doc, text, problems)
+    check_public_symbols("\n".join(texts.values()), problems)
+    if problems:
+        print(f"docs lint: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(
+        f"docs lint OK ({len(texts)} files, "
+        f"{sum(len(TOKEN_RE.findall(t)) for t in texts.values())} "
+        "code tokens verified)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,12 @@
 JSON artifacts written by repro.launch.dryrun.
 
   PYTHONPATH=src python -m repro.analysis.rooflines [--dir benchmarks/results/dryrun]
+
+Also renders KNN kernel-plan tables (``knn_plan_table``) from
+``repro.search.plan.Plan`` objects — the same markdown shape as the
+training-cell roofline tables, fed by the planner instead of dryrun JSON:
+
+  PYTHONPATH=src python -m repro.analysis.rooflines --knn
 """
 from __future__ import annotations
 
@@ -75,6 +81,41 @@ def dryrun_table(cells: List[Dict]) -> str:
     return "\n".join(rows)
 
 
+def knn_plan_table(plans) -> str:
+    """Markdown table over ``repro.search.plan.Plan`` rows.
+
+    The KNN analogue of ``roofline_table``: one row per planned workload,
+    straight from the planner that configures the live kernels.
+    """
+    rows = [
+        "| workload | device | L x 2^W | tiles (bm, bn, qb) | I_MEM | I_COP "
+        "| wall | attainable | E[recall] |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for label, p in plans:
+        rows.append(
+            f"| {label} | {p.device} | {p.num_bins} x 2^{p.log2_bin_size} "
+            f"| ({p.block_m}, {p.block_n}, {p.query_block}) "
+            f"| {p.i_mem:.0f} | {p.i_cop:.1f} | **{p.bottleneck}** "
+            f"| {p.attainable_flops / 1e12:.1f} TF/s "
+            f"| {p.expected_recall:.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def knn_main() -> None:
+    """Print the paper-workload plan table for every Table-1 device."""
+    from repro.configs.knn_workloads import KNN_WORKLOADS
+
+    plans = [
+        (name, w.plan(device=dev))
+        for name, w in KNN_WORKLOADS.items()
+        for dev in ("tpu_v3", "tpu_v4", "tpu_v5e")
+    ]
+    print("## KNN kernel plans (repro.search.plan)\n")
+    print(knn_plan_table(plans))
+
+
 def pick_hillclimb(cells: List[Dict]):
     """worst roofline fraction / most collective-bound / most paper-like."""
     ok = [c for c in cells if "error" not in c and c["mesh"] == "single"]
@@ -89,7 +130,12 @@ def pick_hillclimb(cells: List[Dict]):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--knn", action="store_true",
+                    help="print planner-derived KNN kernel plan tables")
     args = ap.parse_args()
+    if args.knn:
+        knn_main()
+        return
     cells = load_cells(args.dir)
     print("## Dry-run (all cells)\n")
     print(dryrun_table(cells))

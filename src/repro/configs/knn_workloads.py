@@ -29,6 +29,21 @@ class KNNConfig:
         c += int(self.broadcast_norm)       # broadcasting ||x||^2/2
         return c
 
+    def plan(self, device: str = "tpu_v4", backend: str = "pallas"):
+        """The analytical kernel plan for this workload on ``device``.
+
+        Thin hook into ``repro.search.plan.plan_search`` so benchmark and
+        figure scripts derive every kernel parameter the same way the live
+        ``Index.build`` path does (imported lazily: configs must stay
+        importable without pulling the search stack in).
+        """
+        from repro.search.plan import plan_search
+
+        return plan_search(
+            n=self.n, d=self.d, k=self.k, m=self.m, metric=self.metric,
+            recall_target=self.recall_target, device=device, backend=backend,
+        )
+
 
 KNN_WORKLOADS: Dict[str, KNNConfig] = {
     "glove1.2m": KNNConfig(

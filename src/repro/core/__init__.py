@@ -6,15 +6,6 @@ from repro.core.binning import (
     expected_recall,
     plan_bins,
 )
-from repro.core.knn import (
-    cosine_nns,
-    exact_cosine_nns,
-    exact_l2nns,
-    exact_mips,
-    half_norms,
-    l2nns,
-    mips,
-)
 from repro.core.partial_reduce import partial_reduce, partial_reduce_with_plan
 from repro.core.rescoring import bitonic_sort_pairs, exact_rescoring
 from repro.core.roofline import (
@@ -29,3 +20,23 @@ from repro.core.roofline import (
     roofline_terms,
 )
 from repro.core.topk import approx_max_k, approx_min_k
+
+# The legacy KNN entry points (repro.core.knn) are a deprecated shim over
+# repro.search; re-export lazily (PEP 562) so the shim's DeprecationWarning
+# fires only when a legacy symbol is actually used — not for everyone who
+# imports repro.core.binning / roofline through this package.
+_KNN_SHIM = (
+    "cosine_nns", "exact_cosine_nns", "exact_l2nns", "exact_mips",
+    "half_norms", "l2nns", "mips",
+)
+
+
+def __getattr__(name):
+    if name in _KNN_SHIM or name == "knn":
+        import importlib
+
+        knn = importlib.import_module("repro.core.knn")
+        # `repro.core.knn` itself stays reachable as an attribute, as the
+        # old eager import made it.
+        return knn if name == "knn" else getattr(knn, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

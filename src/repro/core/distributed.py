@@ -7,11 +7,21 @@ ExactRescore globally) now lives in
 it is ``repro.search.Index.build(db).shard(mesh, db_axis=...)``.
 
 These wrappers preserve the historical signatures (including the
-positive-half-norm convention of ``db_half_norm``).
+positive-half-norm convention of ``db_half_norm``).  The old -> new mapping
+is tabulated in ``docs/migration.md``.
 """
 from __future__ import annotations
 
+import warnings
+
 from typing import Optional
+
+warnings.warn(
+    "repro.core.distributed is a deprecated shim; use repro.search "
+    "(Index.build(db).shard(mesh, ...)) — see docs/migration.md",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 import jax.numpy as jnp
 from jax.sharding import Mesh

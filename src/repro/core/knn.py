@@ -6,11 +6,21 @@ This module re-exports the functional equivalents with their original
 signatures so existing callers keep working; new code should not import it.
 
 Value/sign conventions (including the L2 relaxed-distance contract) are
-documented once, in ``repro.search.metrics``.
+documented once, in ``repro.search.metrics``.  The old -> new mapping is
+tabulated in ``docs/migration.md``.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax  # noqa: F401  (kept at module top; was function-local pre-shim)
+
+warnings.warn(
+    "repro.core.knn is a deprecated shim; use repro.search "
+    "(Index.build(...).search(...)) — see docs/migration.md",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 from repro.search.functional import (
     cosine_nns,

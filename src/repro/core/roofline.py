@@ -33,6 +33,11 @@ class Hardware:
     peak_cops: float           # gamma [COP/s]
     hbm_bytes: float = 16e9    # per-chip HBM capacity
     ici_bandwidth: float = 50e9  # per-link interconnect [bytes/s]
+    # Fast on-chip memory available to one kernel instance (TPU: VMEM per
+    # core; GPU: shared memory + L2 slice).  The kernel planner
+    # (repro.search.plan) sizes its tiles against a fraction of this
+    # (operand tiles are double-buffered; see plan._vmem_budget).
+    vmem_bytes: float = 16 * 2**20
 
 
 HARDWARE: Dict[str, Hardware] = {
@@ -45,6 +50,11 @@ HARDWARE: Dict[str, Hardware] = {
     # ~50 GB/s/link ICI.  gamma estimated from VPU geometry (8x128 lanes x 2
     # unit x ~940MHz x 2 cores) ~= 3.9 TCOP/s, same methodology as Table 1.
     "tpu_v5e": Hardware("TPU v5e", 197e12, 819e9, 3.9e12, hbm_bytes=16e9),
+    # Development host (the CI/interpret-mode environment).  Rough orders of
+    # magnitude for a server-class CPU socket; the planner only uses the
+    # *ratios* (roofline walls) and the vmem tile budget, which is set to the
+    # TPU value so host-planned tiles match what the TPU would get.
+    "cpu": Hardware("CPU host", 0.5e12, 100e9, 0.1e12, hbm_bytes=64e9),
 }
 
 

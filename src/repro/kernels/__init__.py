@@ -1,4 +1,17 @@
 """Pallas TPU kernels for the paper's compute hot-spot (PartialReduce)."""
-from repro.kernels.ops import l2_topk, mips_topk
 from repro.kernels.partial_reduce import partial_reduce_packed, partial_reduce_pallas
 from repro.kernels.ref import partial_reduce_ref
+
+
+# repro.kernels.ops is a deprecated shim over repro.search; re-export its
+# entry points lazily (PEP 562) so the shim's DeprecationWarning fires only
+# on actual use, not for importers of the Pallas kernels themselves.
+def __getattr__(name):
+    if name in ("l2_topk", "mips_topk", "ops"):
+        import importlib
+
+        ops = importlib.import_module("repro.kernels.ops")
+        # `repro.kernels.ops` itself stays reachable as an attribute, as
+        # the old eager import made it.
+        return ops if name == "ops" else getattr(ops, name)
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

@@ -10,12 +10,22 @@ rescoring defaults to ``lax.top_k`` rather than the bitonic network (results
 are identical — both are exact over the L candidates — but compiling the
 bitonic sort inside jit is pathologically slow on CPU XLA).  Pass the
 paper-faithful path via ``repro.search.SearchSpec(use_bitonic=True)``.
+The old -> new mapping is tabulated in ``docs/migration.md``.
 """
 from __future__ import annotations
+
+import warnings
 
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
+
+warnings.warn(
+    "repro.kernels.ops is a deprecated shim; use repro.search "
+    "(Index.build(db, backend='pallas', ...)) — see docs/migration.md",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = ["mips_topk", "l2_topk", "prepare_inputs"]
 

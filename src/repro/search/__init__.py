@@ -13,6 +13,13 @@ Backends: "auto" | "xla" | "pallas" | "sharded" (``SearchSpec.backend``).
 Metrics: "mips" | "l2" | "cosine", extensible via ``register_metric``; the
 value/sign contract lives in ``repro.search.metrics``.
 
+Kernel planning (``repro.search.plan``): every tile size and the bin count
+are derived analytically from the paper's performance model (Eq. 4–10) and
+recall guarantee (Eq. 13–14) — ``Index.build(plan="model")`` is the default;
+``plan="measure"`` refines with a short on-device sweep; ``Index.explain()``
+reports the plan and its predicted (vs measured) roofline position.  See
+``docs/performance_model.md`` for the equation-to-code map.
+
 Packed search state (the performance-model contract, Eq. 10)
 ------------------------------------------------------------
 
@@ -88,6 +95,14 @@ from repro.search.packed import (
     pack_state,
     reset_pack_events,
 )
+from repro.search.plan import (
+    Plan,
+    PlanCache,
+    detect_device,
+    hlo_check,
+    plan_search,
+    tune_plan,
+)
 from repro.search.spec import BACKENDS, SearchSpec
 
 __all__ = [
@@ -123,6 +138,13 @@ __all__ = [
     "PackedState",
     "pack_state",
     "fuse_bias",
+    # kernel planner (the performance model as a subsystem)
+    "Plan",
+    "plan_search",
+    "tune_plan",
+    "PlanCache",
+    "detect_device",
+    "hlo_check",
     # observability
     "TRACE_COUNTS",
     "DISPATCH_COUNTS",

@@ -316,8 +316,8 @@ def pallas_search(
     metric: str = "mips",
     k: int = 10,
     recall_target: float = 0.95,
-    block_m: int = 256,
-    max_block_n: int = 1024,
+    block_m: Optional[int] = None,
+    max_block_n: Optional[int] = None,
     interpret: Optional[bool] = None,
     aggregate_to_topk: bool = True,
     use_bitonic: bool = False,
@@ -328,6 +328,8 @@ def pallas_search(
     Same operand contract as ``dense_search`` (metric-prepared database,
     additive ``row_bias``); all three built-in metrics work here — cosine is
     plain MIPS after preparation, closing the old cosine-only-on-XLA gap.
+    Tile sizes left ``None`` come from the kernel planner
+    (``repro.search.plan``), sized for this workload and device.
 
     Every call re-pads the (N, D) database inside the jitted program —
     fine for one-shot functional use and the legacy ``kernels.ops`` shims,
@@ -337,6 +339,17 @@ def pallas_search(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if block_m is None or max_block_n is None:
+        from repro.search import plan as planlib
+
+        p = planlib.plan_search(
+            n=database.shape[0], d=queries.shape[1], k=k,
+            m=queries.shape[0], metric=metric, recall_target=recall_target,
+            backend="pallas",
+            reduction_input_size_override=reduction_input_size_override,
+        )
+        block_m = block_m or p.block_m
+        max_block_n = max_block_n or p.block_n
     return _pallas_search_jit(
         queries, database, row_bias,
         metric=metric, k=k, recall_target=recall_target,

@@ -52,8 +52,8 @@ def search(
     row_bias: Optional[jnp.ndarray] = None,
     reduction_input_size_override: int = -1,
     aggregate_to_topk: bool = True,
-    block_m: int = 256,
-    max_block_n: int = 1024,
+    block_m: Optional[int] = None,
+    max_block_n: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-shot search of ``queries`` against a raw ``database``.
@@ -61,6 +61,7 @@ def search(
     The database is metric-prepared (and, on the pallas backend, re-packed
     inside jit) on every call — use ``Index.build`` to amortize that into a
     device-resident ``PackedState`` and get single-dispatch batch streaming.
+    Tile sizes left ``None`` are planner-derived (``repro.search.plan``).
     """
     m_obj = get_metric(metric)
     db, metric_bias = m_obj.prepare_database(database)

@@ -24,6 +24,7 @@ dispatches; compiled callables are memoized per (shape, dtype, spec) in a
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import NamedTuple, Optional, Tuple, Union
 
@@ -32,7 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.binning import BinPlan, plan_bins, round_up
-from repro.search import backends, packed as packedlib
+from repro.search import backends, packed as packedlib, plan as planlib
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
 
@@ -68,6 +69,7 @@ class Index:
         db_axis: str = "model",
         batch_axis: Optional[str] = None,
         interpret: Optional[bool] = None,
+        kernel_plan: Optional[planlib.Plan] = None,
     ):
         self.spec = spec
         self._db = db
@@ -79,6 +81,7 @@ class Index:
         self._db_axis = db_axis
         self._batch_axis = batch_axis
         self._interpret = interpret
+        self._kernel_plan = kernel_plan
         self._packed: Optional[packedlib.PackedState] = None
         self._cache = backends.CompileCache()
 
@@ -97,6 +100,9 @@ class Index:
         capacity: Optional[int] = None,
         capacity_block: int = 1024,
         interpret: Optional[bool] = None,
+        plan: Union[str, planlib.Plan] = "model",
+        device: Optional[str] = None,
+        plan_cache: Optional[planlib.PlanCache] = None,
         **spec_kwargs,
     ) -> "Index":
         """Create an index over ``database`` rows (N, D).
@@ -106,6 +112,25 @@ class Index:
         ``interpret`` forces Pallas interpret mode (auto: on except on TPU).
         The packed search state (metric precompute, fused bias row, kernel
         layout) is materialized here, at build time — not on first search.
+
+        ``plan`` selects how kernel parameters (tile sizes, query block)
+        are chosen for spec fields left ``None``:
+
+          * ``"model"`` (default): analytically, from the paper's
+            performance model (``repro.search.plan.plan_search``).
+          * ``"measure"``: the model's choice refined by a short on-device
+            sweep (``repro.search.plan.tune_plan``), persisted in
+            ``plan_cache`` (or the ``REPRO_PLAN_CACHE`` file).
+          * a :class:`repro.search.plan.Plan` instance: used as-is.
+
+        Explicit block fields in ``spec``/``spec_kwargs`` always pin the
+        corresponding choice.  ``device`` names a hardware profile from
+        ``repro.core.roofline.HARDWARE`` (default: auto-detect).
+
+        >>> import jax.numpy as jnp
+        >>> idx = Index.build(jnp.eye(32), metric="mips", k=2)
+        >>> idx.spec.resolved and idx.kernel_plan.source == "model"
+        True
         """
         if spec is None:
             spec = SearchSpec(
@@ -121,10 +146,43 @@ class Index:
         if cap > n:
             cap = round_up(cap, capacity_block)
             database = jnp.pad(database, ((0, cap - n), (0, 0)))
+
+        # Resolve the kernel plan over the *capacity* row space — that is
+        # what the packed layout (and its bin plan) covers.
+        plan_backend = spec.backend
+        if plan_backend == "auto":
+            plan_backend = backends.default_backend(None)
+        if isinstance(plan, planlib.Plan):
+            plan_obj = plan
+        elif plan in ("model", "measure"):
+            plan_obj = planlib.plan_search(
+                n=cap, d=database.shape[1], k=spec.k, metric=spec.metric,
+                recall_target=spec.recall_target,
+                # the planner sizes tiles for the dtype that actually runs:
+                # the spec override, else the database's own
+                dtype=spec.dtype or str(database.dtype),
+                backend=plan_backend, device=device,
+                reduction_input_size_override=
+                    spec.reduction_input_size_override,
+                block_m=spec.block_m, max_block_n=spec.max_block_n,
+                query_block=spec.query_block,
+            )
+            if plan == "measure" and plan_obj.source != "user":
+                plan_obj = planlib.tune_plan(
+                    database, plan_obj, spec=spec, cache=plan_cache,
+                    interpret=interpret,
+                )
+        else:
+            raise ValueError(
+                f"plan must be 'model', 'measure' or a Plan, got {plan!r}"
+            )
+        spec = plan_obj.to_spec(spec)
+
         live = jnp.zeros((cap,), bool).at[:n].set(True)
         index = cls(
             spec, database, live, size=n, num_live=n,
             capacity_block=capacity_block, interpret=interpret,
+            kernel_plan=plan_obj,
         )
         if spec.backend != "sharded":
             # backend="sharded" has no mesh yet; ``shard`` packs instead.
@@ -180,6 +238,149 @@ class Index:
     @property
     def expected_recall(self) -> float:
         return self.plan.expected_recall
+
+    def _replan(
+        self,
+        *,
+        n: Optional[int] = None,
+        m: Optional[int] = None,
+        backend: Optional[str] = None,
+        device: Optional[str] = None,
+        pin_from: Optional[planlib.Plan] = None,
+    ) -> planlib.Plan:
+        """One re-planning entry point for growth/shard/explain.
+
+        Always carries the spec's recall accounting
+        (``reduction_input_size_override``) and the *actual* operand dtype
+        (spec override or the database's own), so a derived plan can never
+        diverge from the packed layout's bin math.  ``pin_from`` pins the
+        tile triple of an existing plan (layout-preserving re-plans);
+        otherwise the spec's own (possibly ``None``) fields apply.
+        """
+        spec = self.spec
+        tiles = (
+            dict(block_m=pin_from.block_m, max_block_n=pin_from.block_n,
+                 query_block=pin_from.query_block)
+            if pin_from is not None
+            else dict(block_m=spec.block_m, max_block_n=spec.max_block_n,
+                      query_block=spec.query_block)
+        )
+        return planlib.plan_search(
+            n=self.capacity if n is None else n, d=self.dim, k=spec.k,
+            m=m, metric=spec.metric, recall_target=spec.recall_target,
+            dtype=spec.dtype or str(self._db.dtype),
+            backend=backend or self._resolve_backend(),
+            device=device or (pin_from.device if pin_from else None),
+            reduction_input_size_override=spec.reduction_input_size_override,
+            **tiles,
+        )
+
+    @property
+    def kernel_plan(self) -> planlib.Plan:
+        """The resolved kernel plan (``repro.search.plan.Plan``) — tile
+        sizes, bin layout and the roofline prediction behind them."""
+        if self._kernel_plan is None:
+            self._kernel_plan = self._replan()
+        return self._kernel_plan
+
+    def explain(
+        self,
+        *,
+        m: Optional[int] = None,
+        measure: bool = False,
+        validate_hlo: bool = False,
+    ) -> dict:
+        """The plan behind this index, with its predicted roofline position.
+
+        Returns a dict with the resolved ``plan`` (tiles, bin layout,
+        provenance), the ``predicted`` roofline placement (attainable
+        FLOP/s, binding wall, per-batch wall time — Eq. 4–10), and the
+        analytic ``expected_recall`` (Eq. 13).  ``m`` re-evaluates the
+        prediction for a specific query-batch size (default: one
+        ``query_block``).
+
+        ``measure=True`` additionally times a synthetic batch on the live
+        index and reports achieved FLOP/s and the fraction of the model's
+        attainable roof actually reached.  ``validate_hlo=True`` (xla
+        backend) lowers the search program and cross-checks the model's
+        FLOP count against the compiled HLO (``repro.search.plan.hlo_check``).
+        """
+        plan = self.kernel_plan
+        if m is not None and m != plan.m:
+            plan = dataclasses.replace(
+                self._replan(n=plan.n, m=m, backend=plan.backend,
+                             pin_from=plan),
+                source=plan.source,
+            )
+        report = {
+            "plan": plan.summary(),
+            "backend": self._resolve_backend(),
+            "expected_recall": plan.expected_recall,
+            "predicted": {
+                "device": plan.device,
+                "flops": plan.flops,
+                "hbm_bytes": plan.hbm_bytes,
+                "cops": plan.cops,
+                "i_mem": plan.i_mem,
+                "i_cop": plan.i_cop,
+                "attainable_flops": plan.attainable_flops,
+                "bottleneck": plan.bottleneck,
+                "wall_s": plan.predicted_s,
+                "qps": plan.predicted_qps,
+            },
+        }
+        if self._packed is not None:
+            report["packed"] = {
+                "n": self._packed.n,
+                "db_shape": tuple(self._packed.db.shape),
+                "bin_size": self._packed.bin_size,
+                "block_n": self._packed.block_n,
+            }
+        m_eff = m or plan.m or plan.query_block
+        if measure:
+            queries = jax.random.normal(
+                jax.random.PRNGKey(0), (m_eff, self.dim), self._db.dtype
+            )
+            wall = planlib.time_search(self, queries, repeats=3)
+            # plan.flops is already the backend-correct count for m_eff
+            # (padded kernel layout on pallas, raw operands on xla/sharded)
+            achieved = plan.flops / wall
+            report["measured"] = {
+                "wall_s": wall,
+                "qps": m_eff / wall,
+                "achieved_flops": achieved,
+                "roofline_fraction": achieved / plan.attainable_flops,
+            }
+        if validate_hlo:
+            backend = self._resolve_backend()
+            if backend != "xla":
+                report["hlo"] = {"skipped": f"hlo check is xla-only "
+                                 f"(resolved backend {backend!r})"}
+            else:
+                pk = self.pack()
+                q = jax.ShapeDtypeStruct(
+                    (min(m_eff, self.spec.query_block), self.dim),
+                    self._db.dtype,
+                )
+                lowered = backends.dense_search.lower(
+                    q, pk.db, pk.bias,
+                    metric=self.spec.metric, k=self.spec.k,
+                    recall_target=self.spec.recall_target,
+                    reduction_input_size_override=
+                        self.spec.reduction_input_size_override,
+                    aggregate_to_topk=self.spec.aggregate_to_topk,
+                    use_bitonic=self.spec.use_bitonic,
+                ).compile()
+                block_plan = plan
+                if q.shape[0] != plan.m:
+                    block_plan = self._replan(
+                        n=plan.n, m=q.shape[0], backend=plan.backend,
+                        pin_from=plan,
+                    )
+                report["hlo"] = planlib.hlo_check(
+                    block_plan, lowered.as_text()
+                )
+        return report
 
     def cache_info(self) -> dict:
         return self._cache.info()
@@ -245,6 +446,14 @@ class Index:
         than k live rows exist (mass deletes), the tail of each result row
         is filled with sentinel values (float32 min) and arbitrary indices
         of masked rows.
+
+        >>> import jax.numpy as jnp
+        >>> index = Index.build(jnp.eye(16), metric="mips", k=3)
+        >>> values, indices = index.search(jnp.eye(16)[:4])
+        >>> indices.shape
+        (4, 3)
+        >>> int(indices[0, 0])  # e_0's best match is row 0
+        0
         """
         queries = jnp.asarray(queries)
         if queries.ndim != 2:
@@ -457,6 +666,15 @@ class Index:
                 self._packed = self._packed.relayout(
                     self._packed.backend, new_cap, self.spec
                 )
+            if self._kernel_plan is not None:
+                # Same pinned tiles, re-planned bins/prediction for the
+                # grown row space (mirrors the packed relayout).
+                p = self._kernel_plan
+                self._kernel_plan = dataclasses.replace(
+                    self._replan(n=new_cap, m=p.m or None,
+                                 backend=p.backend, pin_from=p),
+                    source=p.source,
+                )
             if self._mesh is not None:
                 self._reshard()
         self._db = self._db.at[self._size : required].set(
@@ -512,12 +730,22 @@ class Index:
         if cap > self.capacity:
             db = jnp.pad(db, ((0, cap - self.capacity), (0, 0)))
             live = jnp.pad(live, (0, cap - self.capacity))
+        sharded_plan = None
+        if self._kernel_plan is not None:
+            # Same tiles (the packed layout carries over); re-evaluate the
+            # prediction for the sharded backend and global capacity.
+            p = self._kernel_plan
+            sharded_plan = dataclasses.replace(
+                self._replan(n=cap, m=p.m or None, backend="sharded",
+                             pin_from=p),
+                source=p.source,
+            )
         out = Index(
             self.spec.with_backend("sharded"), db, live,
             size=self._size, num_live=self._num_live,
             capacity_block=self._capacity_block,
             mesh=mesh, db_axis=db_axis, batch_axis=batch_axis,
-            interpret=self._interpret,
+            interpret=self._interpret, kernel_plan=sharded_plan,
         )
         if self._packed is not None:
             out._packed = self._packed.relayout("sharded", cap, out.spec)

@@ -24,6 +24,13 @@ here):
 
 ``exact`` baselines (Faiss-Flat analogues) follow the same contract and are
 what the parity/recall tests compare against.
+
+>>> get_metric("l2").negate_output      # ascending relaxed distances
+True
+>>> get_metric("mips").negate_output    # descending inner products
+False
+>>> "cosine" in available_metrics()
+True
 """
 from __future__ import annotations
 

@@ -195,7 +195,13 @@ def _layout(
     )
     bin_size = plan.bin_size
     if backend == "pallas":
-        block_n = bin_size * max(1, spec.max_block_n // bin_size)
+        # Specs built via Index.build are always planner-resolved; direct
+        # pack_state callers may pass an unresolved spec, which gets the
+        # planner's anchor tile (repro.search.plan owns the real model).
+        from repro.search.plan import DEFAULT_BLOCK_N
+
+        max_bn = spec.max_block_n or DEFAULT_BLOCK_N
+        block_n = bin_size * max(1, max_bn // bin_size)
         n_pad = round_up(max(n, block_n), block_n)
         d_pad = round_up(d, 128)
         rows = jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
@@ -222,6 +228,14 @@ def pack_state(
     The only entry point that runs ``Metric.prepare_database`` on the
     whole database — everything after build goes through the incremental
     patches above.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.search.metrics import get_metric
+    >>> from repro.search.spec import SearchSpec
+    >>> st = pack_state(jnp.ones((10, 4)), None, get_metric("mips"),
+    ...                 SearchSpec(k=2), "xla")
+    >>> (st.backend, st.n, st.d, st.rows().shape)
+    ('xla', 10, 4, (10, 4))
     """
     n, d = database.shape
     db = database

@@ -1,0 +1,744 @@
+"""Model-driven kernel planner: the paper's performance model as a subsystem.
+
+The paper's central claim (abstract, §4–5) is that every kernel parameter of
+the search can be derived *analytically* — from the accelerator performance
+model (Eq. 4–10) and the recall guarantee (Eq. 13–14) — with no empirical
+index tuning.  This module is where that happens: ``plan_search`` maps a
+workload description ``(M, N, D, k, dtype, metric, recall_target)`` plus a
+device profile onto a frozen :class:`Plan` holding
+
+  * the bin layout ``(L, W)`` from the recall guarantee
+    (``repro.core.binning``, Eq. 13–14),
+  * the kernel tiles ``block_m`` / ``block_n`` sized against the device's
+    on-chip memory budget and the MXU/VPU tiling contract,
+  * the host-level ``query_block`` (bounding the (query_block, N) score
+    tile of the XLA backend) and the ``stream`` decision,
+  * roofline predictions — FLOPs, HBM bytes, COPs, the two operational
+    intensities, attainable FLOP/s and the binding wall (Eq. 4–6, Eq. 20) —
+    via ``repro.core.roofline``.
+
+``Index.build(..., plan="model")`` (the default) consumes a Plan instead of
+hard-coded tile sizes; ``plan="measure"`` refines the model's pick with a
+short on-device sweep (:func:`tune_plan`, persisted in a :class:`PlanCache`);
+``Index.explain()`` reports the plan with predicted — and optionally
+measured — roofline position.
+
+The planner is deliberately conservative where the model and the legacy
+defaults agree: when the memory budget allows the historical (256, 1024)
+tiles, it picks exactly those, so model-planned searches are bit-identical
+to the previous hard-coded configuration (tested in ``tests/test_plan.py``).
+
+Doctest — planning is pure math, no device needed:
+
+>>> p = plan_search(n=1_000_000, d=128, k=10, m=10_000, metric="l2",
+...                 recall_target=0.95, device="tpu_v4")
+>>> p.num_bins >= 10 and p.expected_recall >= 0.95
+True
+>>> p.block_n % p.bin_size == 0 and p.d_pad % 128 == 0
+True
+>>> p.bottleneck in ("compute", "memory", "instruction")
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.core.binning import BinPlan, plan_bins, round_up
+from repro.core.roofline import (
+    HARDWARE,
+    Hardware,
+    KernelCost,
+    attainable_flops,
+    bottleneck,
+    cops_per_dot,
+    partial_reduce_cost,
+)
+from repro.search.spec import SearchSpec
+
+__all__ = [
+    "Plan",
+    "PlanCache",
+    "plan_search",
+    "tune_plan",
+    "detect_device",
+    "hlo_check",
+    "DEFAULT_BLOCK_M",
+    "DEFAULT_BLOCK_N",
+    "DEFAULT_QUERY_BLOCK",
+    "SCORE_TILE_BUDGET",
+]
+
+# The legacy hard-coded tiles, now the *anchors* the model shrinks from when
+# the workload or the device budget demands it.  256 query rows keep the
+# 128x128 MXU fed across two passes; 1024 database rows per tile is the
+# empirically-validated VMEM sweet spot the paper's open-source kernels use.
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 1024
+DEFAULT_QUERY_BLOCK = 4096
+
+# The XLA backend materializes the (query_block, N) score tile in HBM before
+# ApproxTopK consumes it; the planner bounds that tile to this many bytes.
+SCORE_TILE_BUDGET = 64 * 2**20
+
+_DTYPE_BYTES = {
+    "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+    "float64": 8, "f32": 4, "bf16": 2,
+}
+
+# Minimum second-to-last-dim tile (sublane count) per dtype on TPU; the last
+# dim is always 128 lanes (see the Pallas tiling contract).
+_SUBLANE = {4: 8, 2: 16, 1: 32, 8: 8}
+
+
+def _dtype_bytes(dtype: Optional[str]) -> int:
+    if dtype is None:
+        return 4
+    return _DTYPE_BYTES.get(str(dtype), 4)
+
+
+def detect_device(name: Optional[str] = None) -> str:
+    """Resolve a device-profile name against ``repro.core.roofline.HARDWARE``.
+
+    ``None`` auto-detects from the live JAX backend: TPUs map onto the
+    closest Table-1 profile by device kind, GPUs onto A100, anything else
+    onto the ``"cpu"`` host profile (whose tile budget mirrors the TPU so
+    host-planned layouts match device-planned ones).
+
+    >>> detect_device("tpu_v4")
+    'tpu_v4'
+    """
+    if name is not None:
+        if name not in HARDWARE:
+            raise ValueError(
+                f"unknown device profile {name!r}; known: {sorted(HARDWARE)}"
+            )
+        return name
+    import jax
+
+    backend = jax.default_backend()
+    if backend == "tpu":
+        kind = jax.devices()[0].device_kind.lower()
+        # device_kind strings look like "tpu v3", "tpu v4", "tpu v5 lite".
+        # Only v5e/v5-lite maps to the v5e profile; other v5 variants
+        # (e.g. v5p) have no profile yet and take the generic v4 default
+        # rather than v5e's much lower roofline.
+        if "v5e" in kind or "v5 lite" in kind or "v5lite" in kind:
+            return "tpu_v5e"
+        if "v4" in kind:
+            return "tpu_v4"
+        if "v3" in kind:
+            return "tpu_v3"
+        return "tpu_v4"
+    if backend == "gpu":
+        return "a100"
+    return "cpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The analytically-derived kernel configuration for one search workload.
+
+    Everything ``Index.build`` needs to lay out the packed state and compile
+    the search — plus the roofline prediction explaining *why* these numbers
+    (Eq. 4–10), so ``Index.explain()`` can report predicted vs measured
+    position against the three walls.
+
+    Workload: ``m`` (query batch; 0 = unknown, predictions then assume one
+    ``query_block``), ``n`` rows, ``d`` dims, ``k`` neighbours, ``metric``,
+    ``dtype``, ``recall_target``, ``backend``, ``device`` (profile name).
+
+    Derived layout: ``num_bins``/``log2_bin_size``/``padded_n`` (Eq. 13–14
+    via ``repro.core.binning``), ``d_pad`` (lane padding), ``block_m`` /
+    ``block_n`` (kernel tiles), ``query_block``, ``stream``.
+
+    Predictions (per ``query_block``-sized dispatch): ``flops``,
+    ``hbm_bytes``, ``cops`` (Appendix A.5), the intensities
+    ``i_mem``/``i_cop``, ``attainable_flops`` and the binding ``bottleneck``
+    wall (Eq. 6), and ``predicted_s``/``predicted_qps``.  The cost model
+    matches the backend that runs: the fused-kernel Eq. 20 traffic model
+    over the padded layout for ``pallas``, the unfused Level-3-BLAS shape
+    over the raw operands for ``xla``/``sharded``.
+
+    ``source`` records provenance: ``"model"`` (analytic), ``"measure"``
+    (refined by :func:`tune_plan`), or ``"user"`` (explicit overrides pinned
+    every choice).
+    """
+
+    # workload
+    m: int
+    n: int
+    d: int
+    k: int
+    metric: str
+    dtype: str
+    recall_target: float
+    backend: str
+    device: str
+    # bin layout (Eq. 13-14)
+    num_bins: int
+    log2_bin_size: int
+    padded_n: int
+    expected_recall: float
+    # kernel layout
+    d_pad: int
+    block_m: int
+    block_n: int
+    query_block: int
+    stream: bool
+    # roofline prediction (Eq. 4-10)
+    flops: float
+    hbm_bytes: float
+    cops: float
+    i_mem: float
+    i_cop: float
+    attainable_flops: float
+    bottleneck: str
+    predicted_s: float
+    predicted_qps: float
+    source: str = "model"
+    # recall-accounting N override (paper §7); carried so re-plans (growth,
+    # shard, explain) keep the same accounting as the packed layout.
+    reduction_input_size_override: int = -1
+
+    @property
+    def bin_size(self) -> int:
+        return 1 << self.log2_bin_size
+
+    @property
+    def bin_plan(self) -> BinPlan:
+        """The recall-guarantee layout as a ``repro.core.binning.BinPlan``."""
+        return BinPlan(
+            n=self.n, k=self.k, num_bins=self.num_bins,
+            log2_bin_size=self.log2_bin_size, padded_n=self.padded_n,
+            expected_recall=self.expected_recall,
+        )
+
+    @property
+    def cost(self) -> KernelCost:
+        return KernelCost(
+            flops=self.flops, hbm_bytes=self.hbm_bytes, cops=self.cops
+        )
+
+    @property
+    def hardware(self) -> Hardware:
+        return HARDWARE[self.device]
+
+    def to_spec(self, base: Optional[SearchSpec] = None) -> SearchSpec:
+        """Materialize a concrete ``SearchSpec`` from this plan.
+
+        Block fields the ``base`` spec already pins (non-``None``) win over
+        the plan — explicit user overrides are never silently replaced.
+        """
+        base = base or SearchSpec(
+            metric=self.metric, k=self.k, recall_target=self.recall_target,
+            backend=self.backend,
+        )
+        return dataclasses.replace(
+            base,
+            block_m=base.block_m or self.block_m,
+            max_block_n=base.max_block_n or self.block_n,
+            query_block=base.query_block or self.query_block,
+        )
+
+    def summary(self) -> dict:
+        """Flat dict view (what ``Index.explain()`` embeds)."""
+        out = dataclasses.asdict(self)
+        out["bin_size"] = self.bin_size
+        return out
+
+
+def _vmem_budget(hw: Hardware) -> float:
+    """Usable on-chip bytes per grid step: the operand tiles are
+    double-buffered but the score/winner scratch is not, so ~3/4 of VMEM
+    is the practical ceiling."""
+    return 0.75 * hw.vmem_bytes
+
+
+def _vmem_need(block_m: int, block_n: int, d_pad: int, dtype_bytes: int,
+               bin_size: int) -> float:
+    """On-chip bytes one (block_m, block_n) grid step holds."""
+    return (
+        d_pad * (block_m + block_n) * dtype_bytes   # operand tiles
+        + block_m * block_n * 4                     # score tile (f32)
+        + 2 * block_m * max(1, block_n // bin_size) * 4  # winners (val+idx)
+    )
+
+
+def _plan_tiles(
+    n: int,
+    d_pad: int,
+    bin_size: int,
+    m: Optional[int],
+    dtype_bytes: int,
+    hw: Hardware,
+    *,
+    block_m: Optional[int] = None,
+    max_block_n: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Initial kernel tile sizes from the on-chip memory model.
+
+    VMEM per grid step holds the query tile (block_m, d_pad), the database
+    tile (block_n, d_pad), the score tile (block_m, block_n) and the bin
+    winners.  Tiles honour the TPU tiling contract (sublane-multiple rows,
+    128-lane columns) and never exceed the data: ``block_n`` stops at the
+    bin-aligned database size, so a small database is not padded up to a
+    full default tile.  ``block_m`` may subsequently be *escalated* by
+    :func:`plan_search` to push the kernel off the memory wall (Eq. 10).
+    """
+    sublane = _SUBLANE.get(dtype_bytes, 8)
+    if block_m is None:
+        block_m = DEFAULT_BLOCK_M if m is None else min(
+            DEFAULT_BLOCK_M, max(sublane, round_up(m, sublane))
+        )
+
+    if max_block_n is not None:
+        # Pinned: honour it exactly the way the packed layout will
+        # (packed._layout derives block_n = bin_size * (max_block_n //
+        # bin_size)), so the plan always describes the executed tile.
+        return block_m, bin_size * max(1, max_block_n // bin_size)
+
+    budget = _vmem_budget(hw)
+    # block_n must be a multiple of the bin size (the kernel's
+    # (bm, bn) -> (bm, bins, bin_size) reshape) AND of the dtype's sublane
+    # count (TPU second-to-minor tiling); both are powers of two, so their
+    # lcm is the max.
+    unit = max(bin_size, sublane)
+    n_aligned = round_up(n, unit)
+    g_data = max(1, n_aligned // unit)
+    g_anchor = max(1, DEFAULT_BLOCK_N // unit)
+    g = min(g_data, g_anchor)
+    while g > 1 and _vmem_need(
+        block_m, g * unit, d_pad, dtype_bytes, bin_size
+    ) > budget:
+        g -= 1
+    return block_m, g * unit
+
+
+def _escalate_block_m(
+    block_m: int,
+    block_n: int,
+    m_eff: int,
+    padded_n: int,
+    d_pad: int,
+    num_bins: int,
+    c: float,
+    dtype_bytes: int,
+    bin_size: int,
+    hw: Hardware,
+) -> int:
+    """Grow the query tile until the memory wall clears the other walls.
+
+    The kernel grid streams the full database once per ``block_m`` query
+    rows (Eq. 20's ``ib``), so a too-small query tile makes the kernel
+    memory-bound regardless of N.  The model doubles ``block_m`` — within
+    the VMEM budget, the query batch, and a 1024-row cap — until the
+    attainable FLOP/s stop being memory-limited.  This is the planner
+    reproducing the paper's Fig. 2 reasoning as a *decision* instead of a
+    figure.
+    """
+    cap = min(1024, max(block_m, round_up(m_eff, 8)))
+    while block_m < cap:
+        cost = partial_reduce_cost(
+            m_eff, padded_n, d_pad, num_bins,
+            cops_per_dot=c, block_rows=block_m, dtype_bytes=dtype_bytes,
+        )
+        memory_wall = hw.hbm_bandwidth * cost.i_mem
+        other_walls = min(hw.peak_flops, hw.peak_cops * cost.i_cop)
+        if memory_wall >= other_walls:
+            break
+        bigger = min(cap, block_m * 2)
+        if _vmem_need(bigger, block_n, d_pad, dtype_bytes, bin_size) \
+                > _vmem_budget(hw):
+            break
+        block_m = bigger
+    return block_m
+
+
+def _dense_cost(m: int, n: int, d: int, l: int, dtype_bytes: int
+                ) -> KernelCost:
+    """Cost of the *unfused* dense path (Remark 1 / Level-3 BLAS shape).
+
+    ``dense_search`` materializes the full (M, N) f32 score matrix in HBM
+    before ApproxTopK consumes it, over the unpadded (N, D) operands — so
+    its model is operand reads + score write/read + bin winners, not the
+    fused kernel's Eq. 20.  This is what makes the dense baseline
+    memory-bound at paper scale, i.e. why the fused kernel exists.
+    """
+    flops = 2.0 * m * n * d
+    hbm = dtype_bytes * (m * d + n * d) + 4.0 * (2.0 * m * n + 2.0 * m * l)
+    cops = float(m) * n  # the reduction's compare chain
+    return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
+def _plan_query_block(n: int, backend: str) -> int:
+    """Host-level query tiling: bound the XLA backend's (qb, N) score tile.
+
+    The fused Pallas kernel never materializes the full score matrix, so it
+    keeps the full default.  So does the sharded backend: its score tile is
+    ``(qb, n_local)`` *per shard*, and the shard count is unknown at plan
+    time — shrinking against the global N would explode the dispatch count
+    on exactly the large-N meshes sharding exists for.  Only the dense
+    single-device XLA path, which writes the full ``4*qb*n`` score bytes
+    per dispatch, shrinks ``qb`` under ``SCORE_TILE_BUDGET``.
+    """
+    if backend != "xla":
+        return DEFAULT_QUERY_BLOCK
+    qb = SCORE_TILE_BUDGET // max(1, 4 * n)
+    if qb >= DEFAULT_QUERY_BLOCK:
+        return DEFAULT_QUERY_BLOCK
+    # Largest power of two under budget, floored at one sublane tile.
+    qb = 1 << max(3, int(math.floor(math.log2(max(8, qb)))))
+    return min(qb, DEFAULT_QUERY_BLOCK)
+
+
+def plan_search(
+    *,
+    n: int,
+    d: int,
+    k: int,
+    m: Optional[int] = None,
+    metric: str = "mips",
+    recall_target: float = 0.95,
+    dtype: Optional[str] = None,
+    backend: str = "xla",
+    device: Optional[str] = None,
+    reduction_input_size_override: int = -1,
+    block_m: Optional[int] = None,
+    max_block_n: Optional[int] = None,
+    query_block: Optional[int] = None,
+) -> Plan:
+    """Derive every kernel parameter analytically (Eq. 4–10 + Eq. 13–14).
+
+    The planner never raises on awkward workloads — k = 1 (bins
+    degenerate), N smaller than a database tile, D not a multiple of the
+    128-lane contract, recall targets at the guarantee's ceiling — it falls
+    back to the nearest valid layout instead (degenerate bins become the
+    exact top-k layout; tiles clamp to the data).
+
+    Explicit ``block_m`` / ``max_block_n`` / ``query_block`` overrides pin
+    the corresponding choice (the prediction is then computed *for the
+    pinned layout*, and ``source`` reports ``"user"`` if every knob was
+    pinned).
+
+    >>> plan_search(n=100, d=8, k=1, device="tpu_v4").num_bins >= 1
+    True
+    >>> plan_search(n=64, d=7, k=4, device="cpu").d_pad
+    128
+    """
+    if n <= 0 or d <= 0:
+        raise ValueError(f"need positive n, d; got n={n}, d={d}")
+    if k > n:
+        raise ValueError(f"k={k} exceeds database size n={n}")
+    device = detect_device(device)
+    hw = HARDWARE[device]
+    dtype_name = str(dtype) if dtype is not None else "float32"
+    dbytes = _dtype_bytes(dtype)
+
+    bins = plan_bins(
+        n, k, recall_target,
+        reduction_input_size_override=reduction_input_size_override,
+    )
+    d_pad = round_up(d, 128)
+    bm, bn = _plan_tiles(
+        n, d_pad, bins.bin_size, m, dbytes, hw,
+        block_m=block_m, max_block_n=max_block_n,
+    )
+    qb = query_block or _plan_query_block(n, backend)
+
+    m_eff = m if m else qb
+    flags = dict(
+        l2=(metric == "l2"),
+        non_pow2_n=(bins.padded_n != n),
+        # D is padded with zero lanes at pack time — exact for dot
+        # products, so no runtime masking COP; likewise the fused bias row
+        # folds the ||x||^2/2 broadcast into the tombstone/tail mask add
+        # (Appendix A.5 — this is why the packed layout exists).
+        padded_d=False,
+        broadcast_norm=False,
+    )
+    c = cops_per_dot(**flags)
+    if backend == "pallas":
+        # Only the fused kernel consumes block_m; escalate it off the
+        # memory wall (Eq. 10/20) and cost the padded kernel layout.
+        if block_m is None:
+            bm = _escalate_block_m(
+                bm, bn, m_eff, bins.padded_n, d_pad, bins.num_bins, c,
+                dbytes, bins.bin_size, hw,
+            )
+        cost = partial_reduce_cost(
+            m_eff, bins.padded_n, d_pad, bins.num_bins,
+            cops_per_dot=c, block_rows=bm, dtype_bytes=dbytes,
+        )
+    else:
+        # The dense xla path (and each sharded shard) runs the *unpadded*
+        # operands unfused — model the program that actually executes.
+        cost = _dense_cost(m_eff, n, d, bins.num_bins, dbytes)
+    att = attainable_flops(cost, hw)
+    predicted_s = cost.flops / att
+    pinned = all(v is not None for v in (block_m, max_block_n, query_block))
+    return Plan(
+        m=m or 0, n=n, d=d, k=k, metric=metric, dtype=dtype_name,
+        recall_target=recall_target, backend=backend, device=device,
+        num_bins=bins.num_bins, log2_bin_size=bins.log2_bin_size,
+        padded_n=bins.padded_n, expected_recall=bins.expected_recall,
+        d_pad=d_pad, block_m=bm, block_n=bn, query_block=qb,
+        stream=True,
+        flops=cost.flops, hbm_bytes=cost.hbm_bytes, cops=cost.cops,
+        i_mem=cost.i_mem, i_cop=cost.i_cop,
+        attainable_flops=att, bottleneck=bottleneck(cost, hw),
+        predicted_s=predicted_s, predicted_qps=m_eff / predicted_s,
+        source="user" if pinned else "model",
+        reduction_input_size_override=reduction_input_size_override,
+    )
+
+
+# --- measured refinement (subsumes the old hillclimb loop) -------------------
+
+
+def time_search(index, queries, *, repeats: int = 3, passes: int = 2
+                ) -> float:
+    """Wall seconds per ``index.search(queries)``, compile excluded.
+
+    One warmup dispatch (triggers trace + compile), then the best-of-
+    ``passes`` mean over ``repeats`` searches — the same protocol as
+    ``benchmarks/bench_search.py``, shared here so ``tune_plan`` and
+    ``Index.explain(measure=True)`` cannot drift apart.
+    """
+    index.search(queries).values.block_until_ready()
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = index.search(queries)
+        out.values.block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / repeats)
+    return best
+
+
+def _with_measured_tiles(plan: Plan, bm: int, bn: int, qb: int) -> Plan:
+    """Re-derive the plan for the measured tile triple.
+
+    A plain ``dataclasses.replace`` of the tiles would leave the roofline
+    prediction (flops/bytes/bottleneck/predicted_s) describing the *old*
+    tiles; re-running ``plan_search`` with the winners pinned keeps the
+    prediction consistent with the configuration it describes.
+    """
+    refreshed = plan_search(
+        n=plan.n, d=plan.d, k=plan.k, m=plan.m or None, metric=plan.metric,
+        recall_target=plan.recall_target, dtype=plan.dtype,
+        backend=plan.backend, device=plan.device,
+        reduction_input_size_override=plan.reduction_input_size_override,
+        block_m=bm, max_block_n=bn, query_block=qb,
+    )
+    return dataclasses.replace(refreshed, source="measure")
+
+
+class PlanCache:
+    """Persistent store of measured plan refinements.
+
+    Keys are the full workload signature (device, backend, metric, dtype,
+    shapes, recall target); values are the winning tile triple plus the
+    measured wall time.  Backed by a JSON file when ``path`` is given (or
+    the ``REPRO_PLAN_CACHE`` environment variable is set); in-memory
+    otherwise.  Corrupt or missing files are treated as empty.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or os.environ.get("REPRO_PLAN_CACHE")
+        self._entries: Dict[str, dict] = {}
+        if self.path and os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    self._entries = json.load(f)
+            except (OSError, ValueError):
+                self._entries = {}
+
+    @staticmethod
+    def key(plan: Plan, spec: Optional[SearchSpec] = None) -> str:
+        base = (
+            f"{plan.device}/{plan.backend}/{plan.metric}/{plan.dtype}"
+            f"/m{plan.m}/n{plan.n}/d{plan.d}/k{plan.k}/r{plan.recall_target}"
+        )
+        if spec is not None and not (
+            spec.block_m is None
+            and spec.max_block_n is None
+            and spec.query_block is None
+        ):
+            # User-pinned knobs constrain the sweep, so results measured
+            # under pins must not be served to unpinned workloads.
+            base += f"/pin{spec.block_m}-{spec.max_block_n}-{spec.query_block}"
+        return base
+
+    def get(self, plan: Plan, spec: Optional[SearchSpec] = None
+            ) -> Optional[dict]:
+        return self._entries.get(self.key(plan, spec))
+
+    def put(self, plan: Plan, entry: dict,
+            spec: Optional[SearchSpec] = None) -> None:
+        self._entries[self.key(plan, spec)] = entry
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self._entries, f, indent=1, sort_keys=True)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+def _tile_candidates(plan: Plan, spec: Optional[SearchSpec] = None) -> list:
+    """Small neighbourhood sweep around the model's pick.
+
+    Halved/doubled tiles, clamped to validity (sublane floor, bin-size
+    multiples, never beyond the data) — the refinement is a *local* check
+    of the model, not a grid search; anything further from the model's
+    optimum than 2x is the model being wrong, which is a bug to fix in the
+    model, not something to tune around.  Only knobs the sweep may
+    legitimately move are varied: user-pinned ``spec`` fields stay fixed,
+    and the dense XLA / sharded paths ignore the Pallas tiles, so for them
+    only ``query_block`` varies.
+    """
+    sublane = _SUBLANE.get(_dtype_bytes(plan.dtype), 8)
+    unit = max(plan.bin_size, sublane)  # bin-size AND sublane alignment
+    n_aligned = round_up(plan.n, unit)
+
+    def clamp_bm(v):
+        return max(sublane, min(1024, round_up(v, sublane)))
+
+    def clamp_bn(v):
+        return max(unit, min(n_aligned, round_up(v, unit)))
+
+    def clamp_qb(v):
+        return max(8, min(8192, round_up(v, 8)))
+
+    pallas = plan.backend == "pallas"
+    m_factors = (1, 0.5, 2) if pallas and (
+        spec is None or spec.block_m is None) else (1,)
+    n_factors = (1, 0.5, 2) if pallas and (
+        spec is None or spec.max_block_n is None) else (1,)
+    q_factors = (1, 0.5, 2) if (
+        spec is None or spec.query_block is None) else (1,)
+    cands = []
+    for fm in m_factors:
+        for fn in n_factors:
+            for fq in q_factors:
+                c = (
+                    clamp_bm(int(plan.block_m * fm)),
+                    clamp_bn(int(plan.block_n * fn)),
+                    clamp_qb(int(plan.query_block * fq)),
+                )
+                if c not in cands:
+                    cands.append(c)
+    return cands
+
+
+def tune_plan(
+    database,
+    plan: Plan,
+    *,
+    spec: Optional[SearchSpec] = None,
+    cache: Optional[PlanCache] = None,
+    repeats: int = 3,
+    interpret: Optional[bool] = None,
+) -> Plan:
+    """Refine a model plan with a short on-device sweep (``plan="measure"``).
+
+    Builds a throwaway index per candidate tile triple, times a
+    ``query_block``-sized synthetic batch, and returns the plan rewritten
+    with the fastest configuration (``source="measure"``).  Results persist
+    in ``cache`` so the sweep runs once per workload signature per device.
+
+    ``spec`` is the workload's real ``SearchSpec``: candidates are built by
+    replacing only its tile fields, so the sweep times the exact program
+    the index will run (same dtype, rescoring mode, recall accounting) and
+    user-pinned tile fields are never varied.  Pinned sweeps are cached
+    under a distinct key so their result is not served to unpinned builds.
+
+    This subsumes the old per-config hillclimb harness for search kernels:
+    the model proposes, one bounded measurement disposes.
+    """
+    import jax
+    from repro.search.index import Index  # deferred: index imports plan
+
+    if cache is None:  # NOT ``or``: an empty PlanCache is len()==0/falsy
+        cache = PlanCache()
+    base_spec = spec if spec is not None else SearchSpec(
+        metric=plan.metric, k=plan.k, recall_target=plan.recall_target,
+        backend=plan.backend, dtype=None if plan.dtype == "float32"
+        else plan.dtype,
+    )
+    hit = cache.get(plan, spec)
+    if hit is not None:
+        return _with_measured_tiles(
+            plan, hit["block_m"], hit["block_n"], hit["query_block"]
+        )
+
+    m_eff = plan.m or plan.query_block
+    queries = jax.random.normal(
+        jax.random.PRNGKey(0), (min(m_eff, 2 * plan.query_block), plan.d)
+    )
+    best, best_wall = None, float("inf")
+    last_error: Optional[Exception] = None
+    for bm, bn, qb in _tile_candidates(plan, spec):
+        cand = dataclasses.replace(
+            base_spec, block_m=bm, max_block_n=bn, query_block=qb,
+        )
+        try:
+            # The fully-pinned spec makes plan="model" a no-op passthrough,
+            # so candidate builds never recurse into another sweep.
+            index = Index.build(
+                database, spec=cand, plan="model", interpret=interpret
+            )
+            wall = time_search(index, queries, repeats=repeats, passes=1)
+        except Exception as e:  # invalid candidate on this backend — skip
+            last_error = e
+            continue
+        if wall < best_wall:
+            best, best_wall = (bm, bn, qb), wall
+    if best is None:
+        # Every candidate failed: keep the model's answer, but loudly —
+        # a systemic build/search error here would bite real searches too.
+        import warnings
+
+        warnings.warn(
+            "plan measurement failed for every candidate; keeping the "
+            f"unmeasured model plan (last error: {last_error!r})",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return plan
+    cache.put(plan, {
+        "block_m": best[0], "block_n": best[1], "query_block": best[2],
+        "wall_s": best_wall, "source": "measure",
+    }, spec)
+    return _with_measured_tiles(plan, *best)
+
+
+# --- HLO cross-check (absorbing analysis.hlo_cost into the planner) ----------
+
+
+def hlo_check(plan: Plan, lowered_text: str) -> dict:
+    """Compare the plan's analytic cost against compiler-reported HLO cost.
+
+    ``lowered_text`` is optimized HLO (``jax.jit(f).lower(...).compile()
+    .as_text()``).  Returns the analytic and HLO FLOP counts plus their
+    ratio — the planner's self-audit that Eq. 4–10 describe the program XLA
+    actually built (the matmul FLOPs must agree; byte models are
+    fusion-granularity estimates on both sides, so only reported).
+    """
+    from repro.analysis.hlo_cost import analyze_hlo
+
+    hlo = analyze_hlo(lowered_text)
+    return {
+        "model_flops": plan.flops,
+        "hlo_dot_flops": hlo.dot_flops,
+        "flops_ratio": hlo.dot_flops / max(plan.flops, 1e-30),
+        "model_hbm_bytes": plan.hbm_bytes,
+        "hlo_hbm_bytes": hlo.hbm_bytes,
+        "hlo_hbm_bytes_bounds": (hlo.hbm_bytes_lo, hlo.hbm_bytes_hi),
+        "model_cops": plan.cops,
+        "hlo_cop_count": hlo.cop_count,
+    }

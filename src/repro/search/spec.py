@@ -31,8 +31,13 @@ class SearchSpec:
         cast to before the distance matmul; None inherits the input dtype.
       block_m / max_block_n: Pallas tile sizes (queries resident per grid
         step / upper bound on the database tile, rounded to the bin size).
+        ``None`` (the default) defers the choice to the kernel planner
+        (``repro.search.plan``): ``Index.build`` resolves them analytically
+        from the workload and device profile.  Explicit values pin the
+        tile and are never overridden.
       query_block: `.search` auto-tiles query batches larger than this so
-        the (query_block, N) score tile bounds VMEM/host memory.
+        the (query_block, N) score tile bounds VMEM/host memory.  ``None``
+        defers to the planner, same contract as the tile sizes.
       stream: execute multi-block query batches as ONE compiled streaming
         program (``lax.map`` over (num_blocks, query_block, D)) instead of
         a Python loop of per-block dispatches.  False keeps the per-block
@@ -46,6 +51,15 @@ class SearchSpec:
         and ``lax.top_k`` over the L candidates is exact either way.
       reduction_input_size_override: recall-accounting N for sharded inputs
         (paper §7); -1 means "use the operand's own N".
+
+    A freshly-constructed spec defers tiling to the planner; the spec held
+    by a built ``Index`` is always fully resolved:
+
+    >>> SearchSpec(metric="l2", k=4).resolved
+    False
+    >>> SearchSpec(k=4, block_m=256, max_block_n=1024,
+    ...            query_block=4096).resolved
+    True
     """
 
     metric: str = "mips"
@@ -53,9 +67,9 @@ class SearchSpec:
     recall_target: float = 0.95
     backend: str = "auto"
     dtype: Optional[str] = None
-    block_m: int = 256
-    max_block_n: int = 1024
-    query_block: int = 4096
+    block_m: Optional[int] = None
+    max_block_n: Optional[int] = None
+    query_block: Optional[int] = None
     stream: bool = True
     aggregate_to_topk: bool = True
     use_bitonic: bool = False
@@ -72,11 +86,22 @@ class SearchSpec:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
             )
-        if self.block_m <= 0 or self.max_block_n <= 0 or self.query_block <= 0:
-            raise ValueError("block sizes must be positive")
+        for field in ("block_m", "max_block_n", "query_block"):
+            v = getattr(self, field)
+            if v is not None and v <= 0:
+                raise ValueError(f"{field} must be positive, got {v}")
         # Metric existence is validated lazily by the registry (metrics.py)
         # so user-registered metrics can be referenced before import order
         # would otherwise allow.
+
+    @property
+    def resolved(self) -> bool:
+        """True once every planner-deferred block field holds a value."""
+        return not (
+            self.block_m is None
+            or self.max_block_n is None
+            or self.query_block is None
+        )
 
     def with_backend(self, backend: str) -> "SearchSpec":
         return dataclasses.replace(self, backend=backend)
