@@ -16,15 +16,19 @@ if [[ "${1:-fast}" == "full" ]]; then
     python -m pytest -q --doctest-modules src/repro/search
     exec python -m pytest -x -q
 else
-    # Perf contract first (fail fast on re-introduced per-search padding /
-    # dispatch-loop regressions), then the benchmark smoke run (includes
-    # the planner-vs-legacy contract), docs lint + public-API doctests,
-    # then the rest of the fast tier (test_packed already ran — don't
-    # repeat it).  (smoke writes to an untracked path so it never clobbers
-    # the committed full-grid BENCH_search.json seed)
-    python -m pytest -x -q tests/test_packed.py
+    # Perf contracts first (fail fast on re-introduced per-search padding /
+    # dispatch-loop regressions, and on serving-layer coalescing
+    # regressions), then the benchmark smoke runs (planner-vs-legacy and
+    # one-dispatch-per-coalesced-batch + stream-path parity contracts),
+    # docs lint + public-API doctests, then the rest of the fast tier
+    # (test_packed/test_serve already ran — don't repeat them).  (smoke
+    # runs write to untracked paths so they never clobber the committed
+    # full-grid BENCH_search.json / BENCH_serve.json seeds)
+    python -m pytest -x -q tests/test_packed.py tests/test_serve.py
     python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
+    python benchmarks/bench_serve.py --smoke --out BENCH_serve.smoke.json
     python scripts/docs_lint.py
     python -m pytest -x -q --doctest-modules src/repro/search
-    exec python -m pytest -x -q -m "not slow" --ignore=tests/test_packed.py
+    exec python -m pytest -x -q -m "not slow" \
+        --ignore=tests/test_packed.py --ignore=tests/test_serve.py
 fi

@@ -12,6 +12,12 @@ Steady-state serving contract (inherited from the packed search state):
 once at construction / ``extend`` time — and a multi-block query batch is
 one device dispatch (the streaming executor), so datastore QPS tracks the
 kernel roofline rather than dispatch overhead.
+
+Under concurrent traffic (many decode streams sharing one datastore),
+``attach_server`` puts a ``repro.search.serve.SearchServer`` in front of
+the index: lookups from independent callers coalesce into planner-sized
+micro-batches — one dispatch per batch — instead of issuing one small
+dispatch each.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.search import Index
+from repro.search.serve import SearchServer, ServeConfig
 
 __all__ = ["KNNDatastore", "knn_lm_logits"]
 
@@ -56,6 +63,7 @@ class KNNDatastore:
         self.mesh = mesh
         self.k = k
         self.value_tokens = jnp.asarray(value_tokens)
+        self.server: Optional[SearchServer] = None
 
     @property
     def keys(self) -> jnp.ndarray:
@@ -64,12 +72,52 @@ class KNNDatastore:
     def __len__(self) -> int:
         return len(self.index)
 
+    def attach_server(
+        self,
+        server: Optional[SearchServer] = None,
+        *,
+        config: Optional[ServeConfig] = None,
+        **server_kwargs,
+    ) -> SearchServer:
+        """Route ``lookup`` through a coalescing ``SearchServer``.
+
+        Builds one over this datastore's index (``config`` / keyword
+        arguments forwarded to ``SearchServer``) unless an existing
+        ``server`` — which must already serve this index — is handed in,
+        e.g. one shared across several datastore views.  Returns the
+        attached server so callers can ``submit`` directly or ``close`` it.
+        """
+        if server is None:
+            server = SearchServer(self.index, config, **server_kwargs)
+        elif server.index is not self.index:
+            raise ValueError("server serves a different Index instance")
+        self.server = server
+        return server
+
     def lookup(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """-> (scores (M, k), neighbour value tokens (M, k))."""
-        vals, idxs = self.index.search(queries)
+        """-> (scores (M, k), neighbour value tokens (M, k)).
+
+        With an attached server the batch rides the coalescing queue
+        (other concurrent callers may share its dispatch); otherwise it is
+        a direct index search.  Results are bit-identical either way.
+        """
+        if self.server is not None:
+            vals, idxs = self.server.search(queries)
+        else:
+            vals, idxs = self.index.search(queries)
         return vals, jnp.take(self.value_tokens, idxs, axis=0)
 
     # -- frequent updates (the paper's "no index maintenance" claim) ---------
+
+    def _mutation_gate(self):
+        """The attached server's mutation gate, or a no-op without one:
+        index updates must never interleave with a worker-thread dispatch
+        (``SearchServer.mutation``)."""
+        if self.server is not None:
+            return self.server.mutation()
+        import contextlib
+
+        return contextlib.nullcontext()
 
     def extend(self, keys: jnp.ndarray, value_tokens: jnp.ndarray) -> "KNNDatastore":
         """Append (key, token) pairs in place; no rebuild."""
@@ -79,15 +127,16 @@ class KNNDatastore:
             raise ValueError(
                 f"{keys.shape[0]} keys vs {value_tokens.shape[0]} tokens"
             )
-        start = self.index.num_appended
-        self.index.add(keys)
-        # Keep value_tokens aligned with the index's append-only row space.
-        pad = self.index.capacity - self.value_tokens.shape[0]
-        if pad > 0:
-            self.value_tokens = jnp.pad(self.value_tokens, (0, pad))
-        self.value_tokens = self.value_tokens.at[
-            start : start + value_tokens.shape[0]
-        ].set(value_tokens.astype(self.value_tokens.dtype))
+        with self._mutation_gate():
+            start = self.index.num_appended
+            self.index.add(keys)
+            # Keep value_tokens aligned with the append-only row space.
+            pad = self.index.capacity - self.value_tokens.shape[0]
+            if pad > 0:
+                self.value_tokens = jnp.pad(self.value_tokens, (0, pad))
+            self.value_tokens = self.value_tokens.at[
+                start : start + value_tokens.shape[0]
+            ].set(value_tokens.astype(self.value_tokens.dtype))
         return self
 
     def forget(self, ids) -> "KNNDatastore":
@@ -96,7 +145,8 @@ class KNNDatastore:
         Device-side bias patch only — never blocks the decode loop on a
         host sync (``len(datastore)`` is what materializes the count).
         """
-        self.index.delete(ids)
+        with self._mutation_gate():
+            self.index.delete(ids)
         return self
 
     def stats(self) -> dict:
@@ -104,6 +154,8 @@ class KNNDatastore:
         info = dict(self.index.cache_info())
         info["capacity"] = self.index.capacity
         info["appended"] = self.index.num_appended
+        if self.server is not None:
+            info["server"] = self.server.stats()
         return info
 
 

@@ -46,6 +46,13 @@ Multi-block query batches (M > ``SearchSpec.query_block``) execute as one
 compiled streaming program (``lax.map``) — a single device dispatch —
 unless ``SearchSpec(stream=False)`` selects the per-block loop baseline.
 
+Concurrent serving (``repro.search.serve``): ``SearchServer`` coalesces
+many small concurrent requests into planner-sized micro-batches (padded to
+a fixed bucket ladder so nothing retraces), dispatches each coalesced
+batch once over the packed/streamed path, and scatters per-request slices
+back — with admission backpressure, a deterministic virtual-clock mode for
+tests, and double-buffered host→device query staging.
+
 ``repro.core.knn``, ``repro.kernels.ops`` and ``repro.core.distributed``
 remain as deprecated thin shims over this package.
 """
@@ -100,8 +107,18 @@ from repro.search.plan import (
     PlanCache,
     detect_device,
     hlo_check,
+    plan_buckets,
     plan_search,
     tune_plan,
+)
+from repro.search.serve import (
+    SERVE_EVENTS,
+    QueueFull,
+    SearchServer,
+    SearchTicket,
+    ServeConfig,
+    VirtualClock,
+    reset_serve_events,
 )
 from repro.search.spec import BACKENDS, SearchSpec
 
@@ -141,17 +158,26 @@ __all__ = [
     # kernel planner (the performance model as a subsystem)
     "Plan",
     "plan_search",
+    "plan_buckets",
     "tune_plan",
     "PlanCache",
     "detect_device",
     "hlo_check",
+    # concurrent serving (async micro-batching front end)
+    "SearchServer",
+    "SearchTicket",
+    "ServeConfig",
+    "VirtualClock",
+    "QueueFull",
     # observability
     "TRACE_COUNTS",
     "DISPATCH_COUNTS",
     "PACK_EVENTS",
+    "SERVE_EVENTS",
     "reset_trace_counts",
     "reset_dispatch_counts",
     "reset_pack_events",
+    "reset_serve_events",
     # planning / operator re-exports
     "BinPlan",
     "plan_bins",

@@ -345,6 +345,9 @@ def pallas_search(
         p = planlib.plan_search(
             n=database.shape[0], d=queries.shape[1], k=k,
             m=queries.shape[0], metric=metric, recall_target=recall_target,
+            # the operand dtype decides the sublane contract the tiles
+            # must honour (e.g. bf16 needs block_m % 16 == 0)
+            dtype=str(queries.dtype),
             backend="pallas",
             reduction_input_size_override=reduction_input_size_override,
         )

@@ -64,6 +64,7 @@ __all__ = [
     "Plan",
     "PlanCache",
     "plan_search",
+    "plan_buckets",
     "tune_plan",
     "detect_device",
     "hlo_check",
@@ -71,6 +72,7 @@ __all__ = [
     "DEFAULT_BLOCK_N",
     "DEFAULT_QUERY_BLOCK",
     "SCORE_TILE_BUDGET",
+    "MIN_SERVE_BUCKET",
 ]
 
 # The legacy hard-coded tiles, now the *anchors* the model shrinks from when
@@ -84,6 +86,11 @@ DEFAULT_QUERY_BLOCK = 4096
 # The XLA backend materializes the (query_block, N) score tile in HBM before
 # ApproxTopK consumes it; the planner bounds that tile to this many bytes.
 SCORE_TILE_BUDGET = 64 * 2**20
+
+# Smallest serving micro-batch shape the bucket ladder compiles: one sublane
+# tile of query rows, so a lone 1-row request is not padded to a full
+# query_block.
+MIN_SERVE_BUCKET = 8
 
 _DTYPE_BYTES = {
     "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
@@ -228,6 +235,13 @@ class Plan:
     def hardware(self) -> Hardware:
         return HARDWARE[self.device]
 
+    @property
+    def serve_buckets(self) -> Tuple[int, ...]:
+        """Micro-batch bucket ladder for the concurrent serving layer
+        (``repro.search.serve``): pre-compiled coalesced-batch shapes up to
+        one ``query_block`` — the planner-sized micro-batch."""
+        return plan_buckets(self.query_block)
+
     def to_spec(self, base: Optional[SearchSpec] = None) -> SearchSpec:
         """Materialize a concrete ``SearchSpec`` from this plan.
 
@@ -243,6 +257,8 @@ class Plan:
             block_m=base.block_m or self.block_m,
             max_block_n=base.max_block_n or self.block_n,
             query_block=base.query_block or self.query_block,
+            serve_buckets=base.serve_buckets
+            or plan_buckets(base.query_block or self.query_block),
         )
 
     def summary(self) -> dict:
@@ -373,6 +389,40 @@ def _dense_cost(m: int, n: int, d: int, l: int, dtype_bytes: int
     hbm = dtype_bytes * (m * d + n * d) + 4.0 * (2.0 * m * n + 2.0 * m * l)
     cops = float(m) * n  # the reduction's compare chain
     return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
+def plan_buckets(
+    max_batch: int, *, min_bucket: int = MIN_SERVE_BUCKET
+) -> Tuple[int, ...]:
+    """Micro-batch bucket ladder for the concurrent serving layer.
+
+    A coalesced batch of queries is padded up to the smallest bucket that
+    holds it, so the server only ever dispatches one of these shapes — each
+    bucket is compiled once and the steady state never retraces.  The
+    ladder doubles from ``min_bucket`` (one sublane tile, so a lone tiny
+    request is not padded to a full ``query_block``) up to ``max_batch``
+    (the planner-sized micro-batch, normally one ``query_block``), which is
+    always the last rung.  Padded rows cost FLOPs, so a geometric ladder
+    bounds the waste at <2x while keeping the compile count logarithmic.
+
+    >>> plan_buckets(64)
+    (8, 16, 32, 64)
+    >>> plan_buckets(100)
+    (8, 16, 32, 64, 100)
+    >>> plan_buckets(4)
+    (4,)
+    """
+    if max_batch <= 0:
+        raise ValueError(f"max_batch must be positive, got {max_batch}")
+    if min_bucket <= 0:
+        raise ValueError(f"min_bucket must be positive, got {min_bucket}")
+    out = []
+    b = min(min_bucket, max_batch)
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
 
 
 def _plan_query_block(n: int, backend: str) -> int:

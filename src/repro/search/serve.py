@@ -1,0 +1,685 @@
+"""Concurrent query serving: async micro-batching over one shared ``Index``.
+
+The paper's peak-FLOP/s claim (Eq. 10/20) only materializes when queries
+reach the device as large single-dispatch batches — but serving traffic
+arrives as many small concurrent requests.  ``SearchServer`` closes that
+gap: it accepts per-request queries (each with its own ``k`` sub-budget
+against the shared index), coalesces them into planner-sized micro-batches,
+executes each coalesced batch as ONE device dispatch over the packed /
+streamed steady-state path, and scatters per-request slices back.  Results
+are bit-identical to a direct ``Index.search`` of the same rows — padding
+to a bucket shape only adds dead rows, it never reorders reductions.
+
+The moving parts, and the contracts tests pin down:
+
+  * **Bucketed batch shapes.**  A coalesced batch is padded up to the
+    smallest *bucket* (``SearchSpec.serve_buckets``, planner-derived via
+    ``repro.search.plan.plan_buckets``), so the server only ever dispatches
+    a small fixed set of pre-compilable shapes — serving traffic never
+    retraces.  A request larger than the largest bucket is dispatched solo
+    through the streaming executor (still one dispatch), padded to a
+    power-of-two multiple of the largest bucket so oversize shapes stay
+    bounded too.
+  * **Admission / backpressure.**  The queue holds at most
+    ``ServeConfig.max_pending_rows`` query rows.  Wall-clock servers block
+    ``submit`` (up to ``admission_timeout_s``) until the worker frees
+    space; virtual-clock servers raise :class:`QueueFull` immediately
+    (there is no concurrent worker to wait for).
+  * **Deterministic scheduling mode.**  Pass ``clock=VirtualClock()`` and
+    the server runs no threads and never sleeps: the test (or simulator)
+    drives it with ``step()`` / ``run_until_idle()``, one micro-batch per
+    ``step``, FIFO whole-request coalescing — fully reproducible, and
+    latency accounting follows the virtual clock.
+  * **Double-buffered staging.**  Each bucket owns two reusable host
+    buffers; the next micro-batch is gathered into one while the previous
+    dispatch is still in flight on the device, and the previous batch's
+    scatter happens after the next dispatch is enqueued.  Host-side
+    gather/scatter work therefore overlaps device compute instead of
+    serializing with it.
+
+Typical use::
+
+    from repro.search import Index
+    from repro.search.serve import SearchServer
+
+    server = SearchServer(Index.build(db, k=10), warmup=True)
+    ticket = server.submit(q)          # from any thread
+    values, indices = ticket.result()  # (m_i, k) slices of one big dispatch
+    server.close()
+
+``SERVE_EVENTS`` counts batches / coalesced requests / padded rows
+globally (same taxonomy style as ``DISPATCH_COUNTS`` / ``PACK_EVENTS``);
+``SearchServer.stats()`` reports the per-server view.
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.search.index import Index, SearchResult
+from repro.search.plan import plan_buckets
+
+__all__ = [
+    "QueueFull",
+    "SERVE_EVENTS",
+    "SearchServer",
+    "SearchTicket",
+    "ServeConfig",
+    "VirtualClock",
+    "reset_serve_events",
+]
+
+# event name -> count across every server (test observability hook, same
+# reset-act-assert style as backends.DISPATCH_COUNTS / packed.PACK_EVENTS):
+# "batches", "coalesced_requests", "padded_rows", "oversize_batches".
+SERVE_EVENTS = collections.Counter()
+
+
+def reset_serve_events() -> None:
+    """Zero ``SERVE_EVENTS`` (tests: reset, act, assert — no arithmetic)."""
+    SERVE_EVENTS.clear()
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected a request: the pending-row queue is full."""
+
+
+class VirtualClock:
+    """Deterministic, manually-advanced clock for tests and simulation.
+
+    A server built with ``clock=VirtualClock()`` runs no threads and never
+    sleeps; latency accounting (``SearchTicket.latency_s``) reads this
+    clock, so a test or a load simulator controls time exactly.
+
+    >>> clock = VirtualClock()
+    >>> clock.advance(0.5)
+    0.5
+    >>> clock.now()
+    0.5
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance time backwards (dt={dt})")
+        self._now += dt
+        return self._now
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Frozen serving policy for one :class:`SearchServer`.
+
+    Attributes:
+      max_batch: most query rows one micro-batch holds.  ``None`` defers to
+        the planner-resolved ``SearchSpec.query_block`` — the batch size the
+        kernel plan was sized for.
+      buckets: ascending pre-compiled batch shapes; a coalesced batch pads
+        up to the smallest bucket holding it.  ``None`` defers to
+        ``SearchSpec.serve_buckets`` (planner-derived ladder), clipped to
+        ``max_batch``.
+      max_pending_rows: admission bound — most query rows queued (not yet
+        dispatched) at once; ``submit`` beyond it blocks (wall clock) or
+        raises :class:`QueueFull` (virtual clock).
+      max_delay_s: wall-clock coalescing window — how long the worker holds
+        an under-full batch open for more arrivals.  Irrelevant under a
+        virtual clock (the driver decides when to ``step``).
+      admission_timeout_s: longest a wall-clock ``submit`` blocks for queue
+        space before raising :class:`QueueFull`.
+    """
+
+    max_batch: Optional[int] = None
+    buckets: Optional[Tuple[int, ...]] = None
+    max_pending_rows: int = 4096
+    max_delay_s: float = 0.002
+    admission_timeout_s: float = 5.0
+
+    def __post_init__(self):
+        if self.max_batch is not None and self.max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {self.max_batch}")
+        if self.max_pending_rows <= 0:
+            raise ValueError(
+                f"max_pending_rows must be positive, got {self.max_pending_rows}"
+            )
+        if self.max_delay_s < 0 or self.admission_timeout_s < 0:
+            raise ValueError("delays/timeouts must be non-negative")
+        if self.buckets is not None:
+            object.__setattr__(
+                self, "buckets", tuple(int(b) for b in self.buckets)
+            )
+
+
+class SearchTicket:
+    """Handle for one submitted request; resolves to a ``SearchResult``.
+
+    ``result()`` returns ``(values, indices)`` of shape ``(rows, k)`` — the
+    request's slice of its coalesced micro-batch, bit-identical to a direct
+    ``Index.search`` of the same query rows.  The arrays are host-side
+    numpy views (results cross the device boundary once per micro-batch,
+    not once per request).
+    """
+
+    __slots__ = (
+        "rows", "k", "submitted_at", "completed_at",
+        "_queries", "_offset", "_server", "_done", "_event", "_result",
+        "_error",
+    )
+
+    def __init__(self, server: "SearchServer", queries: np.ndarray, k: int):
+        self._server = server
+        self._queries = queries
+        self.rows = queries.shape[0]
+        self.k = k
+        self.submitted_at = server._now()
+        self.completed_at: Optional[float] = None
+        self._offset = 0
+        self._done = False
+        # Allocated lazily (under the server lock) only when a thread
+        # actually blocks in ``result()``: at thousands of requests per
+        # second, per-ticket Event construction is measurable overhead and
+        # the virtual-clock mode never waits at all.
+        self._event: Optional[threading.Event] = None
+        self._result: Optional[SearchResult] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-completion latency on the server's clock (None while
+        pending)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def result(self, timeout: Optional[float] = None) -> SearchResult:
+        """The request's ``(values (rows, k), indices (rows, k))``.
+
+        Wall-clock servers block until the worker completes the request;
+        virtual-clock servers drive their own queue to idle (equivalent to
+        ``server.run_until_idle()``), so a plain submit-then-result flow
+        works in both modes.
+        """
+        if not self._done and self._server._manual:
+            self._server.run_until_idle()
+        if not self._done:
+            with self._server._lock:  # completion holds the same lock
+                event = self._event
+                if event is None and not self._done:
+                    event = self._event = threading.Event()
+            if event is not None and not event.wait(timeout):
+                raise TimeoutError(
+                    f"request ({self.rows} rows) still pending after "
+                    f"{timeout}s"
+                )
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _complete(self, result: SearchResult, now: float) -> None:
+        """Caller must hold the server lock (see ``result``)."""
+        self._result = result
+        self.completed_at = now
+        self._queries = None  # staging copy done; free the host rows
+        self._done = True
+        if self._event is not None:
+            self._event.set()
+
+    def _fail(self, error: BaseException, now: float) -> None:
+        """Caller must hold the server lock."""
+        self._error = error
+        self.completed_at = now
+        self._queries = None
+        self._done = True
+        if self._event is not None:
+            self._event.set()
+
+
+class SearchServer:
+    """Async micro-batching front end over one shared :class:`Index`.
+
+    ``clock=None`` (default) starts a background worker thread that
+    coalesces on the wall clock (``ServeConfig.max_delay_s`` window);
+    passing a :class:`VirtualClock` selects the deterministic single-
+    threaded mode where the caller drives ``step()`` /
+    ``run_until_idle()``.  ``warmup=True`` pre-compiles every bucket shape
+    before the first request (otherwise each bucket compiles on first use).
+    """
+
+    def __init__(
+        self,
+        index: Index,
+        config: Optional[ServeConfig] = None,
+        *,
+        clock: Optional[VirtualClock] = None,
+        warmup: bool = False,
+    ):
+        self.index = index
+        self.config = config or ServeConfig()
+        spec = index.spec
+        if not spec.aggregate_to_topk:
+            raise ValueError(
+                "SearchServer requires aggregate_to_topk=True: per-request "
+                "k budgets are column slices of the coalesced dispatch, "
+                "which is only correct over sorted top-k rows — not the "
+                "raw unsorted bin winners"
+            )
+        qb = spec.query_block or 4096
+        self.max_batch = self.config.max_batch or qb
+        buckets = (
+            self.config.buckets
+            or spec.serve_buckets
+            or plan_buckets(self.max_batch)
+        )
+        buckets = sorted({int(b) for b in buckets if b <= self.max_batch})
+        if not buckets or buckets[-1] != self.max_batch:
+            buckets.append(self.max_batch)
+        self.buckets: Tuple[int, ...] = tuple(buckets)
+        self._qdtype = np.dtype(spec.dtype or index._db.dtype)
+
+        self._clock = clock
+        self._manual = clock is not None
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._queue: collections.deque = collections.deque()
+        self._pending_rows = 0
+        self._closed = False
+        # (result, batch, bucket, live_rows): dispatched, not yet scattered.
+        self._inflight: Optional[tuple] = None
+        # Serializes index.search dispatches against out-of-band Index
+        # mutations (see ``mutation()``) — Index is not thread-safe.
+        self._dispatch_gate = threading.Lock()
+        self._staging: Dict[int, list] = {}
+        self._stats = collections.Counter()
+        self._latency_sum = 0.0
+        self._worker: Optional[threading.Thread] = None
+
+        if warmup:
+            self.precompile()
+        if not self._manual:
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="SearchServer", daemon=True
+            )
+            self._worker.start()
+
+    # -- time ----------------------------------------------------------------
+
+    def _now(self) -> float:
+        return self._clock.now() if self._manual else time.monotonic()
+
+    # -- admission -----------------------------------------------------------
+
+    @property
+    def pending_rows(self) -> int:
+        """Query rows admitted but not yet dispatched (the queue depth the
+        backpressure bound applies to)."""
+        return self._pending_rows
+
+    def submit(self, queries, k: Optional[int] = None) -> SearchTicket:
+        """Enqueue one request: ``(rows, D)`` (or a single ``(D,)`` row).
+
+        ``k`` is the request's own neighbour budget — it must not exceed
+        the index's ``spec.k`` (the coalesced dispatch computes ``spec.k``
+        winners once; per-request budgets are slices of that, which is what
+        lets requests with different ``k`` share a batch).  Returns a
+        :class:`SearchTicket`; raises :class:`QueueFull` when admission
+        control rejects the request.
+        """
+        q = np.asarray(queries, self._qdtype)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[0] == 0:
+            raise ValueError(f"queries must be (rows>0, D), got {q.shape}")
+        if q.shape[1] != self.index.dim:
+            raise ValueError(
+                f"query dim {q.shape[1]} != index dim {self.index.dim}"
+            )
+        k = self.index.spec.k if k is None else int(k)
+        if not 0 < k <= self.index.spec.k:
+            raise ValueError(
+                f"per-request k={k} must be in [1, spec.k={self.index.spec.k}]"
+                " — build the index with the largest k any request needs"
+            )
+        rows = q.shape[0]
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("server is closed")
+            if rows > self.config.max_pending_rows:
+                raise QueueFull(
+                    f"request of {rows} rows exceeds the admission capacity "
+                    f"({self.config.max_pending_rows} rows)"
+                )
+            if self._pending_rows + rows > self.config.max_pending_rows:
+                if self._manual:
+                    raise QueueFull(
+                        f"{self._pending_rows} rows pending; admitting {rows} "
+                        f"more exceeds max_pending_rows="
+                        f"{self.config.max_pending_rows}"
+                    )
+                deadline = time.monotonic() + self.config.admission_timeout_s
+                while self._pending_rows + rows > self.config.max_pending_rows:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or self._closed:
+                        raise QueueFull(
+                            f"no queue space for {rows} rows within "
+                            f"{self.config.admission_timeout_s}s"
+                        )
+                    self._not_full.wait(remaining)
+                if self._closed:
+                    # close() may have drained the queue and retired the
+                    # worker while this thread waited for space; enqueueing
+                    # now would strand the ticket forever.
+                    raise RuntimeError("server is closed")
+            ticket = SearchTicket(self, q, k)
+            self._queue.append(ticket)
+            self._pending_rows += rows
+            self._stats["peak_pending_rows"] = max(
+                self._stats["peak_pending_rows"], self._pending_rows
+            )
+            self._work.notify()
+        return ticket
+
+    def search(self, queries, k: Optional[int] = None,
+               timeout: Optional[float] = None) -> SearchResult:
+        """Synchronous convenience: ``submit`` + ``result`` in one call."""
+        return self.submit(queries, k=k).result(timeout=timeout)
+
+    def resolve(self, tickets: Sequence[SearchTicket],
+                timeout: Optional[float] = None) -> List[SearchResult]:
+        """Resolve many tickets (driving the queue first in virtual mode)."""
+        if self._manual:
+            self.run_until_idle()
+        return [t.result(timeout=timeout) for t in tickets]
+
+    # -- micro-batch formation and dispatch ----------------------------------
+
+    def _take_batch_locked(self) -> Optional[List[SearchTicket]]:
+        """Pop the next FIFO micro-batch: whole requests only, up to
+        ``max_batch`` rows (a request bigger than ``max_batch`` ships solo
+        through the streaming executor)."""
+        if not self._queue:
+            return None
+        batch = [self._queue.popleft()]
+        total = batch[0].rows
+        while self._queue and total + self._queue[0].rows <= self.max_batch:
+            t = self._queue.popleft()
+            batch.append(t)
+            total += t.rows
+        self._pending_rows -= total
+        return batch
+
+    def _bucket_for(self, rows: int) -> int:
+        """Smallest pre-compiled shape holding ``rows``; oversize requests
+        double up from ``max_batch`` so even their shapes stay bounded."""
+        if rows <= self.max_batch:
+            return self.buckets[bisect.bisect_left(self.buckets, rows)]
+        bucket = self.max_batch
+        while bucket < rows:
+            bucket *= 2
+        self._stats["oversize_batches"] += 1
+        SERVE_EVENTS["oversize_batches"] += 1
+        return bucket
+
+    def _stage(self, bucket: int, batch: List[SearchTicket]) -> np.ndarray:
+        """Gather the batch's query rows into a reusable host buffer.
+
+        Two buffers per bucket, used alternately: the buffer being filled
+        here is never the one whose device copy the in-flight dispatch was
+        fed from, so host gather overlaps device compute (the
+        double-buffering leg of the pipeline).
+        """
+        if bucket > self.max_batch:
+            # Oversize batches ship solo and are rare: a transient buffer,
+            # never cached — caching would pin two bucket-sized host
+            # buffers per oversize shape for the server's lifetime.
+            buf = np.zeros((bucket, self.index.dim), self._qdtype)
+        else:
+            pair = self._staging.get(bucket)
+            if pair is None:
+                pair = self._staging[bucket] = [
+                    np.zeros((bucket, self.index.dim), self._qdtype),
+                    np.zeros((bucket, self.index.dim), self._qdtype),
+                    0,
+                ]
+            buf = pair[pair[2]]
+            pair[2] ^= 1
+            self._stats["staging_swaps"] += 1
+        offset = 0
+        for t in batch:
+            buf[offset : offset + t.rows] = t._queries
+            t._offset = offset
+            offset += t.rows
+        buf[offset:] = 0.0  # bucket padding: dead rows, sliced away at scatter
+        return buf
+
+    def _service_once(self) -> bool:
+        """Dispatch ONE coalesced micro-batch; then scatter the previous.
+
+        Pipeline order is deliberate: stage the new batch (host work) while
+        the previous dispatch runs on device, enqueue the new dispatch,
+        *then* block on the previous result and scatter it — so the device
+        is never idle waiting for host gather/scatter bookkeeping.
+        """
+        with self._lock:
+            batch = self._take_batch_locked()
+            if batch is not None:
+                self._not_full.notify_all()
+        if batch is None:
+            self._finalize(self._pop_inflight())
+            return False
+        rows = sum(t.rows for t in batch)
+        try:
+            # bucket/stage inside the guard too: an allocation failure on a
+            # huge oversize request must fail its tickets, not kill the
+            # worker thread with the popped batch stranded.
+            bucket = self._bucket_for(rows)
+            buf = self._stage(bucket, batch)
+            with self._dispatch_gate:
+                result = self.index.search(jnp.asarray(buf))  # ONE dispatch
+        except Exception as e:  # scatter the failure, keep serving
+            now = self._now()
+            with self._lock:
+                for t in batch:
+                    t._fail(e, now)
+            self._stats["failed_batches"] += 1
+            return True
+        self._stats["batches"] += 1
+        self._stats["coalesced_requests"] += len(batch)
+        self._stats["dispatched_rows"] += rows
+        self._stats["padded_rows"] += bucket - rows
+        SERVE_EVENTS["batches"] += 1
+        SERVE_EVENTS["coalesced_requests"] += len(batch)
+        SERVE_EVENTS["padded_rows"] += bucket - rows
+        prev = self._pop_inflight()
+        self._inflight = (result, batch)
+        self._finalize(prev)
+        return True
+
+    def _pop_inflight(self) -> Optional[tuple]:
+        entry, self._inflight = self._inflight, None
+        return entry
+
+    def _finalize(self, entry: Optional[tuple]) -> None:
+        """Block on a dispatched batch and scatter per-request slices.
+
+        The batch result crosses to the host ONCE (``np.asarray`` — a view
+        on CPU, one transfer on accelerators); tickets then receive numpy
+        views, not per-request device slices.  Scattering R requests as
+        2R device slice programs would cost more than the search itself.
+        """
+        if entry is None:
+            return
+        result, batch = entry
+        try:
+            result.values.block_until_ready()
+            values = np.asarray(result.values)
+            indices = np.asarray(result.indices)
+        except Exception as e:
+            # Accelerator errors surface asynchronously, at the block — a
+            # bare raise here would kill the worker thread and strand every
+            # waiter; fail the batch's tickets instead and keep serving.
+            now = self._now()
+            with self._lock:
+                for t in batch:
+                    t._fail(e, now)
+            self._stats["failed_batches"] += 1
+            return
+        now = self._now()
+        with self._lock:  # one acquisition per batch, not per ticket
+            for t in batch:
+                t._complete(
+                    SearchResult(
+                        values[t._offset : t._offset + t.rows, : t.k],
+                        indices[t._offset : t._offset + t.rows, : t.k],
+                    ),
+                    now,
+                )
+                if t.latency_s is not None:
+                    self._latency_sum += t.latency_s
+            self._stats["completed_requests"] += len(batch)
+
+    # -- deterministic (virtual-clock) driving -------------------------------
+
+    def step(self) -> bool:
+        """Virtual-clock driver: dispatch one micro-batch (scattering the
+        previously dispatched one).  Returns False — after finalizing any
+        leftover in-flight batch — once the queue is empty."""
+        if not self._manual:
+            raise RuntimeError(
+                "step() is the virtual-clock driver; wall-clock servers "
+                "run their own worker thread"
+            )
+        return self._service_once()
+
+    def run_until_idle(self) -> None:
+        """Drive the queue to empty and scatter everything in flight."""
+        while self.step():
+            pass
+
+    # -- wall-clock worker ---------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        cfg = self.config
+        while True:
+            with self._lock:
+                if self._closed and not self._queue:
+                    break
+                if not self._queue:
+                    # idle: scatter any in-flight batch, then sleep on work
+                    if self._inflight is None:
+                        self._work.wait(0.05)
+                else:
+                    # coalescing window: hold the batch open for late
+                    # arrivals until it fills or the head request's window
+                    # expires
+                    deadline = (
+                        self._queue[0].submitted_at + cfg.max_delay_s
+                    )
+                    while (
+                        self._queue
+                        and self._pending_rows < self.max_batch
+                        and not self._closed
+                    ):
+                        remaining = deadline - self._now()
+                        if remaining <= 0:
+                            break
+                        self._work.wait(remaining)
+            self._service_once()
+        self._finalize(self._pop_inflight())
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Stop accepting requests, drain the queue, join the worker."""
+        with self._lock:
+            self._closed = True
+            self._work.notify_all()
+            self._not_full.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+        elif self._manual:
+            self.run_until_idle()
+
+    def __enter__(self) -> "SearchServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- out-of-band index mutations -----------------------------------------
+
+    @contextlib.contextmanager
+    def mutation(self):
+        """Serialize an ``Index`` mutation against in-flight dispatches.
+
+        ``Index`` is not thread-safe, and a wall-clock server's worker
+        calls ``index.search`` from its own thread — so ``add`` / ``delete``
+        (or anything else that rebinds the packed state) issued while the
+        server runs must take this gate::
+
+            with server.mutation():
+                server.index.add(rows)
+
+        ``KNNDatastore.extend`` / ``forget`` do this automatically when a
+        server is attached.  Already-dispatched batches are unaffected
+        (JAX arrays are immutable — updates rebind new buffers, they never
+        write into operands a running program reads); the gate only
+        excludes the *start* of a dispatch while index state is mid-update.
+        Virtual-clock servers are single-threaded, where this is a no-op
+        by construction (but still safe to use).
+        """
+        with self._dispatch_gate:
+            yield
+
+    # -- observability -------------------------------------------------------
+
+    def precompile(self) -> int:
+        """Compile every bucket shape ahead of traffic (one dummy dispatch
+        per bucket); returns the number of buckets warmed."""
+        for bucket in self.buckets:
+            with self._dispatch_gate:  # may be called on a live server
+                self.index.search(
+                    jnp.zeros((bucket, self.index.dim), self._qdtype)
+                ).values.block_until_ready()
+        self._stats["precompiled_buckets"] = len(self.buckets)
+        return len(self.buckets)
+
+    def stats(self) -> dict:
+        """Serving counters: batching efficiency, queue pressure, cache."""
+        s = dict(self._stats)
+        out = {
+            "buckets": self.buckets,
+            "max_batch": self.max_batch,
+            "batches": s.get("batches", 0),
+            "coalesced_requests": s.get("coalesced_requests", 0),
+            "completed_requests": s.get("completed_requests", 0),
+            "dispatched_rows": s.get("dispatched_rows", 0),
+            "padded_rows": s.get("padded_rows", 0),
+            "oversize_batches": s.get("oversize_batches", 0),
+            "failed_batches": s.get("failed_batches", 0),
+            "staging_swaps": s.get("staging_swaps", 0),
+            "peak_pending_rows": s.get("peak_pending_rows", 0),
+            "precompiled_buckets": s.get("precompiled_buckets", 0),
+            "pending_rows": self._pending_rows,
+            "cache": self.index.cache_info(),
+        }
+        live = out["dispatched_rows"] + out["padded_rows"]
+        out["occupancy"] = out["dispatched_rows"] / live if live else 0.0
+        done = out["completed_requests"]
+        out["mean_latency_s"] = self._latency_sum / done if done else 0.0
+        return out

@@ -10,7 +10,7 @@ program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 __all__ = ["BACKENDS", "SearchSpec"]
 
@@ -51,6 +51,13 @@ class SearchSpec:
         and ``lax.top_k`` over the L candidates is exact either way.
       reduction_input_size_override: recall-accounting N for sharded inputs
         (paper §7); -1 means "use the operand's own N".
+      serve_buckets: ascending micro-batch row counts the concurrent
+        ``repro.search.serve.SearchServer`` pads coalesced batches to (each
+        bucket is one pre-compiled program shape, so serving traffic never
+        retraces).  ``None`` defers to the planner, which derives a
+        power-of-two ladder up to ``query_block``
+        (``repro.search.plan.plan_buckets``) — same contract as the tile
+        fields.  Lists are coerced to tuples so the spec stays hashable.
 
     A freshly-constructed spec defers tiling to the planner; the spec held
     by a built ``Index`` is always fully resolved:
@@ -74,6 +81,7 @@ class SearchSpec:
     aggregate_to_topk: bool = True
     use_bitonic: bool = False
     reduction_input_size_override: int = -1
+    serve_buckets: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.k <= 0:
@@ -90,6 +98,18 @@ class SearchSpec:
             v = getattr(self, field)
             if v is not None and v <= 0:
                 raise ValueError(f"{field} must be positive, got {v}")
+        if self.serve_buckets is not None:
+            buckets = tuple(int(b) for b in self.serve_buckets)
+            if not buckets or any(b <= 0 for b in buckets):
+                raise ValueError(
+                    f"serve_buckets must be positive, got {self.serve_buckets}"
+                )
+            if list(buckets) != sorted(set(buckets)):
+                raise ValueError(
+                    "serve_buckets must be strictly ascending, got "
+                    f"{self.serve_buckets}"
+                )
+            object.__setattr__(self, "serve_buckets", buckets)
         # Metric existence is validated lazily by the registry (metrics.py)
         # so user-registered metrics can be referenced before import order
         # would otherwise allow.

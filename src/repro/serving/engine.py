@@ -14,6 +14,14 @@ index is index-free, ingest new keys between steps with no rebuild
 Per-step retrieval is a single device dispatch over pre-packed operands
 (even for multi-block query batches, via the streaming executor), so the
 decode loop never stalls on host-side search bookkeeping.
+
+Passing ``attach_retrieval(..., server=...)`` routes lookups through a
+``repro.search.serve.SearchServer`` instead of calling the index directly:
+each engine submits its slot batch as one request and the server coalesces
+requests across engines (and any other client sharing the index) into one
+micro-batch dispatch, which is how many concurrent decode streams keep
+retrieval at batch (peak-FLOP/s) efficiency instead of one small dispatch
+per engine step.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models import transformer as tfm
 from repro.search import Index
+from repro.search.serve import SearchServer
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -58,10 +67,15 @@ class ServingEngine:
         self._slots: List[Optional[Request]] = [None] * batch
         self.retrieval_index: Optional[Index] = None
         self.retrieval_tokens: Optional[jnp.ndarray] = None
+        self.retrieval_server: Optional[SearchServer] = None
 
     # -- retrieval (kNN-LM style) via the unified search API ----------------
     def attach_retrieval(
-        self, index: Index, value_tokens: jnp.ndarray
+        self,
+        index: Index,
+        value_tokens: jnp.ndarray,
+        *,
+        server: Optional[SearchServer] = None,
     ) -> "ServingEngine":
         """Attach a ``repro.search.Index`` over retrieval keys.
 
@@ -70,10 +84,23 @@ class ServingEngine:
         extend both together).  The packed search state is materialized
         here (normally a no-op — ``Index.build`` packs eagerly) so the
         decode loop's ``retrieve`` calls never pay build-time packing.
+
+        ``server`` (a ``SearchServer`` over the same index) makes
+        ``retrieve`` submit through the coalescing queue, so lookups from
+        several engines sharing one retrieval datastore merge into
+        micro-batch dispatches.  Out-of-band ``index.add``/``delete``
+        while a wall-clock server runs must go through
+        ``server.mutation()`` (``Index`` is not thread-safe).
         """
+        if server is not None and server.index is not index:
+            raise ValueError(
+                "server must serve the attached index (server.index is a "
+                "different Index instance)"
+            )
         index.pack()
         self.retrieval_index = index
         self.retrieval_tokens = jnp.asarray(value_tokens)
+        self.retrieval_server = server
         return self
 
     def retrieve(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -88,7 +115,14 @@ class ServingEngine:
                 f"but the index has {self.retrieval_index.num_appended} appended "
                 "rows; extend value tokens alongside retrieval_index.add(...)"
             )
-        vals, idxs = self.retrieval_index.search(queries)
+        if self.retrieval_server is not None:
+            # One request for the whole slot batch (splitting it per slot
+            # would only add ticket overhead — whole-request FIFO
+            # coalescing gives the same batches); the server merges it
+            # with requests from other engines/callers sharing the index.
+            vals, idxs = self.retrieval_server.search(queries)
+        else:
+            vals, idxs = self.retrieval_index.search(queries)
         return vals, jnp.take(self.retrieval_tokens, idxs, axis=0)
 
     # -- batched prefill: replay prompts through the decode step ------------
