@@ -36,6 +36,8 @@ import time
 import jax
 
 from repro.search import Index, SearchSpec, backends
+from repro.search import plan as planlib
+from repro.search.packed import PACK_EVENTS, reset_pack_events
 
 # The pre-planner hard-coded tile configuration (PR-2 and earlier): the
 # baseline the model-planned path must match or beat.
@@ -156,6 +158,76 @@ def bench_plan(backend, metric, m, n, d, repeats, emit):
     return row
 
 
+def bench_quant(backend, metric, m, n, d, query_block, repeats, emit):
+    """Quantized storage tiers vs f32 (repro.search.quant).
+
+    Reports steady-state QPS per tier, empirical recall vs the f32 tier's
+    results, the planner's predicted database HBM-traffic ratio, and the
+    one-dispatch/zero-retrace/zero-repack contract counters on the
+    quantized path.
+    """
+    key = jax.random.PRNGKey(0)
+    kq, kd = jax.random.split(key)
+    db = jax.random.normal(kd, (n, d))
+    queries = jax.random.normal(kq, (m, d))
+    base = Index.build(
+        db,
+        spec=SearchSpec(metric=metric, k=10, backend=backend,
+                        query_block=query_block),
+    )
+    _, base_idx = base.search(queries)
+    base_sets = [set(r.tolist()) for r in jax.device_get(base_idx)]
+    row = {
+        "backend": backend, "metric": metric,
+        "m": m, "n": n, "d": d, "query_block": query_block, "tiers": {},
+    }
+    for storage in ("f32", "bf16", "int8"):
+        index = Index.build(
+            db,
+            spec=SearchSpec(metric=metric, k=10, backend=backend,
+                            query_block=query_block, storage=storage),
+        )
+        index.search(queries)  # warmup: trace + compile + pack
+        backends.reset_trace_counts()
+        reset_pack_events()
+        wall, dispatches = _time_search(index, queries, repeats)
+        retraces = sum(backends.TRACE_COUNTS.values())
+        packs = sum(PACK_EVENTS.values())
+        _, idxs = index.search(queries)
+        rec = sum(
+            len(set(r.tolist()) & s) / 10
+            for r, s in zip(jax.device_get(idxs), base_sets)
+        ) / m
+        # The planner's fused-kernel traffic model: what the tier buys on
+        # the memory wall (Eq. 10/20) — pure math, device-independent.
+        plan = planlib.plan_search(
+            n=n, d=d, k=10, m=query_block, metric=metric,
+            backend="pallas", device="tpu_v4", storage=storage,
+        )
+        row["tiers"][storage] = {
+            "wall_s_per_search": wall,
+            "qps": m / wall,
+            "dispatches_per_search": dispatches,
+            "steady_retraces": retraces,
+            "steady_pack_events": packs,
+            "recall_vs_f32": rec,
+            "predicted_hbm_bytes": plan.hbm_bytes,
+            "k_scan": plan.k_scan,
+        }
+        emit(
+            f"quant,{backend},{metric},M={m},N={n},D={d},{storage}: "
+            f"{m / wall:.0f} qps ({dispatches:.0f} dispatch, "
+            f"{retraces} retrace, {packs} packs) recall@f32 {rec:.3f} "
+            f"pred-HBM {plan.hbm_bytes / 1e6:.2f}MB"
+        )
+    f32_bytes = row["tiers"]["f32"]["predicted_hbm_bytes"]
+    for storage in ("bf16", "int8"):
+        row["tiers"][storage]["hbm_drop_vs_f32"] = (
+            f32_bytes / row["tiers"][storage]["predicted_hbm_bytes"]
+        )
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -186,6 +258,17 @@ def main() -> None:
                     bench_plan(backend, metric, m, n, d, repeats, print)
                 )
 
+    quant_results = []
+    # One shape per backend — the tiers are the axis, not the sizes.  Use
+    # the most database-traffic-heavy grid entry: the storage tiers exist
+    # for the Eq. 10 regime where streaming (N, D) dominates; at tiny N·D
+    # the over-fetched winner/rescore terms (both O(M)) mask the win.
+    qm, qn, qd = max(grid, key=lambda s: s[1] * s[2])
+    for backend in bks:
+        quant_results.append(
+            bench_quant(backend, mets[0], qm, qn, qd, qb, repeats, print)
+        )
+
     report = {
         "meta": {
             "jax": jax.__version__,
@@ -196,6 +279,7 @@ def main() -> None:
         },
         "results": results,
         "plan_results": plan_results,
+        "quant_results": quant_results,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -223,6 +307,23 @@ def main() -> None:
                 f"{p['model_over_legacy']:.2f}x the legacy default "
                 f"on {p['backend']}/{p['metric']} — planner regression"
             )
+        # Quantized-tier contracts (deterministic): the planner's predicted
+        # database HBM traffic must drop >=2x on the fused-kernel model,
+        # and the quantized steady state must keep the one-dispatch /
+        # zero-retrace / zero-repack contract of the f32 path.
+        for qrow in quant_results:
+            tiers = qrow["tiers"]
+            assert tiers["int8"]["hbm_drop_vs_f32"] >= 2.0, (
+                f"int8 predicted HBM bytes only "
+                f"{tiers['int8']['hbm_drop_vs_f32']:.2f}x below f32"
+            )
+            assert tiers["bf16"]["hbm_drop_vs_f32"] >= 1.5, tiers["bf16"]
+            for storage in ("bf16", "int8"):
+                t = tiers[storage]
+                assert t["dispatches_per_search"] == 1, (storage, t)
+                assert t["steady_retraces"] == 0, (storage, t)
+                assert t["steady_pack_events"] == 0, (storage, t)
+                assert t["recall_vs_f32"] >= 0.9, (storage, t)
         print("smoke contract OK")
 
 

@@ -1,45 +1,62 @@
-"""Hillclimb harness: re-lower one cell with config overrides and print the
-roofline-term delta vs the stored baseline.
+"""DEPRECATED: the hillclimb harness was subsumed by the kernel planner.
 
-  PYTHONPATH=src python -m benchmarks.hillclimb --arch recurrentgemma-9b \
-      --shape train_4k --mesh single --set moe_group_size=512 --tag g512
-
-KNN mode (--knn): sweep search-kernel tiles around the analytical plan via
-``repro.search.plan.tune_plan`` — the planner subsumed the manual
-set-a-knob-and-relower loop for search kernels, so this mode just reports
-model choice vs measured best and persists the result in the plan cache.
+Use ``Index.build(plan="measure")`` or ``repro.search.plan.tune_plan``
+directly — the analytical model proposes every kernel parameter and one
+bounded on-device sweep refines it, persisted in a
+``repro.search.plan.PlanCache`` (``REPRO_PLAN_CACHE``).  This stub keeps
+the old ``--knn`` command line alive by forwarding to ``tune_plan``:
 
   PYTHONPATH=src python -m benchmarks.hillclimb --knn --m 512 --n 4096 \
       --d 64 --k 10 --metric l2 --backend xla
+
+The model-cell mode (``--arch``/``--shape``) was retired; use
+``repro.launch.dryrun.run_cell`` plus ``repro.analysis.rooflines`` for
+model-config sweeps.
 """
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 import argparse
-import dataclasses
-import json
-
-from repro.configs import get_config
-from repro.configs.base import register
+import os
+import warnings
 
 
-def parse_val(v: str):
-    for cast in (int, float):
-        try:
-            return cast(v)
-        except ValueError:
-            pass
-    if v in ("True", "False"):
-        return v == "True"
-    return v
+def main():
+    warnings.warn(
+        "benchmarks/hillclimb.py is deprecated: use "
+        'Index.build(plan="measure") / repro.search.plan.tune_plan '
+        "(see docs/performance_model.md)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--knn", action="store_true",
+                    help="forward to repro.search.plan.tune_plan")
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--metric", default="mips")
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--storage", default="f32",
+                    help="database storage tier: f32 | bf16 | int8")
+    ap.add_argument("--recall-target", type=float, default=0.95)
+    ap.add_argument("--device", default="",
+                    help="hardware profile name (default: auto-detect)")
+    ap.add_argument("--out", default="benchmarks/results/hillclimb")
+    # Retired model-cell flags, kept so old invocations fail helpfully.
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--tag", default="variant")
+    args = ap.parse_args()
 
+    if not args.knn:
+        ap.error(
+            "the model-cell hillclimb mode was retired; use "
+            "repro.launch.dryrun.run_cell / repro.analysis.rooflines "
+            "(search kernels: re-run with --knn, which forwards to "
+            "repro.search.plan.tune_plan)"
+        )
 
-def knn_main(args):
-    """Measured refinement of the analytical search plan (plan cache aware)."""
     import jax
 
     from repro.search import plan as planlib
@@ -47,12 +64,12 @@ def knn_main(args):
     model = planlib.plan_search(
         n=args.n, d=args.d, k=args.k, m=args.m, metric=args.metric,
         recall_target=args.recall_target, backend=args.backend,
-        device=args.device or None,
+        device=args.device or None, storage=args.storage,
     )
     print(
         f"model plan: bm={model.block_m} bn={model.block_n} "
         f"qb={model.query_block} L={model.num_bins} W=2^{model.log2_bin_size} "
-        f"bottleneck={model.bottleneck} "
+        f"storage={model.storage} bottleneck={model.bottleneck} "
         f"attainable={model.attainable_flops / 1e12:.1f}TF/s "
         f"E[recall]={model.expected_recall:.4f}"
     )
@@ -71,75 +88,6 @@ def knn_main(args):
         model.block_m, model.block_n, model.query_block
     )
     print(f"model {'CONFIRMED' if agrees else 'REFINED'} by measurement")
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--knn", action="store_true",
-                    help="sweep search-kernel tiles instead of a model cell")
-    ap.add_argument("--m", type=int, default=512)
-    ap.add_argument("--n", type=int, default=4096)
-    ap.add_argument("--d", type=int, default=64)
-    ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--metric", default="mips")
-    ap.add_argument("--backend", default="xla")
-    ap.add_argument("--recall-target", type=float, default=0.95)
-    ap.add_argument("--device", default="",
-                    help="hardware profile name (default: auto-detect)")
-    ap.add_argument("--arch")
-    ap.add_argument("--shape")
-    ap.add_argument("--mesh", default="single")
-    ap.add_argument("--set", action="append", default=[],
-                    help="cfg override key=value (repeatable)")
-    ap.add_argument("--tag", default="variant")
-    ap.add_argument("--out", default="benchmarks/results/hillclimb")
-    args = ap.parse_args()
-
-    if args.knn:
-        knn_main(args)
-        return
-    if not args.arch or not args.shape:
-        ap.error("--arch and --shape are required (unless --knn)")
-
-    cfg = get_config(args.arch)
-    overrides = {}
-    for kv in args.set:
-        k, v = kv.split("=", 1)
-        overrides[k] = parse_val(v)
-    if overrides:
-        register(dataclasses.replace(cfg, **overrides))
-
-    from repro.launch.dryrun import run_cell
-
-    res = run_cell(args.arch, args.shape, args.mesh)
-    os.makedirs(args.out, exist_ok=True)
-    out_path = os.path.join(
-        args.out, f"{args.arch}_{args.shape}_{args.mesh}_{args.tag}.json"
-    )
-    with open(out_path, "w") as f:
-        json.dump(res, f, indent=1)
-
-    base_path = os.path.join(
-        "benchmarks/results/dryrun", f"{args.arch}_{args.shape}_{args.mesh}.json"
-    )
-    r = res["roofline"]
-    line = (
-        f"{args.tag}: dom={r['dominant']} step={r['step_time_s']:.4f}s "
-        f"comp={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
-        f"coll={r['collective_s']:.3f} instr={r['instruction_s']:.3f} "
-        f"frac={r['roofline_fraction']:.3f}"
-    )
-    print(line)
-    if os.path.exists(base_path):
-        b = json.load(open(base_path))["roofline"]
-        print(
-            f"baseline: dom={b['dominant']} step={b['step_time_s']:.4f}s "
-            f"comp={b['compute_s']:.3f} mem={b['memory_s']:.3f} "
-            f"coll={b['collective_s']:.3f} frac={b['roofline_fraction']:.3f}"
-        )
-        for term in ("step_time_s", "compute_s", "memory_s", "collective_s"):
-            if b[term] > 1e-9:
-                print(f"  {term}: {r[term] / b[term]:.3f}x")
 
 
 if __name__ == "__main__":

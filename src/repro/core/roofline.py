@@ -98,15 +98,27 @@ def partial_reduce_cost(
     cops_per_dot: float = 3.0,
     block_rows: int = 512,
     dtype_bytes: int = 4,
+    db_bytes: int = None,
 ) -> KernelCost:
     """Cost model of the PartialReduce kernel (Appendix A.3).
 
     FLOPs  = 2MND (the einsum)
     bytes  = 4(MD + MND/ib + 2ML)  -- Eq. 20, ib = query block rows
     COPs   = C * M * N             -- C per dot product (A.5 accounting)
+
+    ``db_bytes`` prices the database-stream term (the MND/ib bytes)
+    separately from the query/winner traffic — reduced-precision storage
+    tiers (``repro.search.quant``) stream 2- or 1-byte rows while queries
+    and bin winners stay at ``dtype_bytes``.  ``None`` keeps the classic
+    single-dtype Eq. 20 form.
     """
+    if db_bytes is None:
+        db_bytes = dtype_bytes
     flops = 2.0 * m * n * d
-    hbm = dtype_bytes * (m * d + (m / block_rows) * n * d + 2 * m * l)
+    hbm = (
+        dtype_bytes * (m * d + 2 * m * l)
+        + db_bytes * (m / block_rows) * n * d
+    )
     cops = cops_per_dot * m * n
     return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
 

@@ -35,6 +35,7 @@ def partial_reduce_packed(
     queries: jnp.ndarray,   # (m, d) — any m, d <= database's lane-padded d
     database: jnp.ndarray,  # (n_pad, d_pad) pre-packed to the tiling contract
     bias: jnp.ndarray,      # (1, n_pad) f32, tail already masked
+    scale: jnp.ndarray = None,  # (1, n_pad) f32 per-row scale (int8 tier)
     *,
     bin_size: int,
     block_m: int = 256,
@@ -47,8 +48,11 @@ def partial_reduce_packed(
     multiple, N padded to ``block_n`` with masked tail) — see
     ``repro.search.packed``.  Only the (m, d) query block is padded here,
     so repeated searches against the same database perform zero
-    database-sized copies.  Returns (values, indices) with the query
-    padding already stripped: both (m, n_pad // bin_size).
+    database-sized copies.  ``database`` may be stored in a reduced-
+    precision tier (bf16/int8 — dequantized tile-locally in VMEM, so HBM
+    streams the reduced bytes); ``scale`` carries the int8 per-row scale.
+    Returns (values, indices) with the query padding already stripped:
+    both (m, n_pad // bin_size).
     """
     m, d = queries.shape
     d_pad = database.shape[1]
@@ -57,34 +61,35 @@ def partial_reduce_packed(
     m_pad = round_up(max(m, block_m), block_m)
     q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
     vals, idxs = partial_reduce_pallas(
-        q, database, bias,
+        q, database, bias, scale,
         bin_size=bin_size, block_m=block_m, block_n=block_n,
         interpret=interpret,
     )
     return vals[:m], idxs[:m]
 
 
-def _partial_reduce_kernel(
-    q_ref,      # (block_m, d)      VMEM
-    x_ref,      # (block_n, d)      VMEM
-    bias_ref,   # (1, block_n)      VMEM: -inf mask and/or -||x||^2/2
-    v_ref,      # (block_m, bins_per_block) VMEM out
-    a_ref,      # (block_m, bins_per_block) VMEM out
-    *,
-    block_n: int,
-    bin_size: int,
-):
+def _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                 *, block_n: int, bin_size: int):
     block_m = q_ref.shape[0]
     bins_per_block = block_n // bin_size
     j = pl.program_id(1)
 
+    q = q_ref[...]
+    x = x_ref[...]
+    if x.dtype != q.dtype:
+        # Reduced-precision storage tier: the HBM stream carried the
+        # narrow dtype; dequantize the tile in VMEM before it hits the
+        # MXU (per-row int8 scales apply to the scores below).
+        x = x.astype(q.dtype)
     # MXU: one (block_m, d) x (d, block_n) matmul, f32 accumulation.
     scores = jax.lax.dot_general(
-        q_ref[...],
-        x_ref[...],
+        q,
+        x,
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if scale_ref is not None:
+        scores = scores * scale_ref[...]  # int8 per-row dequant scale
     scores = scores + bias_ref[...]  # fused mask / halved-norm (1 COP)
 
     # Bin-wise top-1: reshape puts each bin in the minor (lane) dimension.
@@ -101,6 +106,35 @@ def _partial_reduce_kernel(
     a_ref[...] = base + amax
 
 
+def _partial_reduce_kernel(
+    q_ref,      # (block_m, d)      VMEM
+    x_ref,      # (block_n, d)      VMEM
+    bias_ref,   # (1, block_n)      VMEM: -inf mask and/or -||x||^2/2
+    v_ref,      # (block_m, bins_per_block) VMEM out
+    a_ref,      # (block_m, bins_per_block) VMEM out
+    *,
+    block_n: int,
+    bin_size: int,
+):
+    _reduce_tile(q_ref, x_ref, None, bias_ref, v_ref, a_ref,
+                 block_n=block_n, bin_size=bin_size)
+
+
+def _partial_reduce_kernel_scaled(
+    q_ref,      # (block_m, d)      VMEM
+    x_ref,      # (block_n, d)      VMEM int8
+    scale_ref,  # (1, block_n)      VMEM f32 per-row scale
+    bias_ref,   # (1, block_n)      VMEM
+    v_ref,
+    a_ref,
+    *,
+    block_n: int,
+    bin_size: int,
+):
+    _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                 block_n=block_n, bin_size=bin_size)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -111,6 +145,7 @@ def partial_reduce_pallas(
     queries: jnp.ndarray,   # (m, d)  m % block_m == 0, d % 128 == 0
     database: jnp.ndarray,  # (n, d)  n % block_n == 0
     bias: jnp.ndarray,      # (1, n)  f32
+    scale: jnp.ndarray = None,  # (1, n) f32 per-row scale, or None
     *,
     bin_size: int,
     block_m: int = 256,
@@ -120,7 +155,10 @@ def partial_reduce_pallas(
     """Fused score+reduce. Returns (values, indices), both (m, n // bin_size).
 
     Shapes must already satisfy the tiling contract — use
-    ``repro.kernels.ops`` for the padding/planning front-end.
+    ``repro.kernels.ops`` for the padding/planning front-end.  ``database``
+    may be a reduced-precision storage tier (bf16/int8); ``scale`` is the
+    int8 tier's per-row dequantization scale, applied to the score tile
+    in VMEM.
     """
     m, d = queries.shape
     n, d2 = database.shape
@@ -135,17 +173,27 @@ def partial_reduce_pallas(
     bins_per_block = block_n // bin_size
     grid = (m // block_m, n // block_n)
 
-    kernel = functools.partial(
-        _partial_reduce_kernel, block_n=block_n, bin_size=bin_size
-    )
+    in_specs = [
+        pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+    ]
+    if scale is None:
+        kernel = functools.partial(
+            _partial_reduce_kernel, block_n=block_n, bin_size=bin_size
+        )
+        operands = (queries, database, bias)
+    else:
+        kernel = functools.partial(
+            _partial_reduce_kernel_scaled, block_n=block_n, bin_size=bin_size
+        )
+        # scale rides the same (1, block_n) tiling as the bias row.
+        in_specs.insert(2, pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+        operands = (queries, database, scale, bias)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_m, bins_per_block), lambda i, j: (i, j)),
             pl.BlockSpec((block_m, bins_per_block), lambda i, j: (i, j)),
@@ -155,4 +203,4 @@ def partial_reduce_pallas(
             jax.ShapeDtypeStruct((m, num_bins), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, database, bias)
+    )(*operands)

@@ -12,6 +12,13 @@ One API over every backend (paper Listings 1/2, Alg. 2, §7):
 Backends: "auto" | "xla" | "pallas" | "sharded" (``SearchSpec.backend``).
 Metrics: "mips" | "l2" | "cosine", extensible via ``register_metric``; the
 value/sign contract lives in ``repro.search.metrics``.
+Storage tiers: "f32" | "bf16" | "int8" (``SearchSpec.storage``,
+``repro.search.quant``) — quantized tiers store the packed database at 2
+or 1 bytes/element, scan it at reduced precision with an over-fetched
+candidate budget (``scan_k``), and exactly rescore the winners against a
+full-precision tail, cutting database HBM traffic 2-4x (Eq. 10/20) while
+keeping the Eq. 13-14 recall guarantee; "f32" is bit-identical to the
+pre-tier path.
 
 Kernel planning (``repro.search.plan``): every tile size and the bin count
 are derived analytically from the paper's performance model (Eq. 4–10) and
@@ -71,9 +78,11 @@ from repro.search.backends import (
     CompileCache,
     default_backend,
     dense_search,
+    dense_search_quant,
     make_sharded_search_fn,
     pallas_search,
     pallas_search_packed,
+    pallas_search_packed_quant,
     reset_dispatch_counts,
     reset_trace_counts,
 )
@@ -101,6 +110,15 @@ from repro.search.packed import (
     fuse_bias,
     pack_state,
     reset_pack_events,
+)
+from repro.search.quant import (
+    STORAGE_TIERS,
+    QuantizedRows,
+    dequantize_rows,
+    quantize_rows,
+    scan_k,
+    storage_bytes,
+    storage_dtype,
 )
 from repro.search.plan import (
     Plan,
@@ -155,6 +173,16 @@ __all__ = [
     "PackedState",
     "pack_state",
     "fuse_bias",
+    # quantized storage tiers (repro.search.quant)
+    "STORAGE_TIERS",
+    "QuantizedRows",
+    "quantize_rows",
+    "dequantize_rows",
+    "storage_bytes",
+    "storage_dtype",
+    "scan_k",
+    "dense_search_quant",
+    "pallas_search_packed_quant",
     # kernel planner (the performance model as a subsystem)
     "Plan",
     "plan_search",

@@ -49,8 +49,10 @@ __all__ = [
     "DISPATCH_COUNTS",
     "CompileCache",
     "dense_search",
+    "dense_search_quant",
     "pallas_search",
     "pallas_search_packed",
+    "pallas_search_packed_quant",
     "prepare_pallas_inputs",
     "make_sharded_search_fn",
     "default_backend",
@@ -166,6 +168,101 @@ def dense_search(
         aggregate_to_topk=aggregate_to_topk,
         use_bitonic=use_bitonic,
     )
+    if m.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
+# --- Quantized two-pass (scan -> exact rescore), repro.search.quant ---------
+
+
+def _rescore_candidates(q, scan_vals, idxs, rescore_db, rescore_bias, k,
+                        k_scan, use_bitonic):
+    """Exact second pass of the quantized search (internal max convention).
+
+    Two stages, mirroring the paper's score/rescore split with the *scan*
+    at reduced precision: first the L bin winners are cut to the
+    ``k_scan`` best by quantized score (``k_scan = k + T``, the
+    over-fetch budget of ``repro.search.quant.scan_k`` — a true top-k
+    entry drops out only past T quantization-promoted rivals, the same
+    event the bin over-fetch already insures), then only those O(M·K')
+    rows are gathered from the full-precision rescore tail and re-scored
+    exactly.  Candidates the scan masked (tombstoned rows, padded bins —
+    their clamped indices would otherwise rescore to a live row's true
+    score and duplicate it into top-k) stay masked.
+    """
+    if k_scan < scan_vals.shape[-1]:
+        scan_vals, sel = jax.lax.top_k(scan_vals, k_scan)
+        idxs = jnp.take_along_axis(idxs, sel, axis=-1)
+    rows = rescore_db[idxs]                           # (m, k_scan, d) gather
+    exact = jnp.einsum("md,mld->ml", q, rows)
+    exact = exact + rescore_bias[idxs]
+    exact = jnp.where(scan_vals > MASK_VALUE * 0.5, exact, MASK_VALUE)
+    return exact_rescoring(exact, idxs, k, mode="max", use_bitonic=use_bitonic)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "k_scan", "recall_target",
+        "reduction_input_size_override", "aggregate_to_topk", "use_bitonic",
+    ),
+)
+def dense_search_quant(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: Optional[jnp.ndarray],
+    scale: Optional[jnp.ndarray],
+    rescore_db: Optional[jnp.ndarray],
+    rescore_bias: Optional[jnp.ndarray],
+    *,
+    metric: str,
+    k: int,
+    k_scan: int,
+    recall_target: float = 0.95,
+    reduction_input_size_override: int = -1,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """XLA two-pass search over a quantized storage tier.
+
+    ``database`` holds the stored (bf16/int8) metric-prepared rows,
+    ``scale`` the int8 per-row dequantization scale (None otherwise), and
+    ``row_bias`` the fused bias *of the stored values* (metric-bias
+    correction + tombstones).  When ``rescore_db`` is given the scan keeps
+    the over-fetched candidate set (bins planned for ``k_scan``,
+    ``repro.search.quant.scan_k``) and the exact top-k comes from
+    re-scoring those candidates against the full-precision tail; without
+    it the quantized scan's own scores are returned (approximate values).
+    """
+    m = get_metric(metric)
+    TRACE_COUNTS["xla"] += 1
+    q = m.prepare_queries(queries)
+    scores = jnp.einsum("ik,jk->ij", q, database)
+    if scale is not None:
+        scores = scores * scale[None, :]
+    if row_bias is not None:
+        scores = scores + row_bias[None, :]
+    if rescore_db is not None:
+        vals, idxs = approx_max_k(
+            scores,
+            k_scan,
+            recall_target=recall_target,
+            reduction_input_size_override=reduction_input_size_override,
+            aggregate_to_topk=False,
+        )
+        vals, idxs = _rescore_candidates(
+            q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
+        )
+    else:
+        vals, idxs = approx_max_k(
+            scores,
+            k,
+            recall_target=recall_target,
+            reduction_input_size_override=reduction_input_size_override,
+            aggregate_to_topk=aggregate_to_topk,
+            use_bitonic=use_bitonic,
+        )
     if m.negate_output:
         vals = -vals
     return vals, idxs
@@ -308,6 +405,65 @@ def pallas_search_packed(
     return vals, idxs
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "k_scan", "n", "bin_size", "block_m", "block_n",
+        "interpret", "aggregate_to_topk", "use_bitonic",
+    ),
+)
+def pallas_search_packed_quant(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: jnp.ndarray,
+    scale: Optional[jnp.ndarray],
+    rescore_db: Optional[jnp.ndarray],
+    rescore_bias: Optional[jnp.ndarray],
+    *,
+    metric: str,
+    k: int,
+    k_scan: int,
+    n: int,
+    bin_size: int,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-kernel two-pass search over a quantized packed tier.
+
+    Same packed-operand contract as ``pallas_search_packed`` — the kernel
+    streams the (n_pad, d_pad) *stored* rows (bf16/int8 HBM bytes,
+    dequantized tile-locally in VMEM; ``scale`` is the int8 per-row scale
+    in the bias row's (1, n_pad) layout).  The over-fetched bin winners
+    (the packed layout's bins are planned for ``quant.scan_k``) are then
+    exactly re-scored against the full-precision gather tail
+    ``rescore_db``/``rescore_bias`` — O(M·L·D) second-pass work, inside
+    Eq. 10's O(min(M, N)) budget.
+    """
+    m_obj = get_metric(metric)
+    TRACE_COUNTS["pallas"] += 1
+    q = m_obj.prepare_queries(queries)
+    vals, idxs = partial_reduce_packed(
+        q, database, row_bias, scale,
+        bin_size=bin_size, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
+    if rescore_db is not None:
+        vals, idxs = _rescore_candidates(
+            q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
+        )
+    elif aggregate_to_topk:
+        vals, idxs = exact_rescoring(
+            vals, idxs, k, mode="max", use_bitonic=use_bitonic
+        )
+    if m_obj.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
 def pallas_search(
     queries: jnp.ndarray,
     database: jnp.ndarray,
@@ -374,6 +530,7 @@ def make_sharded_search_fn(
     db_axis: str = "model",
     batch_axis: Optional[str] = None,
     use_bitonic: bool = False,
+    k_scan: Optional[int] = None,
 ):
     """Build (queries, database, row_bias) -> (values, indices) over a mesh.
 
@@ -382,10 +539,21 @@ def make_sharded_search_fn(
     Each shard PartialReduces its rows with recall accounted against the
     *global* N (``reduction_input_size_override``), the L bin winners are
     all-gathered, and ExactRescoring runs replicated.
+
+    Quantized storage tiers pass the extra sharded operands ``scale``
+    (int8 per-row scale, P(db_axis)) and ``rescore_db``/``rescore_bias``
+    (the full-precision rescore tail, P(db_axis, None)/P(db_axis)): each
+    shard then re-scores its own over-fetched bin winners exactly —
+    candidate indices are shard-local, so the gather never crosses shards
+    — and the all-gather carries *exact* scores into the final rescoring.
+    ``k_scan`` is the over-fetched scan k the bins are planned for
+    (default: ``k``).
     """
     m_obj = get_metric(metric)
+    scan_k = k if k_scan is None else k_scan
 
-    def searcher(queries, database, row_bias=None):
+    def searcher(queries, database, row_bias=None, scale=None,
+                 rescore_db=None, rescore_bias=None):
         global_n = database.shape[0]
         n_shards = mesh.shape[db_axis]
         if global_n % n_shards:
@@ -401,16 +569,45 @@ def make_sharded_search_fn(
         )
         qspec = P(batch_axis, None) if batch_axis else P(None, None)
 
-        def local_fn(q, db, b):
+        args = [q, database, bias]
+        in_specs = [qspec, P(db_axis, None), P(db_axis)]
+        with_scale = scale is not None
+        with_rescore = rescore_db is not None
+        if with_scale:
+            args.append(scale)
+            in_specs.append(P(db_axis))
+        if with_rescore:
+            args.extend([rescore_db, rescore_bias])
+            in_specs.extend([P(db_axis, None), P(db_axis)])
+
+        def local_fn(q, db, b, *rest):
             axis_idx = jax.lax.axis_index(db_axis)
             n_local = db.shape[0]
             offset = axis_idx.astype(jnp.int32) * n_local
-            scores = jnp.einsum("ik,jk->ij", q, db) + b[None, :]
+            rest = list(rest)
+            sc = rest.pop(0) if with_scale else None
+            rs_db, rs_bias = rest if with_rescore else (None, None)
+            scores = jnp.einsum("ik,jk->ij", q, db)
+            if sc is not None:
+                scores = scores * sc[None, :]
+            scores = scores + b[None, :]
             plan = plan_bins(
-                n_local, k, recall_target,
+                n_local, min(scan_k, n_local), recall_target,
                 reduction_input_size_override=global_n,
             )
             vals, idxs = partial_reduce_with_plan(scores, plan, mode="max")
+            if with_rescore:
+                # Cut the shard's bin winners to its k_scan best by
+                # quantized score, then exact-rescore only those — the
+                # all-gather then carries exact scores (and ~k_scan rows
+                # per shard instead of L).
+                k_cut = min(scan_k, vals.shape[-1])
+                if k_cut < vals.shape[-1]:
+                    vals, sel = jax.lax.top_k(vals, k_cut)
+                    idxs = jnp.take_along_axis(idxs, sel, axis=-1)
+                rows = rs_db[idxs]
+                exact = jnp.einsum("md,mld->ml", q, rows) + rs_bias[idxs]
+                vals = jnp.where(vals > MASK_VALUE * 0.5, exact, MASK_VALUE)
             idxs = idxs + offset
             vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
             idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
@@ -424,9 +621,9 @@ def make_sharded_search_fn(
         fn = shard_map_compat(
             local_fn,
             mesh=mesh,
-            in_specs=(qspec, P(db_axis, None), P(db_axis)),
+            in_specs=tuple(in_specs),
             out_specs=(P(batch_axis, None), P(batch_axis, None)),
         )
-        return fn(q, database, bias)
+        return fn(*args)
 
     return searcher

@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.binning import BinPlan, plan_bins, round_up
 from repro.search import backends, packed as packedlib, plan as planlib
+from repro.search import quant
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
 
@@ -137,7 +138,10 @@ class Index:
                 metric=metric, k=k, recall_target=recall_target,
                 backend=backend, **spec_kwargs,
             )
-        get_metric(spec.metric)  # validate eagerly
+        # Validate eagerly: metric existence AND metric x storage-tier
+        # compatibility (covers metrics registered after the spec was
+        # built, which SearchSpec's own validation cannot see).
+        quant.check_metric_storage(get_metric(spec.metric), spec.storage)
         database = jnp.asarray(database)
         if database.ndim != 2:
             raise ValueError(f"database must be (N, D), got {database.shape}")
@@ -166,6 +170,7 @@ class Index:
                     spec.reduction_input_size_override,
                 block_m=spec.block_m, max_block_n=spec.max_block_n,
                 query_block=spec.query_block,
+                storage=spec.storage, rescore=spec.rescore_enabled,
             )
             if plan == "measure" and plan_obj.source != "user":
                 plan_obj = planlib.tune_plan(
@@ -227,11 +232,19 @@ class Index:
 
     @property
     def plan(self) -> BinPlan:
-        """Bin plan (and analytic E[recall], Eq. 13) for the current shape."""
+        """Bin plan (and analytic E[recall], Eq. 13) for the current shape.
+
+        Quantized tiers plan for the over-fetched scan k
+        (``repro.search.quant.scan_k``), so ``expected_recall`` is the
+        conservative ``((L-1)/L)^(K'-1)`` bound the two-pass guarantee
+        rests on.
+        """
         if self._packed is not None:
             return self._packed.plan
         return plan_bins(
-            self.capacity, self.spec.k, self.spec.recall_target,
+            self.capacity,
+            packedlib.scan_k_for(self.spec, self.capacity),
+            self.spec.recall_target,
             reduction_input_size_override=self.spec.reduction_input_size_override,
         )
 
@@ -272,6 +285,7 @@ class Index:
             backend=backend or self._resolve_backend(),
             device=device or (pin_from.device if pin_from else None),
             reduction_input_size_override=spec.reduction_input_size_override,
+            storage=spec.storage, rescore=spec.rescore_enabled,
             **tiles,
         )
 
@@ -328,6 +342,19 @@ class Index:
                 "wall_s": plan.predicted_s,
                 "qps": plan.predicted_qps,
             },
+            # Traffic is priced from the dtype actually *stored*, not an
+            # assumed 4 bytes/element: quantized tiers stream 2- or 1-byte
+            # rows (Eq. 10/20) plus an O(M·L·D) exact rescore pass.
+            "storage": {
+                "tier": self.spec.storage,
+                "db_bytes_per_element": quant.storage_bytes(
+                    self.spec.storage
+                ),
+                "db_resident_bytes": self.capacity * self.dim
+                * quant.storage_bytes(self.spec.storage),
+                "rescore": self.spec.rescore_enabled,
+                "k_scan": plan.k_scan or plan.k,
+            },
         }
         if self._packed is not None:
             report["packed"] = {
@@ -362,15 +389,28 @@ class Index:
                     (min(m_eff, self.spec.query_block), self.dim),
                     self._db.dtype,
                 )
-                lowered = backends.dense_search.lower(
-                    q, pk.db, pk.bias,
-                    metric=self.spec.metric, k=self.spec.k,
-                    recall_target=self.spec.recall_target,
-                    reduction_input_size_override=
-                        self.spec.reduction_input_size_override,
-                    aggregate_to_topk=self.spec.aggregate_to_topk,
-                    use_bitonic=self.spec.use_bitonic,
-                ).compile()
+                if self.spec.storage == "f32":
+                    lowered = backends.dense_search.lower(
+                        q, pk.db, pk.bias,
+                        metric=self.spec.metric, k=self.spec.k,
+                        recall_target=self.spec.recall_target,
+                        reduction_input_size_override=
+                            self.spec.reduction_input_size_override,
+                        aggregate_to_topk=self.spec.aggregate_to_topk,
+                        use_bitonic=self.spec.use_bitonic,
+                    ).compile()
+                else:
+                    lowered = backends.dense_search_quant.lower(
+                        q, pk.db, pk.bias, pk.scale,
+                        pk.rescore_db, pk.rescore_bias,
+                        metric=self.spec.metric, k=self.spec.k,
+                        k_scan=packedlib.scan_k_for(self.spec, pk.n),
+                        recall_target=self.spec.recall_target,
+                        reduction_input_size_override=
+                            self.spec.reduction_input_size_override,
+                        aggregate_to_topk=self.spec.aggregate_to_topk,
+                        use_bitonic=self.spec.use_bitonic,
+                    ).compile()
                 block_plan = plan
                 if q.shape[0] != plan.m:
                     block_plan = self._replan(
@@ -426,12 +466,16 @@ class Index:
         """Pin packed operands to the mesh layout (no-op unmeshed)."""
         if self._mesh is None or self._packed is None:
             return
-        self._packed.db = jax.device_put(
-            self._packed.db, NamedSharding(self._mesh, P(self._db_axis, None))
-        )
-        self._packed.bias = jax.device_put(
-            self._packed.bias, NamedSharding(self._mesh, P(self._db_axis))
-        )
+        rows = NamedSharding(self._mesh, P(self._db_axis, None))
+        per_row = NamedSharding(self._mesh, P(self._db_axis))
+        pk = self._packed
+        pk.db = jax.device_put(pk.db, rows)
+        pk.bias = jax.device_put(pk.bias, per_row)
+        if pk.scale is not None:
+            pk.scale = jax.device_put(pk.scale, per_row)
+        if pk.rescore_db is not None:
+            pk.rescore_db = jax.device_put(pk.rescore_db, rows)
+            pk.rescore_bias = jax.device_put(pk.rescore_bias, per_row)
 
     # -- search --------------------------------------------------------------
 
@@ -489,7 +533,7 @@ class Index:
             key, lambda: self._build_block_fn(backend, pk, batch_axis)
         )
         backends.DISPATCH_COUNTS[backend] += 1
-        return fn(q, pk.db, pk.bias)
+        return fn(q, *pk.operands())
 
     def _search_loop(self, queries: jnp.ndarray) -> SearchResult:
         """Per-block Python loop: one dispatch per tile.
@@ -540,25 +584,41 @@ class Index:
             key, lambda: self._build_stream_fn(backend, pk, batch_axis)
         )
         backends.DISPATCH_COUNTS[backend] += 1
-        vals, idxs = fn(blocks, pk.db, pk.bias)
+        vals, idxs = fn(blocks, *pk.operands())
         k = vals.shape[-1]
         return SearchResult(
             vals.reshape(m_pad, k)[:m], idxs.reshape(m_pad, k)[:m]
         )
 
     def _build_block_fn(self, backend, pk, batch_axis=None):
-        """(q_block, packed_db, packed_bias) -> (values, indices) callable.
+        """(q_block, *packed_operands) -> (values, indices) callable.
 
         Closes only over static config (spec fields, packed layout
-        constants); the packed arrays are passed as operands so bias/row
-        patches never invalidate the compiled program.
+        constants); the packed arrays — ``PackedState.operands()``: (db,
+        bias) for the f32 tier, plus (scale, rescore_db, rescore_bias) for
+        quantized tiers — are passed as operands so bias/row/scale patches
+        never invalidate the compiled program.
         """
         spec = self.spec
+        quantized = spec.storage != "f32"
         if backend == "xla":
-            def fn(q, db, bias):
-                return backends.dense_search(
-                    q, db, bias,
-                    metric=spec.metric, k=spec.k,
+            if not quantized:
+                def fn(q, db, bias):
+                    return backends.dense_search(
+                        q, db, bias,
+                        metric=spec.metric, k=spec.k,
+                        recall_target=spec.recall_target,
+                        reduction_input_size_override=
+                            spec.reduction_input_size_override,
+                        aggregate_to_topk=spec.aggregate_to_topk,
+                        use_bitonic=spec.use_bitonic,
+                    )
+                return fn
+            k_scan = packedlib.scan_k_for(spec, pk.n)
+            def fn(q, db, bias, scale, rs_db, rs_bias):
+                return backends.dense_search_quant(
+                    q, db, bias, scale, rs_db, rs_bias,
+                    metric=spec.metric, k=spec.k, k_scan=k_scan,
                     recall_target=spec.recall_target,
                     reduction_input_size_override=
                         spec.reduction_input_size_override,
@@ -571,12 +631,24 @@ class Index:
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
             n, bin_size, block_n = pk.n, pk.bin_size, pk.block_n
-            def fn(q, db, bias):
-                return backends.pallas_search_packed(
-                    q, db, bias,
-                    metric=spec.metric, k=spec.k, n=n,
-                    bin_size=bin_size, block_m=spec.block_m, block_n=block_n,
-                    interpret=interpret,
+            if not quantized:
+                def fn(q, db, bias):
+                    return backends.pallas_search_packed(
+                        q, db, bias,
+                        metric=spec.metric, k=spec.k, n=n,
+                        bin_size=bin_size, block_m=spec.block_m,
+                        block_n=block_n, interpret=interpret,
+                        aggregate_to_topk=spec.aggregate_to_topk,
+                        use_bitonic=spec.use_bitonic,
+                    )
+                return fn
+            k_scan = packedlib.scan_k_for(spec, pk.n)
+            def fn(q, db, bias, scale, rs_db, rs_bias):
+                return backends.pallas_search_packed_quant(
+                    q, db, bias, scale, rs_db, rs_bias,
+                    metric=spec.metric, k=spec.k, k_scan=k_scan, n=n,
+                    bin_size=bin_size, block_m=spec.block_m,
+                    block_n=block_n, interpret=interpret,
                     aggregate_to_topk=spec.aggregate_to_topk,
                     use_bitonic=spec.use_bitonic,
                 )
@@ -588,11 +660,13 @@ class Index:
                 recall_target=spec.recall_target,
                 db_axis=db_axis, batch_axis=batch_axis,
                 use_bitonic=spec.use_bitonic,
+                k_scan=packedlib.scan_k_for(spec, pk.n) if quantized
+                else None,
             )
             jitted = jax.jit(searcher)
             qsharding = NamedSharding(mesh, P(batch_axis, None))
-            def fn(q, db, bias):
-                return jitted(jax.device_put(q, qsharding), db, bias)
+            def fn(q, *ops):
+                return jitted(jax.device_put(q, qsharding), *ops)
             return fn
         raise ValueError(f"unknown backend {backend!r}")
 
@@ -610,21 +684,23 @@ class Index:
                 recall_target=spec.recall_target,
                 db_axis=self._db_axis, batch_axis=batch_axis,
                 use_bitonic=spec.use_bitonic,
+                k_scan=packedlib.scan_k_for(spec, pk.n)
+                if spec.storage != "f32" else None,
             )
             stream = jax.jit(
-                lambda blocks, db, bias: jax.lax.map(
-                    lambda q: searcher(q, db, bias), blocks
+                lambda blocks, *ops: jax.lax.map(
+                    lambda q: searcher(q, *ops), blocks
                 )
             )
             qsharding = NamedSharding(mesh, P(None, batch_axis, None))
-            def fn(blocks, db, bias):
-                return stream(jax.device_put(blocks, qsharding), db, bias)
+            def fn(blocks, *ops):
+                return stream(jax.device_put(blocks, qsharding), *ops)
             return fn
         block_fn = self._build_block_fn(backend, pk)
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(
-            lambda blocks, db, bias: jax.lax.map(
-                lambda q: block_fn(q, db, bias), blocks
+            lambda blocks, *ops: jax.lax.map(
+                lambda q: block_fn(q, *ops), blocks
             ),
             donate_argnums=donate,
         )

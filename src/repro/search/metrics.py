@@ -40,6 +40,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.search import quant
+
 __all__ = [
     "Metric",
     "register_metric",
@@ -87,6 +89,13 @@ class Metric:
         state.  A metric whose preparation couples rows (e.g. a learned
         rotation refit over the whole database) must set False, which
         forces a full repack on every ``add``.
+      storage_tiers: the ``repro.search.quant`` storage tiers this metric's
+        prepared rows survive.  All built-ins support every tier (cosine
+        normalizes, so its rows are bounded; l2/mips use per-row int8
+        scales).  A metric whose prepared rows defeat per-row scaling —
+        e.g. an *unnormalized* cosine variant — should exclude "int8" so
+        ``SearchSpec``/``Index.build`` reject the combination with an
+        actionable error instead of a kernel-level failure.
     """
 
     name: str
@@ -95,6 +104,7 @@ class Metric:
     prepare_queries: Callable[[Array], Array]
     exact: Callable[[Array, Array, int], Tuple[Array, Array]]
     rowwise: bool = True
+    storage_tiers: Tuple[str, ...] = quant.STORAGE_TIERS
 
     def prepare_update(self, rows: Array) -> Tuple[Array, Optional[Array]]:
         """Incremental preparation of an appended row slice.
@@ -109,6 +119,62 @@ class Metric:
                 "preparation is undefined — repack the full database"
             )
         return self.prepare_database(rows)
+
+    # -- quantize-aware packing (the repro.search.quant storage tiers) ------
+
+    def storage_bias(
+        self, stored: Array, scale: Optional[Array]
+    ) -> Optional[Array]:
+        """Metric bias of the values a quantized tier actually stores.
+
+        The scan ranks by ``<q, x_hat> + bias`` where ``x_hat`` is the
+        dequantized stored row — so the bias must be computed *from the
+        stored values* (e.g. ``-||x_hat||^2/2`` for L2), not from the
+        full-precision rows, or quantized scan scores would be internally
+        inconsistent.  Implemented by re-running ``prepare_database`` on
+        the dequantized rows and keeping only the bias; a custom metric
+        for which that recipe is wrong should exclude the quantized tiers
+        via ``storage_tiers``.
+        """
+        quant.check_metric_storage(self, "bf16" if scale is None else "int8")
+        _, bias = self.prepare_database(quant.dequantize_rows(stored, scale))
+        return bias
+
+    def prepare_storage(
+        self, rows: Array, storage: str
+    ) -> quant.QuantizedRows:
+        """Metric-prepare + tier-quantize ``rows`` (full pack granularity).
+
+        Returns the stored rows, the int8 per-row scale (or None), the
+        bias correction for the stored values, and the full-precision
+        rescore tail (``exact_rows`` / ``exact_bias``).  For
+        ``storage="f32"`` this is exactly ``prepare_database`` — stored
+        and exact views alias the same arrays.
+        """
+        quant.check_metric_storage(self, storage)
+        prepped, bias = self.prepare_database(rows)
+        if not quant.is_quantized(storage):
+            return quant.QuantizedRows(prepped, None, bias, prepped, bias)
+        stored, scale = quant.quantize_rows(prepped, storage)
+        return quant.QuantizedRows(
+            stored, scale, self.storage_bias(stored, scale), prepped, bias
+        )
+
+    def prepare_update_storage(
+        self, rows: Array, storage: str
+    ) -> quant.QuantizedRows:
+        """Incremental :meth:`prepare_storage` of an appended row slice.
+
+        Same ``rowwise`` contract as :meth:`prepare_update`; quantization
+        itself is per-row (per-row int8 scales), so slice and full packs
+        agree exactly.
+        """
+        if not self.rowwise:
+            raise ValueError(
+                f"metric {self.name!r} is not row-wise; incremental "
+                "preparation is undefined — repack the full database"
+            )
+        return self.prepare_storage(rows, storage)
 
 
 _REGISTRY: Dict[str, Metric] = {}

@@ -38,11 +38,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.binning import BinPlan, plan_bins, round_up
+from repro.search import quant
 from repro.search.backends import MASK_VALUE
 from repro.search.metrics import Metric
 from repro.search.spec import SearchSpec
@@ -53,6 +54,7 @@ __all__ = [
     "fuse_bias",
     "pack_state",
     "reset_pack_events",
+    "scan_k_for",
 ]
 
 # event name -> count of packing work performed (test observability hook;
@@ -99,9 +101,20 @@ class PackedState:
         pallas with the tail positions pre-masked to ``MASK_VALUE``.
       n: logical row space covered (== Index.capacity when packed).
       d: logical feature dim (before lane padding).
-      plan: the BinPlan the pallas layout was derived from.
+      plan: the BinPlan the pallas layout was derived from.  For quantized
+        tiers the plan is laid out for the over-fetched scan k
+        (``repro.search.quant.scan_k``), not the user's k.
       bin_size / block_n: pallas kernel tile parameters (block_n == 0 for
         non-pallas layouts).
+      storage: the ``repro.search.quant`` tier ``db`` is stored in.
+      scale: per-row int8 dequantization scale — (n,) f32, or (1, n_pad)
+        for the pallas layout; None for non-int8 tiers.
+      rescore_db: full-precision metric-prepared rows (n, d) — the exact
+        rescore tail the two-pass search gathers candidates from; None
+        when rescoring is disabled or storage is "f32".
+      rescore_bias: fused f32 bias row (n,) for the rescore pass — the
+        *exact* metric bias plus the same tombstone mask as ``bias``, so
+        rescoring can never resurrect a deleted (or padded) row.
     """
 
     backend: str
@@ -112,6 +125,15 @@ class PackedState:
     plan: BinPlan
     bin_size: int
     block_n: int
+    storage: str = "f32"
+    scale: Optional[jnp.ndarray] = None
+    rescore_db: Optional[jnp.ndarray] = None
+    rescore_bias: Optional[jnp.ndarray] = None
+    # dtype the database was cast to before preparation/quantization;
+    # incremental updates must repeat the same cast-then-prepare order so
+    # slice and full packs agree exactly (db.dtype itself is the *stored*
+    # dtype on quantized tiers, which is not the same thing).
+    compute_dtype: str = "float32"
 
     # -- logical views --------------------------------------------------------
 
@@ -124,18 +146,58 @@ class PackedState:
         flat = self.bias[0] if self.bias.ndim == 2 else self.bias
         return flat[: self.n]
 
+    def scale_row(self) -> Optional[jnp.ndarray]:
+        """The int8 per-row scale without layout padding: (n,) or None."""
+        if self.scale is None:
+            return None
+        flat = self.scale[0] if self.scale.ndim == 2 else self.scale
+        return flat[: self.n]
+
+    def operands(self) -> Tuple[Optional[jnp.ndarray], ...]:
+        """The positional device operands a search dispatch consumes.
+
+        ``(db, bias)`` for the f32 tier (today's exact call shape);
+        ``(db, bias, scale, rescore_db, rescore_bias)`` for quantized
+        tiers (entries may be None — e.g. bf16 has no scale).  Passing
+        these as *operands* rather than closure captures is what lets
+        bias/row/scale patches leave compiled programs valid.
+        """
+        if self.storage == "f32":
+            return (self.db, self.bias)
+        return (
+            self.db, self.bias, self.scale,
+            self.rescore_db, self.rescore_bias,
+        )
+
     # -- in-place patches (the cheap mutations) -------------------------------
+
+    @staticmethod
+    def _patch_row(arr: jnp.ndarray, start: int, values: jnp.ndarray
+                   ) -> jnp.ndarray:
+        """Write a slice into a per-row array in either layout — (n,) for
+        xla/sharded or (1, n_pad) for pallas (bias and scale alike)."""
+        if arr.ndim == 2:
+            return arr.at[0, start : start + values.shape[0]].set(values)
+        return arr.at[start : start + values.shape[0]].set(values)
 
     def update_rows(self, start: int, rows: jnp.ndarray, metric: Metric):
         """Patch an appended row slice: prepare only the slice, O(r·D).
 
-        ``rows`` are raw (unprepared) and are cast to the packed dtype
-        before preparation — the same cast-then-prepare order as the full
-        pack, so incremental and full packs are numerically identical.
+        ``rows`` are raw (unprepared) and are cast to the packed compute
+        dtype before preparation — the same cast-then-prepare(-then-
+        quantize) order as the full pack, so incremental and full packs
+        are numerically identical (quantization is per-row, see
+        ``Metric.prepare_update_storage``).
         """
-        prepped, metric_bias = metric.prepare_update(
-            rows.astype(self.db.dtype)
-        )
+        if self.storage == "f32":
+            prepped, metric_bias = metric.prepare_update(
+                rows.astype(self.db.dtype)
+            )
+        else:
+            qr = metric.prepare_update_storage(
+                rows.astype(jnp.dtype(self.compute_dtype)), self.storage
+            )
+            prepped, metric_bias = qr.rows, qr.bias
         r = prepped.shape[0]
         slice_bias = fuse_bias(metric_bias, num_rows=r)
         if prepped.shape[1] < self.db.shape[1]:  # pallas lane padding
@@ -143,18 +205,32 @@ class PackedState:
                 prepped, ((0, 0), (0, self.db.shape[1] - prepped.shape[1]))
             )
         self.db = self.db.at[start : start + r].set(prepped)
-        if self.bias.ndim == 2:
-            self.bias = self.bias.at[0, start : start + r].set(slice_bias)
-        else:
-            self.bias = self.bias.at[start : start + r].set(slice_bias)
+        self.bias = self._patch_row(self.bias, start, slice_bias)
+        if self.storage != "f32":
+            if self.scale is not None:
+                self.scale = self._patch_row(self.scale, start, qr.scale)
+            if self.rescore_db is not None:
+                self.rescore_db = self.rescore_db.at[
+                    start : start + r
+                ].set(qr.exact_rows.astype(self.rescore_db.dtype))
+                self.rescore_bias = self.rescore_bias.at[
+                    start : start + r
+                ].set(fuse_bias(qr.exact_bias, num_rows=r))
         PACK_EVENTS["rows_updated"] += 1
 
     def delete_rows(self, ids: jnp.ndarray):
-        """Tombstone rows: patch only the bias entries, O(|ids|)."""
+        """Tombstone rows: patch only the bias entries, O(|ids|).
+
+        Quantized tiers patch the rescore bias row too — the exact second
+        pass recomputes true scores, so it must carry its own tombstone
+        mask or rescoring would resurrect deleted rows.
+        """
         if self.bias.ndim == 2:
             self.bias = self.bias.at[0, ids].set(MASK_VALUE)
         else:
             self.bias = self.bias.at[ids].set(MASK_VALUE)
+        if self.rescore_bias is not None:
+            self.rescore_bias = self.rescore_bias.at[ids].set(MASK_VALUE)
         PACK_EVENTS["bias_patched"] += 1
 
     # -- layout changes (copy, but never metric re-preparation) ---------------
@@ -171,13 +247,37 @@ class PackedState:
         """
         rows = self.rows()
         bias = self.bias_row()
+        scale = self.scale_row()
+        rescore_db, rescore_bias = self.rescore_db, self.rescore_bias
         if new_n > self.n:
-            rows = jnp.pad(rows, ((0, new_n - self.n), (0, 0)))
-            bias = jnp.pad(
-                bias, (0, new_n - self.n), constant_values=MASK_VALUE
-            )
+            grow = new_n - self.n
+            rows = jnp.pad(rows, ((0, grow), (0, 0)))
+            bias = jnp.pad(bias, (0, grow), constant_values=MASK_VALUE)
+            if scale is not None:
+                scale = jnp.pad(scale, (0, grow))
+            if rescore_db is not None:
+                rescore_db = jnp.pad(rescore_db, ((0, grow), (0, 0)))
+                rescore_bias = jnp.pad(
+                    rescore_bias, (0, grow), constant_values=MASK_VALUE
+                )
         PACK_EVENTS["relayout"] += 1
-        return _layout(backend, rows, bias, new_n, self.d, spec)
+        return _layout(
+            backend, rows, bias, new_n, self.d, spec,
+            scale=scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
+            compute_dtype=self.compute_dtype,
+        )
+
+
+def scan_k_for(spec: SearchSpec, n: int) -> int:
+    """The k the scan's bin layout is planned for.
+
+    Quantized tiers with rescoring over-fetch (``quant.scan_k``) so the
+    exact second pass can restore the Eq. 13–14 guarantee; everything else
+    plans for the user's k exactly as before.
+    """
+    if spec.rescore_enabled:
+        return quant.scan_k(spec.storage, spec.k, n=n)
+    return spec.k
 
 
 def _layout(
@@ -187,10 +287,20 @@ def _layout(
     n: int,
     d: int,
     spec: SearchSpec,
+    *,
+    scale: Optional[jnp.ndarray] = None,
+    rescore_db: Optional[jnp.ndarray] = None,
+    rescore_bias: Optional[jnp.ndarray] = None,
+    compute_dtype: str = "float32",
 ) -> PackedState:
-    """Lay prepared (rows, bias) out in the backend's native shape."""
+    """Lay prepared (rows, bias) out in the backend's native shape.
+
+    The rescore tail stays in gather layout — (n, d) rows, (n,) bias —
+    on every backend: the second pass reads O(M·L) candidates by index,
+    never a tiled stream, so it has no kernel layout to satisfy.
+    """
     plan = plan_bins(
-        n, spec.k, spec.recall_target,
+        n, scan_k_for(spec, n), spec.recall_target,
         reduction_input_size_override=spec.reduction_input_size_override,
     )
     bin_size = plan.bin_size
@@ -206,13 +316,22 @@ def _layout(
         d_pad = round_up(d, 128)
         rows = jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
         full = jnp.full((n_pad,), MASK_VALUE, jnp.float32).at[:n].set(bias)
+        if scale is not None:
+            # Padded-tail scale is 0: tail scores become 0*dot + MASK.
+            scale = jnp.zeros((n_pad,), jnp.float32).at[:n].set(scale)[None, :]
         return PackedState(
             backend=backend, db=rows, bias=full[None, :], n=n, d=d,
             plan=plan, bin_size=bin_size, block_n=block_n,
+            storage=spec.storage, scale=scale,
+            rescore_db=rescore_db, rescore_bias=rescore_bias,
+            compute_dtype=compute_dtype,
         )
     return PackedState(
         backend=backend, db=rows, bias=bias, n=n, d=d,
         plan=plan, bin_size=bin_size, block_n=0,
+        storage=spec.storage, scale=scale,
+        rescore_db=rescore_db, rescore_bias=rescore_bias,
+        compute_dtype=compute_dtype,
     )
 
 
@@ -241,7 +360,24 @@ def pack_state(
     db = database
     if spec.dtype is not None:
         db = db.astype(jnp.dtype(spec.dtype))
-    db, metric_bias = metric.prepare_database(db)
-    bias = fuse_bias(metric_bias, live, num_rows=n)
+    if spec.storage == "f32":
+        db, metric_bias = metric.prepare_database(db)
+        bias = fuse_bias(metric_bias, live, num_rows=n)
+        PACK_EVENTS["full_pack"] += 1
+        return _layout(backend, db, bias, n, d, spec)
+    # Quantized tier: metric-prepare, quantize, fold the bias correction
+    # (metric bias of the *stored* values) into the fused scan bias, and
+    # optionally keep the full-precision rescore tail with its own fused
+    # (exact-bias + tombstone) row.
+    qr = metric.prepare_storage(db, spec.storage)
+    bias = fuse_bias(qr.bias, live, num_rows=n)
+    rescore_db = rescore_bias = None
+    if spec.rescore_enabled:
+        rescore_db = qr.exact_rows.astype(jnp.float32)
+        rescore_bias = fuse_bias(qr.exact_bias, live, num_rows=n)
     PACK_EVENTS["full_pack"] += 1
-    return _layout(backend, db, bias, n, d, spec)
+    return _layout(
+        backend, qr.rows, bias, n, d, spec,
+        scale=qr.scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
+        compute_dtype=str(db.dtype),
+    )

@@ -58,6 +58,7 @@ from repro.core.roofline import (
     cops_per_dot,
     partial_reduce_cost,
 )
+from repro.search import quant
 from repro.search.spec import SearchSpec
 
 __all__ = [
@@ -211,6 +212,15 @@ class Plan:
     # recall-accounting N override (paper §7); carried so re-plans (growth,
     # shard, explain) keep the same accounting as the packed layout.
     reduction_input_size_override: int = -1
+    # storage tier of the database rows (repro.search.quant): decides the
+    # bytes/row the memory-wall terms above were computed with.
+    storage: str = "f32"
+    # whether the two-pass exact rescore runs (quantized tiers); its
+    # O(M·L·D) cost is included in the prediction when True.
+    rescore: bool = False
+    # the over-fetched k the scan's bin layout was planned for (== k for
+    # the f32 tier; quant.scan_k otherwise).
+    k_scan: int = 0
 
     @property
     def bin_size(self) -> int:
@@ -250,7 +260,11 @@ class Plan:
         """
         base = base or SearchSpec(
             metric=self.metric, k=self.k, recall_target=self.recall_target,
-            backend=self.backend,
+            backend=self.backend, storage=self.storage,
+            # self.rescore is always resolved (never None) and False for
+            # the f32 tier, which SearchSpec accepts — pass it verbatim so
+            # an explicit rescore=False footprint plan stays rescore-off.
+            rescore=self.rescore,
         )
         return dataclasses.replace(
             base,
@@ -276,10 +290,16 @@ def _vmem_budget(hw: Hardware) -> float:
 
 
 def _vmem_need(block_m: int, block_n: int, d_pad: int, dtype_bytes: int,
-               bin_size: int) -> float:
-    """On-chip bytes one (block_m, block_n) grid step holds."""
+               bin_size: int, db_bytes: Optional[int] = None) -> float:
+    """On-chip bytes one (block_m, block_n) grid step holds.
+
+    ``db_bytes`` is the stored database tile's bytes/element (quantized
+    tiers stream and hold narrower rows); default: ``dtype_bytes``.
+    """
+    if db_bytes is None:
+        db_bytes = dtype_bytes
     return (
-        d_pad * (block_m + block_n) * dtype_bytes   # operand tiles
+        d_pad * (block_m * dtype_bytes + block_n * db_bytes)  # operand tiles
         + block_m * block_n * 4                     # score tile (f32)
         + 2 * block_m * max(1, block_n // bin_size) * 4  # winners (val+idx)
     )
@@ -295,6 +315,7 @@ def _plan_tiles(
     *,
     block_m: Optional[int] = None,
     max_block_n: Optional[int] = None,
+    db_bytes: Optional[int] = None,
 ) -> Tuple[int, int]:
     """Initial kernel tile sizes from the on-chip memory model.
 
@@ -306,6 +327,8 @@ def _plan_tiles(
     full default tile.  ``block_m`` may subsequently be *escalated* by
     :func:`plan_search` to push the kernel off the memory wall (Eq. 10).
     """
+    if db_bytes is None:
+        db_bytes = dtype_bytes
     sublane = _SUBLANE.get(dtype_bytes, 8)
     if block_m is None:
         block_m = DEFAULT_BLOCK_M if m is None else min(
@@ -320,16 +343,17 @@ def _plan_tiles(
 
     budget = _vmem_budget(hw)
     # block_n must be a multiple of the bin size (the kernel's
-    # (bm, bn) -> (bm, bins, bin_size) reshape) AND of the dtype's sublane
-    # count (TPU second-to-minor tiling); both are powers of two, so their
-    # lcm is the max.
-    unit = max(bin_size, sublane)
+    # (bm, bn) -> (bm, bins, bin_size) reshape) AND of the *stored*
+    # dtype's sublane count (TPU second-to-minor tiling; int8 rows tile at
+    # 32 sublanes); both are powers of two, so their lcm is the max.
+    db_sublane = _SUBLANE.get(db_bytes, 8)
+    unit = max(bin_size, db_sublane)
     n_aligned = round_up(n, unit)
     g_data = max(1, n_aligned // unit)
     g_anchor = max(1, DEFAULT_BLOCK_N // unit)
     g = min(g_data, g_anchor)
     while g > 1 and _vmem_need(
-        block_m, g * unit, d_pad, dtype_bytes, bin_size
+        block_m, g * unit, d_pad, dtype_bytes, bin_size, db_bytes
     ) > budget:
         g -= 1
     return block_m, g * unit
@@ -346,6 +370,7 @@ def _escalate_block_m(
     dtype_bytes: int,
     bin_size: int,
     hw: Hardware,
+    db_bytes: Optional[int] = None,
 ) -> int:
     """Grow the query tile until the memory wall clears the other walls.
 
@@ -362,21 +387,22 @@ def _escalate_block_m(
         cost = partial_reduce_cost(
             m_eff, padded_n, d_pad, num_bins,
             cops_per_dot=c, block_rows=block_m, dtype_bytes=dtype_bytes,
+            db_bytes=db_bytes,
         )
         memory_wall = hw.hbm_bandwidth * cost.i_mem
         other_walls = min(hw.peak_flops, hw.peak_cops * cost.i_cop)
         if memory_wall >= other_walls:
             break
         bigger = min(cap, block_m * 2)
-        if _vmem_need(bigger, block_n, d_pad, dtype_bytes, bin_size) \
-                > _vmem_budget(hw):
+        if _vmem_need(bigger, block_n, d_pad, dtype_bytes, bin_size,
+                      db_bytes) > _vmem_budget(hw):
             break
         block_m = bigger
     return block_m
 
 
-def _dense_cost(m: int, n: int, d: int, l: int, dtype_bytes: int
-                ) -> KernelCost:
+def _dense_cost(m: int, n: int, d: int, l: int, dtype_bytes: int,
+                db_bytes: Optional[int] = None) -> KernelCost:
     """Cost of the *unfused* dense path (Remark 1 / Level-3 BLAS shape).
 
     ``dense_search`` materializes the full (M, N) f32 score matrix in HBM
@@ -384,10 +410,33 @@ def _dense_cost(m: int, n: int, d: int, l: int, dtype_bytes: int
     its model is operand reads + score write/read + bin winners, not the
     fused kernel's Eq. 20.  This is what makes the dense baseline
     memory-bound at paper scale, i.e. why the fused kernel exists.
+    ``db_bytes`` prices the (N, D) operand read at the storage tier's
+    bytes/element; the f32 score matrix dominates here regardless, which
+    is why quantized tiers pay off most on the fused kernel.
     """
+    if db_bytes is None:
+        db_bytes = dtype_bytes
     flops = 2.0 * m * n * d
-    hbm = dtype_bytes * (m * d + n * d) + 4.0 * (2.0 * m * n + 2.0 * m * l)
+    hbm = (
+        dtype_bytes * m * d + db_bytes * n * d
+        + 4.0 * (2.0 * m * n + 2.0 * m * l)
+    )
     cops = float(m) * n  # the reduction's compare chain
+    return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
+def _rescore_cost(m: int, l: int, k_scan: int, d: int) -> KernelCost:
+    """Added cost of the exact second pass (quantized tiers).
+
+    The L bin winners are first cut to the ``k_scan`` best by quantized
+    score (a compare chain over L, no HBM gather), then only those
+    O(M·K') rows are gathered at full precision and re-scored — so the
+    second pass stays O(M), inside Eq. 10's O(min(M, N)) budget, and its
+    gather traffic scales with the over-fetch budget, not the bin count.
+    """
+    flops = 2.0 * m * k_scan * d
+    hbm = 4.0 * (m * k_scan * d + 3.0 * m * k_scan)  # rows + bias/vals/idxs
+    cops = float(m) * (l + k_scan)  # the cut + the exact compare chain
     return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
 
 
@@ -461,6 +510,8 @@ def plan_search(
     block_m: Optional[int] = None,
     max_block_n: Optional[int] = None,
     query_block: Optional[int] = None,
+    storage: str = "f32",
+    rescore: Optional[bool] = None,
 ) -> Plan:
     """Derive every kernel parameter analytically (Eq. 4–10 + Eq. 13–14).
 
@@ -475,10 +526,23 @@ def plan_search(
     pinned layout*, and ``source`` reports ``"user"`` if every knob was
     pinned).
 
+    ``storage`` is the database's ``repro.search.quant`` tier: it sets the
+    bytes/row of the Eq. 10/20 database-stream term (so the memory-wall
+    escalation and roofline predictions shift with 2- or 1-byte rows), the
+    stored-dtype sublane alignment of ``block_n``, and — when ``rescore``
+    (default: on for quantized tiers) — the over-fetched scan k
+    (``quant.scan_k``) plus the exact second pass's O(M·L·D) cost.
+
     >>> plan_search(n=100, d=8, k=1, device="tpu_v4").num_bins >= 1
     True
     >>> plan_search(n=64, d=7, k=4, device="cpu").d_pad
     128
+    >>> p8 = plan_search(n=1 << 20, d=128, k=10, m=256, backend="pallas",
+    ...                  device="tpu_v4", storage="int8")
+    >>> pf = plan_search(n=1 << 20, d=128, k=10, m=256, backend="pallas",
+    ...                  device="tpu_v4")
+    >>> p8.hbm_bytes < 0.5 * pf.hbm_bytes  # >=2x less traffic (Eq. 10)
+    True
     """
     if n <= 0 or d <= 0:
         raise ValueError(f"need positive n, d; got n={n}, d={d}")
@@ -488,15 +552,26 @@ def plan_search(
     hw = HARDWARE[device]
     dtype_name = str(dtype) if dtype is not None else "float32"
     dbytes = _dtype_bytes(dtype)
+    # storage="f32" means "store the compute dtype as-is" (pack_state casts
+    # to spec.dtype before preparing), so its rows stream at dbytes; the
+    # quantized tiers stream their own narrower width.
+    sbytes = dbytes if storage == "f32" else quant.storage_bytes(storage)
+    if rescore and storage == "f32":
+        raise ValueError(
+            'rescore=True requires a quantized storage tier ("bf16" or '
+            '"int8"); storage="f32" is already exact'
+        )
+    rescore_on = (storage != "f32") if rescore is None else rescore
+    ks = quant.scan_k(storage, k, n=n) if rescore_on else k
 
     bins = plan_bins(
-        n, k, recall_target,
+        n, ks, recall_target,
         reduction_input_size_override=reduction_input_size_override,
     )
     d_pad = round_up(d, 128)
     bm, bn = _plan_tiles(
         n, d_pad, bins.bin_size, m, dbytes, hw,
-        block_m=block_m, max_block_n=max_block_n,
+        block_m=block_m, max_block_n=max_block_n, db_bytes=sbytes,
     )
     qb = query_block or _plan_query_block(n, backend)
 
@@ -518,16 +593,24 @@ def plan_search(
         if block_m is None:
             bm = _escalate_block_m(
                 bm, bn, m_eff, bins.padded_n, d_pad, bins.num_bins, c,
-                dbytes, bins.bin_size, hw,
+                dbytes, bins.bin_size, hw, db_bytes=sbytes,
             )
         cost = partial_reduce_cost(
             m_eff, bins.padded_n, d_pad, bins.num_bins,
             cops_per_dot=c, block_rows=bm, dtype_bytes=dbytes,
+            db_bytes=sbytes,
         )
     else:
         # The dense xla path (and each sharded shard) runs the *unpadded*
         # operands unfused — model the program that actually executes.
-        cost = _dense_cost(m_eff, n, d, bins.num_bins, dbytes)
+        cost = _dense_cost(m_eff, n, d, bins.num_bins, dbytes, sbytes)
+    if rescore_on:
+        extra = _rescore_cost(m_eff, bins.num_bins, ks, d)
+        cost = KernelCost(
+            flops=cost.flops + extra.flops,
+            hbm_bytes=cost.hbm_bytes + extra.hbm_bytes,
+            cops=cost.cops + extra.cops,
+        )
     att = attainable_flops(cost, hw)
     predicted_s = cost.flops / att
     pinned = all(v is not None for v in (block_m, max_block_n, query_block))
@@ -544,6 +627,7 @@ def plan_search(
         predicted_s=predicted_s, predicted_qps=m_eff / predicted_s,
         source="user" if pinned else "model",
         reduction_input_size_override=reduction_input_size_override,
+        storage=storage, rescore=rescore_on, k_scan=ks,
     )
 
 
@@ -584,6 +668,7 @@ def _with_measured_tiles(plan: Plan, bm: int, bn: int, qb: int) -> Plan:
         backend=plan.backend, device=plan.device,
         reduction_input_size_override=plan.reduction_input_size_override,
         block_m=bm, max_block_n=bn, query_block=qb,
+        storage=plan.storage, rescore=plan.rescore,
     )
     return dataclasses.replace(refreshed, source="measure")
 
@@ -614,6 +699,10 @@ class PlanCache:
             f"{plan.device}/{plan.backend}/{plan.metric}/{plan.dtype}"
             f"/m{plan.m}/n{plan.n}/d{plan.d}/k{plan.k}/r{plan.recall_target}"
         )
+        if plan.storage != "f32":
+            # Tiers tile and cost differently; never serve a measured f32
+            # layout to a quantized build (or vice versa).
+            base += f"/st-{plan.storage}" + ("" if plan.rescore else "-raw")
         if spec is not None and not (
             spec.block_m is None
             and spec.max_block_n is None
@@ -652,7 +741,14 @@ def _tile_candidates(plan: Plan, spec: Optional[SearchSpec] = None) -> list:
     only ``query_block`` varies.
     """
     sublane = _SUBLANE.get(_dtype_bytes(plan.dtype), 8)
-    unit = max(plan.bin_size, sublane)  # bin-size AND sublane alignment
+    # the database tile is stored-dtype (int8 tiles at 32 sublanes); the
+    # query tile (block_m) follows the compute dtype — same split as
+    # _plan_tiles, or the sweep would propose Mosaic-mistiled candidates.
+    sbytes = (
+        _dtype_bytes(plan.dtype) if plan.storage == "f32"
+        else quant.storage_bytes(plan.storage)
+    )
+    unit = max(plan.bin_size, _SUBLANE.get(sbytes, 8))
     n_aligned = round_up(plan.n, unit)
 
     def clamp_bm(v):
@@ -718,7 +814,7 @@ def tune_plan(
     base_spec = spec if spec is not None else SearchSpec(
         metric=plan.metric, k=plan.k, recall_target=plan.recall_target,
         backend=plan.backend, dtype=None if plan.dtype == "float32"
-        else plan.dtype,
+        else plan.dtype, storage=plan.storage, rescore=plan.rescore,
     )
     hit = cache.get(plan, spec)
     if hit is not None:

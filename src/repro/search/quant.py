@@ -1,0 +1,219 @@
+"""Quantized storage tiers: bf16/int8 packed databases with exact rescoring.
+
+The paper's Eq. 10 memory-wall analysis makes per-search cost proportional
+to the bytes streamed for the (N, D) database — which means bytes-per-row
+directly sets where the roofline knee lands.  This module owns the
+``storage`` tier of the search stack:
+
+  * ``"f32"``  — 4 bytes/element, today's exact path (the default; packed
+    state, kernels and planner behave bit-identically to before this
+    subsystem existed).
+  * ``"bf16"`` — 2 bytes/element.  The scan matmul consumes the bf16 rows
+    directly (f32 accumulation), halving database HBM traffic.
+  * ``"int8"`` — 1 byte/element with a per-row symmetric scale
+    (``row ≈ scale * int8``), quartering database HBM traffic.
+
+Quantized tiers run a **two-pass search** mirroring the paper's
+score/rescore split: PartialReduce scans the quantized database over all N
+rows to produce an *over-fetched* candidate set (see :func:`scan_k`), then
+``core.rescoring`` re-scores only those candidates against a full-precision
+rescore tail — O(M·L·D) exact work, within Eq. 10's O(min(M, N)) budget.
+
+Over-fetch derivation (why the Eq. 13–14 guarantee survives quantization)
+-------------------------------------------------------------------------
+
+With exact scores, a true top-K entry is lost only when a *better* top-K
+entry shares its bin — the ball-in-bins argument behind
+``E[recall] = ((L-1)/L)^(K-1)`` (Eq. 13).  With quantized scan scores, a
+top-K entry can additionally lose its bin to a truly-worse row that
+quantization *promotes* past it; that requires the rival's true score to
+lie within the quantization band ``2·eps`` of the entry's.  Budget at most
+``T`` such in-band rivals per top-K entry and treat each, conservatively,
+exactly like a truly-better entry in the bin argument: the scan's candidate
+set then contains the true top-K with
+
+    E[recall_scan] >= ((L-1)/L)^(K+T-1)
+
+so planning the bins for an **effective K' = K + T at the original recall
+target** (and rescoring the L winners exactly) preserves the guarantee in
+expectation.  The per-tier confusion budgets
+
+    T(bf16) = ceil(K/2)        T(int8) = K
+
+follow from the tiers' relative score-error bounds (bf16 keeps an 8-bit
+mantissa, relative error ~2^-8; per-row symmetric int8 bounds the per-entry
+error at ``scale/2`` with ``scale = max|row|/127``, a ~0.4 % relative score
+error for well-conditioned rows) under a bounded near-tie density — they
+are deliberately conservative, and ``tests/test_recall_guarantee.py``
+validates the end-to-end recall empirically with a Hoeffding margin.
+
+Nothing here imports the rest of ``repro.search`` — the metric registry,
+packed state, planner and backends all build *on* these primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "STORAGE_TIERS",
+    "QuantizedRows",
+    "check_metric_storage",
+    "dequantize_rows",
+    "is_quantized",
+    "quantize_rows",
+    "scan_k",
+    "storage_bytes",
+    "storage_dtype",
+]
+
+# The legal ``SearchSpec.storage`` values, in decreasing bytes/element.
+STORAGE_TIERS: Tuple[str, ...] = ("f32", "bf16", "int8")
+
+_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+# Smallest representable per-row scale: keeps all-zero rows quantizing to
+# zeros instead of dividing by zero.
+_SCALE_FLOOR = 1e-30
+
+_INT8_MAX = 127.0
+
+
+def is_quantized(storage: str) -> bool:
+    """True for tiers that store fewer than 4 bytes per element."""
+    return storage_bytes(storage) < 4
+
+
+def storage_bytes(storage: str) -> int:
+    """Bytes per stored database element for a tier.
+
+    >>> [storage_bytes(s) for s in STORAGE_TIERS]
+    [4, 2, 1]
+    """
+    try:
+        return _BYTES[storage]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage tier {storage!r}; expected one of "
+            f"{STORAGE_TIERS}"
+        ) from None
+
+
+def storage_dtype(storage: str):
+    """The jnp dtype rows of a tier are stored in."""
+    storage_bytes(storage)  # validate
+    return _DTYPES[storage]
+
+
+def quantize_rows(
+    rows: jnp.ndarray, storage: str
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Quantize metric-prepared f32 rows into a tier's stored form.
+
+    Returns ``(stored, scale)`` where ``scale`` is the per-row symmetric
+    scale for int8 (``rows ≈ stored * scale[:, None]``) and ``None`` for
+    the other tiers.  Pure per-row math — the property ``Index.add``
+    exploits to quantize only the appended slice.
+
+    >>> import jax.numpy as jnp
+    >>> q, s = quantize_rows(jnp.ones((2, 3)), "int8")
+    >>> (q.dtype.name, s.shape)
+    ('int8', (2,))
+    """
+    rows = rows.astype(jnp.float32)
+    if storage == "f32":
+        return rows, None
+    if storage == "bf16":
+        return rows.astype(jnp.bfloat16), None
+    if storage == "int8":
+        amax = jnp.max(jnp.abs(rows), axis=-1)
+        scale = jnp.maximum(amax / _INT8_MAX, _SCALE_FLOOR)
+        q = jnp.clip(
+            jnp.round(rows / scale[:, None]), -_INT8_MAX, _INT8_MAX
+        ).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+    raise ValueError(
+        f"unknown storage tier {storage!r}; expected one of {STORAGE_TIERS}"
+    )
+
+
+def dequantize_rows(
+    stored: jnp.ndarray, scale: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """f32 view of stored rows — the values the quantized scan *actually*
+    ranks by, used to fold the metric-bias correction into the bias row."""
+    rows = stored.astype(jnp.float32)
+    if scale is not None:
+        rows = rows * scale[:, None]
+    return rows
+
+
+def scan_k(storage: str, k: int, *, n: Optional[int] = None) -> int:
+    """Effective neighbour count the quantized scan plans its bins for.
+
+    Implements the over-fetch derivation in the module docstring:
+    ``K' = K + T`` with the tier's confusion budget ``T``.  ``n`` clamps
+    the result to the database size (``plan_bins`` requires ``k <= n``).
+
+    >>> scan_k("f32", 10), scan_k("bf16", 10), scan_k("int8", 10)
+    (10, 15, 20)
+    """
+    if k <= 0:
+        raise ValueError(f"k must be positive, got {k}")
+    if storage == "bf16":
+        k = k + math.ceil(k / 2)
+    elif storage == "int8":
+        k = 2 * k
+    else:
+        storage_bytes(storage)  # validate the tier name
+    if n is not None:
+        k = min(k, n)
+    return k
+
+
+def check_metric_storage(metric, storage: str) -> None:
+    """Reject unsupported metric × storage combinations, actionably.
+
+    ``metric`` is a ``repro.search.metrics.Metric`` (duck-typed here to
+    keep this module import-free).  Metrics declare the tiers their
+    prepared rows survive in ``Metric.storage_tiers``; e.g. a raw cosine
+    variant whose ``prepare_database`` does *not* normalize rows should
+    exclude ``"int8"`` — per-row scales cannot bound its score error, and
+    the failure would otherwise surface as a cryptic kernel-level error.
+    """
+    storage_bytes(storage)  # validate the tier name first
+    tiers = getattr(metric, "storage_tiers", STORAGE_TIERS)
+    if storage not in tiers:
+        raise ValueError(
+            f"metric {metric.name!r} does not support storage="
+            f"{storage!r} (supported tiers: {tuple(tiers)}).  Either pick "
+            "a supported tier, or register the metric with a "
+            "quantization-compatible preparation (normalized/bounded rows) "
+            "and declare it via Metric(storage_tiers=...)."
+        )
+
+
+@dataclasses.dataclass
+class QuantizedRows:
+    """One metric-prepared, tier-quantized row slice (build or ``add``).
+
+    Attributes:
+      rows: stored-dtype rows (what the scan matmul consumes).
+      scale: per-row f32 scale (int8 tier) or None.
+      bias: metric bias *of the stored values* (the metric-bias correction
+        folded into the fused bias row, so quantized scan scores are
+        internally consistent), or None.
+      exact_rows: full-precision metric-prepared rows — the rescore tail.
+      exact_bias: metric bias of ``exact_rows`` (what the rescore pass and
+        the f32 path use), or None.
+    """
+
+    rows: jnp.ndarray
+    scale: Optional[jnp.ndarray]
+    bias: Optional[jnp.ndarray]
+    exact_rows: jnp.ndarray
+    exact_bias: Optional[jnp.ndarray]

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.search import quant
+
 __all__ = ["BACKENDS", "SearchSpec"]
 
 BACKENDS = ("auto", "xla", "pallas", "sharded")
@@ -29,6 +31,20 @@ class SearchSpec:
         else xla), or an explicit "xla" | "pallas" | "sharded".
       dtype: optional compute dtype name (e.g. "bfloat16") the operands are
         cast to before the distance matmul; None inherits the input dtype.
+      storage: database storage tier — "f32" (exact, the default), "bf16"
+        or "int8" (``repro.search.quant``).  Quantized tiers store the
+        metric-prepared database at 2 or 1 bytes/element (per-row scale for
+        int8), scan it over all N rows, and exactly rescore an over-fetched
+        candidate set against a full-precision tail, so the Eq. 13–14
+        recall guarantee holds in expectation while database HBM traffic
+        drops 2–4x (Eq. 10/20).  ``"f32"`` is bit-identical to the
+        pre-quantization path.
+      rescore: run the exact second pass on quantized tiers.  ``None``
+        (default) resolves to True whenever ``storage != "f32"`` and
+        ``aggregate_to_topk`` holds; False skips the f32 rescore tail
+        (lower footprint, approximate values, no over-fetch).  True is
+        invalid for f32 storage (nothing to rescore) and with
+        ``aggregate_to_topk=False`` (the raw bin winners are the output).
       block_m / max_block_n: Pallas tile sizes (queries resident per grid
         step / upper bound on the database tile, rounded to the bin size).
         ``None`` (the default) defers the choice to the kernel planner
@@ -74,6 +90,8 @@ class SearchSpec:
     recall_target: float = 0.95
     backend: str = "auto"
     dtype: Optional[str] = None
+    storage: str = "f32"
+    rescore: Optional[bool] = None
     block_m: Optional[int] = None
     max_block_n: Optional[int] = None
     query_block: Optional[int] = None
@@ -94,6 +112,28 @@ class SearchSpec:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
             )
+        quant.storage_bytes(self.storage)  # validate the tier name
+        if self.rescore and self.storage == "f32":
+            raise ValueError(
+                "rescore=True requires a quantized storage tier "
+                '("bf16" or "int8"); storage="f32" is already exact'
+            )
+        if self.rescore and not self.aggregate_to_topk:
+            raise ValueError(
+                "rescore=True needs aggregate_to_topk=True: with "
+                "aggregate_to_topk=False the raw bin winners are the "
+                "output, so there is no top-k to rescore into.  Use "
+                "rescore=False for a raw quantized scan."
+            )
+        if self.storage != "f32":
+            # Metric x storage compatibility, checked here when the metric
+            # is already registered (Index.build re-checks eagerly so
+            # late-registered metrics are covered too).
+            from repro.search.metrics import _REGISTRY
+
+            m = _REGISTRY.get(self.metric)
+            if m is not None:
+                quant.check_metric_storage(m, self.storage)
         for field in ("block_m", "max_block_n", "query_block"):
             v = getattr(self, field)
             if v is not None and v <= 0:
@@ -113,6 +153,19 @@ class SearchSpec:
         # Metric existence is validated lazily by the registry (metrics.py)
         # so user-registered metrics can be referenced before import order
         # would otherwise allow.
+
+    @property
+    def rescore_enabled(self) -> bool:
+        """Whether the two-pass quantized search runs its exact rescore.
+
+        >>> SearchSpec(storage="int8").rescore_enabled
+        True
+        >>> SearchSpec(storage="f32").rescore_enabled
+        False
+        """
+        if self.storage == "f32" or not self.aggregate_to_topk:
+            return False
+        return True if self.rescore is None else self.rescore
 
     @property
     def resolved(self) -> bool:

@@ -83,6 +83,26 @@ def test_packed_pallas_program_never_pads_database(data):
     )
 
 
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_quantized_pallas_program_never_pads_database(data, storage):
+    """The PR-2 traffic contract extends to quantized tiers: the compiled
+    two-pass program pads only query-sized arrays — the quantized scan
+    consumes pre-packed operands and the rescore pass is an O(M·K')
+    gather, so nothing database-sized is padded (or materialized) per
+    dispatch."""
+    q, db = data
+    index = Index.build(db, metric="l2", k=K, backend="pallas",
+                        storage=storage)
+    pk = index.pack()
+    fn = index._build_block_fn("pallas", pk)
+    pads = _pad_shapes(jax.make_jaxpr(fn)(q, *pk.operands()).jaxpr)
+    db_elems = pk.db.shape[0] * pk.db.shape[1]
+    assert pads, "query padding should still appear (sanity)"
+    assert all(int(np.prod(s)) < db_elems for s in pads), (
+        f"database-sized pad in the quantized search program: {pads}"
+    )
+
+
 def test_legacy_oneshot_path_does_pad_database(data):
     """Sensitivity check: the same probe flags the pack-inside-jit path,
     so a silent Index regression onto it cannot pass the test above."""
@@ -114,6 +134,56 @@ def test_steady_state_repeat_search_does_no_database_work(data, backend):
     assert not dict(TRACE_COUNTS), "repeat search retraced"
     info = index.cache_info()
     assert info["hits"] == 5 and info["misses"] == 0
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_quantized_steady_state_keeps_traffic_contract(data, backend, storage):
+    """Zero repacks, zero retraces, cache hits only on quantized tiers —
+    scale/rescore operands are passed per dispatch, never re-derived."""
+    q, db = data
+    index = Index.build(db, metric="l2", k=K, backend=backend,
+                        storage=storage)
+    index.search(q)  # warmup: trace + compile once
+    backends.reset_trace_counts()
+    reset_pack_events()
+    index._cache.reset_counters()
+    for _ in range(5):
+        index.search(q)
+    assert not dict(PACK_EVENTS), "quantized repeat search repacked"
+    assert not dict(TRACE_COUNTS), "quantized repeat search retraced"
+    info = index.cache_info()
+    assert info["hits"] == 5 and info["misses"] == 0
+
+
+def test_quantized_multi_block_batch_is_one_dispatch(data):
+    _, db = data
+    qb = 16
+    index = Index.build(db, k=K, backend="xla", storage="int8",
+                        query_block=qb)
+    big = jax.random.normal(jax.random.PRNGKey(3), (8 * qb, 32))
+    index.search(big)  # warmup
+    backends.reset_dispatch_counts()
+    index._cache.reset_counters()
+    index.search(big)
+    assert DISPATCH_COUNTS["xla"] == 1, "quantized 8-block batch >1 dispatch"
+    assert index.cache_info()["hits"] == 1
+
+
+def test_quantized_mutations_stay_incremental(data):
+    """add/delete on a quantized tier patch the packed state in place —
+    same PACK_EVENTS taxonomy as f32, no hidden full packs."""
+    _, db = data
+    index = Index.build(db[:2048], metric="l2", k=K, backend="xla",
+                        storage="int8", capacity=4096)
+    reset_pack_events()
+    index.add(db[2048:])
+    assert dict(PACK_EVENTS) == {"rows_updated": 1}
+    reset_pack_events()
+    index.delete([1, 2, 3])
+    assert dict(PACK_EVENTS) == {"bias_patched": 1}
+    # live count stays a lazy device scalar (no host sync on delete)
+    assert not isinstance(index._num_live, int)
 
 
 def test_multi_block_batch_is_one_dispatch(data):

@@ -253,6 +253,116 @@ def test_tail_mask_never_leaks_padded_rows(seed, n, k, n_delete):
     )
 
 
+# --- quantized tiers: incremental patches == from-scratch pack ---------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    metric=st.sampled_from(METRICS),
+    storage=st.sampled_from(("bf16", "int8")),
+    seed=st.integers(min_value=0, max_value=2**16),
+    n_ops=st.integers(min_value=1, max_value=10),
+)
+def test_quantized_state_matches_reference_under_interleaving(
+    metric, storage, seed, n_ops
+):
+    """quantize -> prepare_update consistency: after ANY add/delete
+    interleaving (growth included) the quantized rows, int8 scales, scan
+    bias (with its stored-value bias correction) and f32 rescore tail all
+    equal a from-scratch ``pack_state`` of the same rows + live mask."""
+    from repro.search.packed import pack_state
+    from repro.search.spec import SearchSpec
+
+    rng = np.random.default_rng(seed)
+    pool = _db(seed, 160)
+    n0 = int(rng.integers(8, 48))
+    index = Index.build(
+        pool[:n0], metric=metric, k=4, backend="xla", storage=storage,
+        capacity_block=32,
+    )
+    ref_rows, ref_live = _apply_random_ops(index, pool, rng, n_ops)
+
+    pk = index.pack()
+    n_written = ref_rows.shape[0]
+    cap = index.capacity
+    ref_padded = jnp.zeros((cap, D)).at[:n_written].set(ref_rows)
+    ref_live_padded = (
+        jnp.zeros((cap,), bool).at[:n_written].set(jnp.asarray(ref_live))
+    )
+    want = pack_state(
+        ref_padded, ref_live_padded, get_metric(metric), index.spec, "xla"
+    )
+    np.testing.assert_array_equal(np.asarray(pk.db), np.asarray(want.db))
+    np.testing.assert_array_equal(
+        np.asarray(pk.bias), np.asarray(want.bias)
+    )
+    if storage == "int8":
+        # dead capacity past the high-water mark is bias-masked, so its
+        # scale is arbitrary (growth pads 0, a fresh pack floors it) —
+        # the written region must agree exactly.
+        np.testing.assert_array_equal(
+            np.asarray(pk.scale_row()[:n_written]),
+            np.asarray(want.scale_row()[:n_written]),
+        )
+    np.testing.assert_allclose(
+        np.asarray(pk.rescore_db), np.asarray(want.rescore_db), rtol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk.rescore_bias), np.asarray(want.rescore_bias)
+    )
+    assert index.size == int(ref_live.sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    n=st.integers(min_value=33, max_value=203),
+    k=st.integers(min_value=1, max_value=16),
+    n_delete=st.integers(min_value=0, max_value=24),
+)
+def test_rescore_tail_never_leaks_tombstoned_rows(seed, n, k, n_delete):
+    """The exact rescore pass recomputes true scores from the f32 tail —
+    without its own tombstone mask it would resurrect deleted rows with
+    *winning* scores.  Same adversarial grid as the f32 tail-mask test,
+    on the quantized pallas layout."""
+    k = min(k, max(1, n - n_delete - 1))
+    db = _db(seed, n)
+    index = Index.build(db, metric="mips", k=k, backend="pallas",
+                        storage="int8")
+    rng = np.random.default_rng(seed)
+    dead = (
+        np.unique(rng.integers(0, n, size=n_delete)) if n_delete else
+        np.asarray([], np.int64)
+    )
+    if dead.size:
+        index.delete(dead.tolist())
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, D))
+    _, idxs = index.search(q)
+    got = np.asarray(idxs)
+    assert got.min() >= 0
+    assert got.max() < n, (
+        f"padded row index {got.max()} >= n={n} leaked into quantized top-k"
+    )
+    assert not (set(got.ravel().tolist()) & set(dead.tolist())), (
+        "tombstoned row resurrected by the rescore tail"
+    )
+
+
+def test_quantized_mass_delete_returns_only_sentinels():
+    db = _db(11, 40)
+    index = Index.build(db, metric="l2", k=4, backend="xla", storage="int8")
+    index.delete(list(range(40)))
+    assert index.size == 0
+    vals, idxs = index.search(
+        jax.random.normal(jax.random.PRNGKey(9), (4, D))
+    )
+    from repro.search.backends import MASK_VALUE
+
+    # L2 negates at the boundary: masked scores surface as -MASK_VALUE
+    assert (np.asarray(vals) >= -MASK_VALUE).all()
+    assert int(np.asarray(idxs).max()) < 40
+
+
 def test_fallback_grid_is_active_without_hypothesis():
     """Make the fallback visible in test output: exactly one of the two
     modes is in effect, and the strategies sample real values either way."""

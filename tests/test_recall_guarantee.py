@@ -44,11 +44,14 @@ def _hoeffding_eps(n_samples: int, delta: float = DELTA) -> float:
     return math.sqrt(math.log(1.0 / delta) / (2.0 * n_samples))
 
 
-def _recall_samples(metric, backend, k, recall_target, *, trials, m, seed=0):
+def _recall_samples(metric, backend, k, recall_target, *, trials, m, seed=0,
+                    storage="f32"):
     """Per-query recall samples over ``trials`` fresh (db, queries) draws.
 
     Returns (samples, expected_recall) where ``expected_recall`` is the
-    planner's analytic Eq. 13 value for the layout it chose.
+    planner's analytic Eq. 13 value for the layout it chose (for quantized
+    ``storage`` tiers: the over-fetched ``((L-1)/L)^(K'-1)`` bound the
+    two-pass guarantee rests on).
     """
     samples = []
     expected = None
@@ -59,7 +62,7 @@ def _recall_samples(metric, backend, k, recall_target, *, trials, m, seed=0):
         q = jax.random.normal(kq, (m, D))
         index = Index.build(
             db, metric=metric, k=k, recall_target=recall_target,
-            backend=backend,
+            backend=backend, storage=storage,
         )
         assert index.kernel_plan.source == "model"  # the default config
         # Eq. 14: the planner's layout must meet the target analytically.
@@ -110,6 +113,45 @@ def test_recall_meets_target_in_expectation(
     assert mean >= expected - eps, (
         f"{metric}/{backend} k={k}: empirical recall {mean:.4f} vs "
         f"analytic E[recall] {expected:.4f} (margin {eps:.4f})"
+    )
+
+
+# Quantized storage tiers (repro.search.quant): the scan ranks by reduced-
+# precision scores, the bins are over-fetched (quant.scan_k) and an exact
+# second pass rescores — the SAME Eq. 13–14 guarantee must hold at the
+# user's k within the same Hoeffding margin.  Corners span tier x metric x
+# backend; pallas again with a smaller budget (interpret mode).
+QUANT_CORNERS = [
+    ("mips", "xla", "bf16", 10, 0.95, 4, 256),
+    ("l2", "xla", "int8", 10, 0.95, 4, 256),
+    ("cosine", "xla", "int8", 4, 0.99, 4, 256),
+    ("l2", "pallas", "bf16", 16, 0.90, 2, 128),
+    ("mips", "pallas", "int8", 8, 0.90, 2, 128),
+]
+
+
+@pytest.mark.parametrize(
+    "metric,backend,storage,k,recall_target,trials,m", QUANT_CORNERS
+)
+def test_recall_meets_target_quantized(
+    metric, backend, storage, k, recall_target, trials, m
+):
+    samples, expected = _recall_samples(
+        metric, backend, k, recall_target, trials=trials, m=m, seed=3,
+        storage=storage,
+    )
+    eps = _hoeffding_eps(len(samples))
+    mean = float(samples.mean())
+    assert mean >= recall_target - eps, (
+        f"{metric}/{backend}/{storage} k={k}: quantized recall {mean:.4f} "
+        f"below target {recall_target} beyond the {eps:.4f} margin over "
+        f"{len(samples)} samples — the over-fetch/rescore guarantee broke"
+    )
+    # the over-fetched layout's own (conservative) Eq. 13 expectation
+    assert expected >= recall_target
+    assert mean >= expected - eps, (
+        f"{metric}/{backend}/{storage} k={k}: {mean:.4f} vs over-fetched "
+        f"E[recall] {expected:.4f} (margin {eps:.4f})"
     )
 
 
