@@ -34,8 +34,10 @@ import platform
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.search import Index, SearchSpec, backends
+from repro.search import Index, SearchSpec, backends, exact_search
 from repro.search import plan as planlib
 from repro.search.packed import PACK_EVENTS, reset_pack_events
 
@@ -228,6 +230,85 @@ def bench_quant(backend, metric, m, n, d, query_block, repeats, emit):
     return row
 
 
+# Cluster-pruned front-end config: N must sit well above the planner's
+# crossover, and the corpus must be CLUSTERABLE (mixture of Gaussians,
+# queries from the same component centers) — on i.i.d. Gaussian data no
+# coarse quantizer can prune without large misses, so benchmarking the
+# pruned path there would measure the wrong regime.  recall is measured
+# against the exact baseline, not the dense approximate path.
+CLUSTER_M, CLUSTER_N, CLUSTER_D = 256, 32768, 32
+CLUSTER_TARGET = 0.90
+CLUSTER_COMPONENTS = 64
+
+
+def _mixture_corpus(m, n, d, seed=7):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(CLUSTER_COMPONENTS, d)) * 3.0
+    db = centers[rng.integers(0, CLUSTER_COMPONENTS, n)] \
+        + rng.normal(size=(n, d))
+    q = centers[rng.integers(0, CLUSTER_COMPONENTS, m)] \
+        + rng.normal(size=(m, d))
+    return jnp.asarray(db, jnp.float32), jnp.asarray(q, jnp.float32)
+
+
+def bench_cluster(backend, metric, m, n, d, query_block, repeats, emit):
+    """Cluster-pruned scan vs the dense scan at large N.
+
+    Reports steady-state QPS for ``cluster="auto"`` (planner-enabled
+    pruning) vs ``cluster="off"``, measured recall of BOTH against the
+    exact baseline, the scanned-row fraction, and the one-dispatch /
+    zero-retrace contract counters on the clustered path.
+    """
+    db, queries = _mixture_corpus(m, n, d)
+    _, exact_idx = exact_search(queries, db, 10, metric=metric)
+    exact_sets = [set(r.tolist()) for r in jax.device_get(exact_idx)]
+    row = {
+        "backend": backend, "metric": metric,
+        "m": m, "n": n, "d": d, "query_block": query_block,
+        "recall_target": CLUSTER_TARGET, "modes": {},
+    }
+    for mode in ("auto", "off"):
+        index = Index.build(
+            db,
+            spec=SearchSpec(metric=metric, k=10, backend=backend,
+                            recall_target=CLUSTER_TARGET,
+                            query_block=query_block, cluster=mode),
+        )
+        _, idxs = index.search(queries)  # warmup + recall sample
+        rec = sum(
+            len(set(r.tolist()) & s) / 10
+            for r, s in zip(jax.device_get(idxs), exact_sets)
+        ) / m
+        backends.reset_trace_counts()
+        reset_pack_events()
+        wall, dispatches = _time_search(index, queries, repeats)
+        cplan = index.pack().cluster.plan if mode == "auto" \
+            and index.pack().cluster is not None else None
+        row["modes"][mode] = {
+            "wall_s_per_search": wall,
+            "qps": m / wall,
+            "dispatches_per_search": dispatches,
+            "steady_retraces": sum(backends.TRACE_COUNTS.values()),
+            "steady_pack_events": sum(PACK_EVENTS.values()),
+            "recall_vs_exact": rec,
+            "cluster_enabled": cplan is not None,
+            "scanned_fraction": cplan.scanned_fraction if cplan else 1.0,
+        }
+        emit(
+            f"cluster,{backend},{metric},M={m},N={n},D={d},{mode}: "
+            f"{m / wall:.0f} qps ({dispatches:.0f} dispatch) "
+            f"recall {rec:.3f} scanned "
+            f"{row['modes'][mode]['scanned_fraction']:.3f}"
+        )
+    row["cluster_speedup"] = (
+        row["modes"]["off"]["wall_s_per_search"]
+        / row["modes"]["auto"]["wall_s_per_search"]
+    )
+    emit(f"cluster,{backend},{metric}: pruned scan "
+         f"{row['cluster_speedup']:.2f}x the dense scan")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -269,6 +350,16 @@ def main() -> None:
             bench_quant(backend, mets[0], qm, qn, qd, qb, repeats, print)
         )
 
+    cluster_results = []
+    # One clustered config per backend: the cluster N is its own (large)
+    # size — pruning only exists above the planner crossover, which every
+    # grid entry above sits below or near.
+    for backend in bks:
+        cluster_results.append(
+            bench_cluster(backend, "l2", CLUSTER_M, CLUSTER_N, CLUSTER_D,
+                          qb if qb >= 256 else 256, repeats, print)
+        )
+
     report = {
         "meta": {
             "jax": jax.__version__,
@@ -280,6 +371,7 @@ def main() -> None:
         "results": results,
         "plan_results": plan_results,
         "quant_results": quant_results,
+        "cluster_results": cluster_results,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -324,6 +416,29 @@ def main() -> None:
                 assert t["steady_retraces"] == 0, (storage, t)
                 assert t["steady_pack_events"] == 0, (storage, t)
                 assert t["recall_vs_f32"] >= 0.9, (storage, t)
+        # Cluster-pruned front-end contracts: at the large-N config the
+        # pruned scan must be a real speedup (>=1.5x, with headroom: the
+        # config above measures >=2x locally) while HOLDING the recall
+        # target against the exact baseline, scanning a small fraction of
+        # the rows, and keeping the one-dispatch / zero-retrace /
+        # zero-repack steady-state contract.
+        for crow in cluster_results:
+            auto, off = crow["modes"]["auto"], crow["modes"]["off"]
+            assert auto["cluster_enabled"], crow
+            assert not off["cluster_enabled"], crow
+            assert crow["cluster_speedup"] >= 1.5, (
+                f"pruned scan only {crow['cluster_speedup']:.2f}x the "
+                f"dense scan at N={crow['n']} — cluster perf regression"
+            )
+            assert auto["recall_vs_exact"] >= crow["recall_target"], (
+                f"pruned recall {auto['recall_vs_exact']:.3f} below the "
+                f"{crow['recall_target']} target — miss/collision "
+                "guarantee regression"
+            )
+            assert auto["scanned_fraction"] < 0.25, auto
+            assert auto["dispatches_per_search"] == 1, auto
+            assert auto["steady_retraces"] == 0, auto
+            assert auto["steady_pack_events"] == 0, auto
         print("smoke contract OK")
 
 

@@ -16,19 +16,26 @@ if [[ "${1:-fast}" == "full" ]]; then
     python -m pytest -q --doctest-modules src/repro/search
     exec python -m pytest -x -q
 else
+    # Shim-import lint: nothing under src/ may import the deprecated
+    # compatibility shims (they exist for DOWNSTREAM callers only; the
+    # shims themselves and their re-export targets are the one exception).
+    python scripts/shim_lint.py
     # Perf contracts first (fail fast on re-introduced per-search padding /
-    # dispatch-loop regressions, and on serving-layer coalescing
-    # regressions), then the benchmark smoke runs (planner-vs-legacy and
-    # one-dispatch-per-coalesced-batch + stream-path parity contracts),
-    # docs lint + public-API doctests, then the rest of the fast tier
-    # (test_packed/test_serve already ran — don't repeat them).  (smoke
-    # runs write to untracked paths so they never clobber the committed
-    # full-grid BENCH_search.json / BENCH_serve.json seeds)
-    python -m pytest -x -q tests/test_packed.py tests/test_serve.py
+    # dispatch-loop regressions, cluster-pruning regressions, and on
+    # serving-layer coalescing regressions), then the benchmark smoke runs
+    # (planner-vs-legacy, one-dispatch-per-coalesced-batch + stream-path
+    # parity, and pruned-scan speedup/recall contracts), docs lint +
+    # public-API doctests, then the rest of the fast tier
+    # (test_packed/test_serve/test_cluster already ran — don't repeat
+    # them).  (smoke runs write to untracked paths so they never clobber
+    # the committed full-grid BENCH_search.json / BENCH_serve.json seeds)
+    python -m pytest -x -q tests/test_packed.py tests/test_serve.py \
+        tests/test_cluster.py
     python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
     python benchmarks/bench_serve.py --smoke --out BENCH_serve.smoke.json
     python scripts/docs_lint.py
     python -m pytest -x -q --doctest-modules src/repro/search
     exec python -m pytest -x -q -m "not slow" \
-        --ignore=tests/test_packed.py --ignore=tests/test_serve.py
+        --ignore=tests/test_packed.py --ignore=tests/test_serve.py \
+        --ignore=tests/test_cluster.py
 fi

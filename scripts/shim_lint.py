@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Fail if anything under src/ imports a deprecated compatibility shim.
+
+The shims — ``repro.core.knn``, ``repro.kernels.ops``,
+``repro.core.distributed`` — exist for DOWNSTREAM callers migrating to
+``repro.search``; internal code importing them would silently re-entrench
+the deprecated API (and its DeprecationWarning) inside the package itself.
+
+Exempt: the shim modules themselves and the parent ``__init__`` files
+that lazily re-expose them as attributes (via ``importlib``) for
+backwards compatibility.
+
+Catches ``import x``, ``from x import y``, ``from parent import shim``,
+and literal ``importlib.import_module("x")`` calls; docstrings and
+comments are naturally ignored (AST-based).
+"""
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+
+SHIMS = {
+    "repro.core.knn",
+    "repro.kernels.ops",
+    "repro.core.distributed",
+}
+# parent package -> submodule name, for "from repro.core import knn"
+SHIM_PARENTS = {tuple(s.rsplit(".", 1)) for s in SHIMS}
+
+EXEMPT = {
+    SRC / "repro" / "core" / "knn.py",
+    SRC / "repro" / "kernels" / "ops.py",
+    SRC / "repro" / "core" / "distributed.py",
+    # lazy attribute re-export of the shims for downstream callers
+    SRC / "repro" / "core" / "__init__.py",
+    SRC / "repro" / "kernels" / "__init__.py",
+}
+
+
+def _violations(path: pathlib.Path) -> list:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in SHIMS:
+                    out.append((node.lineno, f"import {alias.name}"))
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod in SHIMS:
+                out.append((node.lineno, f"from {mod} import ..."))
+            for alias in node.names:
+                if (mod, alias.name) in SHIM_PARENTS:
+                    out.append(
+                        (node.lineno, f"from {mod} import {alias.name}")
+                    )
+        elif isinstance(node, ast.Call):
+            # importlib.import_module("repro.core.knn") and friends
+            f = node.func
+            name = getattr(f, "attr", getattr(f, "id", ""))
+            if name == "import_module" and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Constant) and arg.value in SHIMS:
+                    out.append(
+                        (node.lineno, f'import_module("{arg.value}")')
+                    )
+    return out
+
+
+def main() -> int:
+    bad = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path in EXEMPT:
+            continue
+        for lineno, what in _violations(path):
+            bad.append(f"{path.relative_to(ROOT)}:{lineno}: {what}")
+    if bad:
+        print("deprecated-shim imports inside src/ (use repro.search):")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"shim lint OK ({len(list(SRC.rglob('*.py')))} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,16 @@ candidate budget (``scan_k``), and exactly rescore the winners against a
 full-precision tail, cutting database HBM traffic 2-4x (Eq. 10/20) while
 keeping the Eq. 13-14 recall guarantee; "f32" is bit-identical to the
 pre-tier path.
+Cluster pruning: ``SearchSpec.cluster`` = "auto" | "off"
+(``repro.search.cluster``) — above the planner's cost crossover the index
+builds a k-means coarse quantizer and each query scans only its top-rho
+clusters plus an always-scanned spill block, then reduces the gathered
+rows exactly.  Every parameter (C, rho, capacities, the scan budget) is
+derived by ``repro.search.plan.plan_clusters`` from (N, k, recall_target)
+— there are no user knobs — and the recall guarantee becomes the product
+P(no bin collision) x P(no cluster miss), both reported by
+``Index.explain()``.  Below the crossover (small N) "auto" builds nothing
+and is bit-identical to "off".
 
 Kernel planning (``repro.search.plan``): every tile size and the bin count
 are derived analytically from the paper's performance model (Eq. 4–10) and
@@ -76,6 +86,8 @@ from repro.search.backends import (
     MASK_VALUE,
     TRACE_COUNTS,
     CompileCache,
+    cluster_search,
+    cluster_search_quant,
     default_backend,
     dense_search,
     dense_search_quant,
@@ -97,6 +109,7 @@ from repro.search.functional import (
     mips,
     search,
 )
+from repro.search.cluster import ClusterPlan, ClusterState
 from repro.search.index import Index, SearchResult
 from repro.search.metrics import (
     Metric,
@@ -126,6 +139,7 @@ from repro.search.plan import (
     detect_device,
     hlo_check,
     plan_buckets,
+    plan_clusters,
     plan_search,
     tune_plan,
 )
@@ -183,6 +197,12 @@ __all__ = [
     "scan_k",
     "dense_search_quant",
     "pallas_search_packed_quant",
+    # cluster-pruned scan front-end (repro.search.cluster)
+    "ClusterPlan",
+    "ClusterState",
+    "plan_clusters",
+    "cluster_search",
+    "cluster_search_quant",
     # kernel planner (the performance model as a subsystem)
     "Plan",
     "plan_search",

@@ -48,6 +48,8 @@ __all__ = [
     "TRACE_COUNTS",
     "DISPATCH_COUNTS",
     "CompileCache",
+    "cluster_search",
+    "cluster_search_quant",
     "dense_search",
     "dense_search_quant",
     "pallas_search",
@@ -264,6 +266,183 @@ def dense_search_quant(
             use_bitonic=use_bitonic,
         )
     if m.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
+# --- Cluster-pruned scan (repro.search.cluster) ------------------------------
+
+
+def _cluster_candidates(q, centroids, centroid_bias, cluster_rows,
+                        spill_rows, probes):
+    """Per-query candidate row ids from the pruning side tables.
+
+    Scores the prepared queries against the (C, d) centroids with the same
+    biased-MIPS convention as the row scan, keeps the top-``probes``
+    clusters, and concatenates their slot tables with the always-scanned
+    spill block.  Returns ``(ids, valid)`` where ``ids`` (m, S) are
+    *user-space* row ids clamped to >= 0 and ``valid`` marks real slots —
+    empty slots (padded tails of partially-filled clusters, unused spill
+    capacity) must be masked by the caller so they can never win a bin.
+
+    The slot order INTERLEAVES the probed clusters (slot j of every
+    cluster, then slot j+1, ...) instead of concatenating them whole.
+    Eq. 13's collision bound assumes the true top-k land in random bins;
+    cluster-contiguous order breaks that badly — a query's winners
+    concentrate in its best cluster's slots, adjacent slots share a bin,
+    and measured recall falls below the planned collision term.
+    Interleaving spreads each cluster across the bin space, restoring the
+    random-placement regime the plan prices.
+    """
+    caff = jnp.einsum("md,cd->mc", q, centroids) + centroid_bias[None, :]
+    _, top_c = jax.lax.top_k(caff, probes)
+    m = q.shape[0]
+    slots = cluster_rows[top_c]                       # (m, probes, R)
+    slots = slots.swapaxes(1, 2).reshape(m, -1)       # (m, R * probes)
+    spill = jnp.broadcast_to(
+        spill_rows[None, :], (m, spill_rows.shape[0])
+    )
+    ids = jnp.concatenate([slots, spill], axis=1)     # (m, S)
+    return jnp.maximum(ids, 0), ids >= 0
+
+
+def _pad_queries_to(q, width):
+    """Zero-pad query lanes up to the packed layout's d_pad (exact for dot
+    products — the database's padded lanes are zero too)."""
+    if q.shape[1] == width:
+        return q
+    return jnp.pad(q, ((0, 0), (0, width - q.shape[1])))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "probes", "target_scan", "aggregate_to_topk",
+        "use_bitonic", "trace_as",
+    ),
+)
+def cluster_search(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: jnp.ndarray,
+    centroids: jnp.ndarray,
+    centroid_bias: jnp.ndarray,
+    cluster_rows: jnp.ndarray,
+    spill_rows: jnp.ndarray,
+    *,
+    metric: str,
+    k: int,
+    probes: int,
+    target_scan: float,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+    trace_as: str = "xla",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster-pruned search over a packed f32-tier layout (one dispatch).
+
+    Score the C centroids, gather only the top-``probes`` clusters' rows
+    (plus the spill block) from the packed database, and reduce those S
+    candidates at the planner's inflated ``target_scan`` — the product
+    with the cluster-miss budget meets the user's original target
+    (``repro.search.cluster``).  Consumes either packed layout: the xla
+    (n, d)/(n,) operands or the pallas (n_pad, d_pad)/(1, n_pad) ones —
+    gathers are layout-indifferent, which is also why the fused Eq. 20
+    kernel is bypassed here: a pruned scan has no sequential database
+    stream left to fuse, so both single-device backends share this
+    gathered program (``trace_as`` keeps trace accounting under the
+    resolved backend's name).  Returned ids are user-space directly — the
+    slot tables *are* the permutation map.  Gathered candidates carry the
+    fused bias row, so tombstones and masked slots can never surface.
+    """
+    m_obj = get_metric(metric)
+    TRACE_COUNTS[trace_as] += 1
+    q = m_obj.prepare_queries(queries)
+    idc, valid = _cluster_candidates(
+        q, centroids, centroid_bias, cluster_rows, spill_rows, probes
+    )
+    qp = _pad_queries_to(q, database.shape[1])
+    rows = database[idc]                              # (m, S, d) gather
+    scores = jnp.einsum("md,msd->ms", qp, rows.astype(jnp.float32))
+    scores = scores + row_bias.reshape(-1)[idc]
+    scores = jnp.where(valid, scores, MASK_VALUE)
+    vals, pos = approx_max_k(
+        scores, k, recall_target=target_scan,
+        aggregate_to_topk=aggregate_to_topk, use_bitonic=use_bitonic,
+    )
+    idxs = jnp.take_along_axis(idc, pos, axis=-1)
+    if m_obj.negate_output:
+        vals = -vals
+    return vals, idxs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "k_scan", "probes", "target_scan",
+        "aggregate_to_topk", "use_bitonic", "trace_as",
+    ),
+)
+def cluster_search_quant(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    row_bias: jnp.ndarray,
+    scale: Optional[jnp.ndarray],
+    rescore_db: Optional[jnp.ndarray],
+    rescore_bias: Optional[jnp.ndarray],
+    centroids: jnp.ndarray,
+    centroid_bias: jnp.ndarray,
+    cluster_rows: jnp.ndarray,
+    spill_rows: jnp.ndarray,
+    *,
+    metric: str,
+    k: int,
+    k_scan: int,
+    probes: int,
+    target_scan: float,
+    aggregate_to_topk: bool = True,
+    use_bitonic: bool = False,
+    trace_as: str = "xla",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster-pruned two-pass search over a quantized packed tier.
+
+    The over-fetches stack: the pruned scan ranks the S gathered
+    candidates by quantized score with bins planned for ``k_scan``
+    (``quant.scan_k``'s confusion budget) at the cluster planner's
+    ``target_scan``, then the usual exact second pass re-scores the
+    over-fetched winners from the full-precision tail — so the combined
+    guarantee is collision(K', S) x miss, both terms budgeted.  Candidate
+    ids are user-space, so the rescore gather is identical to the
+    unclustered one.
+    """
+    m_obj = get_metric(metric)
+    TRACE_COUNTS[trace_as] += 1
+    q = m_obj.prepare_queries(queries)
+    idc, valid = _cluster_candidates(
+        q, centroids, centroid_bias, cluster_rows, spill_rows, probes
+    )
+    qp = _pad_queries_to(q, database.shape[1])
+    rows = database[idc]
+    scores = jnp.einsum("md,msd->ms", qp, rows.astype(jnp.float32))
+    if scale is not None:
+        scores = scores * scale.reshape(-1)[idc]
+    scores = scores + row_bias.reshape(-1)[idc]
+    scores = jnp.where(valid, scores, MASK_VALUE)
+    if rescore_db is not None:
+        vals, pos = approx_max_k(
+            scores, k_scan, recall_target=target_scan,
+            aggregate_to_topk=False,
+        )
+        idxs = jnp.take_along_axis(idc, pos, axis=-1)
+        vals, idxs = _rescore_candidates(
+            q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
+        )
+    else:
+        vals, pos = approx_max_k(
+            scores, k, recall_target=target_scan,
+            aggregate_to_topk=aggregate_to_topk, use_bitonic=use_bitonic,
+        )
+        idxs = jnp.take_along_axis(idc, pos, axis=-1)
+    if m_obj.negate_output:
         vals = -vals
     return vals, idxs
 
@@ -531,6 +710,8 @@ def make_sharded_search_fn(
     batch_axis: Optional[str] = None,
     use_bitonic: bool = False,
     k_scan: Optional[int] = None,
+    cluster_probes: Optional[int] = None,
+    cluster_target_scan: Optional[float] = None,
 ):
     """Build (queries, database, row_bias) -> (values, indices) over a mesh.
 
@@ -548,12 +729,23 @@ def make_sharded_search_fn(
     — and the all-gather carries *exact* scores into the final rescoring.
     ``k_scan`` is the over-fetched scan k the bins are planned for
     (default: ``k``).
+
+    Cluster pruning (``cluster_probes``/``cluster_target_scan`` set, plus
+    the four side-table operands): the tables are *replicated* — every
+    shard ranks the same centroids and derives the same global candidate
+    ids — and each shard scores only the candidates its row range owns
+    (out-of-range slots mask like empty ones), so the union of shard
+    scans covers the candidate set exactly once.  Candidate ids are
+    already global user ids, so the offset translation of the dense path
+    is skipped; per-shard bins are laid over the S candidate slots at the
+    cluster planner's ``target_scan``.
     """
     m_obj = get_metric(metric)
     scan_k = k if k_scan is None else k_scan
 
     def searcher(queries, database, row_bias=None, scale=None,
-                 rescore_db=None, rescore_bias=None):
+                 rescore_db=None, rescore_bias=None, centroids=None,
+                 centroid_bias=None, cluster_rows=None, spill_rows=None):
         global_n = database.shape[0]
         n_shards = mesh.shape[db_axis]
         if global_n % n_shards:
@@ -573,12 +765,26 @@ def make_sharded_search_fn(
         in_specs = [qspec, P(db_axis, None), P(db_axis)]
         with_scale = scale is not None
         with_rescore = rescore_db is not None
+        with_cluster = centroids is not None
+        if with_cluster and (
+            cluster_probes is None or cluster_target_scan is None
+        ):
+            raise ValueError(
+                "cluster operands passed but make_sharded_search_fn was "
+                "built without cluster_probes/cluster_target_scan"
+            )
         if with_scale:
             args.append(scale)
             in_specs.append(P(db_axis))
         if with_rescore:
             args.extend([rescore_db, rescore_bias])
             in_specs.extend([P(db_axis, None), P(db_axis)])
+        if with_cluster:
+            # Side tables replicated: centroid ranking must be identical
+            # on every shard for the ownership partition to cover the
+            # candidate set exactly once.
+            args.extend([centroids, centroid_bias, cluster_rows, spill_rows])
+            in_specs.extend([P(None, None), P(None), P(None, None), P(None)])
 
         def local_fn(q, db, b, *rest):
             axis_idx = jax.lax.axis_index(db_axis)
@@ -586,29 +792,76 @@ def make_sharded_search_fn(
             offset = axis_idx.astype(jnp.int32) * n_local
             rest = list(rest)
             sc = rest.pop(0) if with_scale else None
-            rs_db, rs_bias = rest if with_rescore else (None, None)
-            scores = jnp.einsum("ik,jk->ij", q, db)
-            if sc is not None:
-                scores = scores * sc[None, :]
-            scores = scores + b[None, :]
-            plan = plan_bins(
-                n_local, min(scan_k, n_local), recall_target,
-                reduction_input_size_override=global_n,
+            rs_db, rs_bias = (
+                (rest.pop(0), rest.pop(0)) if with_rescore else (None, None)
             )
-            vals, idxs = partial_reduce_with_plan(scores, plan, mode="max")
-            if with_rescore:
-                # Cut the shard's bin winners to its k_scan best by
-                # quantized score, then exact-rescore only those — the
-                # all-gather then carries exact scores (and ~k_scan rows
-                # per shard instead of L).
-                k_cut = min(scan_k, vals.shape[-1])
-                if k_cut < vals.shape[-1]:
-                    vals, sel = jax.lax.top_k(vals, k_cut)
-                    idxs = jnp.take_along_axis(idxs, sel, axis=-1)
-                rows = rs_db[idxs]
-                exact = jnp.einsum("md,mld->ml", q, rows) + rs_bias[idxs]
-                vals = jnp.where(vals > MASK_VALUE * 0.5, exact, MASK_VALUE)
-            idxs = idxs + offset
+            if with_cluster:
+                cents, cbias, crows, srows = rest
+                gidc, valid = _cluster_candidates(
+                    q, cents, cbias, crows, srows, cluster_probes
+                )
+                # Global candidate ids -> this shard's row range; slots
+                # another shard owns mask exactly like empty ones.
+                local = gidc - offset
+                owned = valid & (local >= 0) & (local < n_local)
+                lidc = jnp.clip(local, 0, n_local - 1)
+                scores = jnp.einsum(
+                    "md,msd->ms", q, db[lidc].astype(jnp.float32)
+                )
+                if sc is not None:
+                    scores = scores * sc[lidc]
+                scores = scores + b[lidc]
+                scores = jnp.where(owned, scores, MASK_VALUE)
+                s_slots = scores.shape[-1]
+                plan = plan_bins(
+                    s_slots, min(scan_k, s_slots), cluster_target_scan
+                )
+                vals, pos = partial_reduce_with_plan(scores, plan, mode="max")
+                idxs = jnp.take_along_axis(gidc, pos, axis=-1)
+                if with_rescore:
+                    k_cut = min(scan_k, vals.shape[-1])
+                    if k_cut < vals.shape[-1]:
+                        vals, sel = jax.lax.top_k(vals, k_cut)
+                        pos = jnp.take_along_axis(pos, sel, axis=-1)
+                        idxs = jnp.take_along_axis(idxs, sel, axis=-1)
+                    lsel = jnp.take_along_axis(lidc, pos, axis=-1)
+                    exact = (
+                        jnp.einsum("md,mld->ml", q, rs_db[lsel])
+                        + rs_bias[lsel]
+                    )
+                    vals = jnp.where(
+                        vals > MASK_VALUE * 0.5, exact, MASK_VALUE
+                    )
+                # idxs are global user ids already — no offset to add.
+            else:
+                scores = jnp.einsum("ik,jk->ij", q, db)
+                if sc is not None:
+                    scores = scores * sc[None, :]
+                scores = scores + b[None, :]
+                plan = plan_bins(
+                    n_local, min(scan_k, n_local), recall_target,
+                    reduction_input_size_override=global_n,
+                )
+                vals, idxs = partial_reduce_with_plan(
+                    scores, plan, mode="max"
+                )
+                if with_rescore:
+                    # Cut the shard's bin winners to its k_scan best by
+                    # quantized score, then exact-rescore only those — the
+                    # all-gather then carries exact scores (and ~k_scan
+                    # rows per shard instead of L).
+                    k_cut = min(scan_k, vals.shape[-1])
+                    if k_cut < vals.shape[-1]:
+                        vals, sel = jax.lax.top_k(vals, k_cut)
+                        idxs = jnp.take_along_axis(idxs, sel, axis=-1)
+                    rows = rs_db[idxs]
+                    exact = (
+                        jnp.einsum("md,mld->ml", q, rows) + rs_bias[idxs]
+                    )
+                    vals = jnp.where(
+                        vals > MASK_VALUE * 0.5, exact, MASK_VALUE
+                    )
+                idxs = idxs + offset
             vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
             idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
             top_v, top_i = exact_rescoring(

@@ -1,0 +1,530 @@
+"""Cluster-pruned scan front-end: a tuning-free k-means coarse quantizer.
+
+The paper's brute-force scan pays ``O(N·D)`` per query no matter what the
+data looks like; IVF-style methods win at large N precisely by *not*
+scanning everything — at the cost of per-dataset knobs (cluster count,
+probe count) the paper's tuning-free stance forbids.  This module closes
+that gap the same way ``repro.search.quant`` closed the precision gap:
+every cluster parameter is **derived** from (N, k, recall_target), and the
+recall guarantee survives as a product of two analytically-budgeted terms.
+
+Layout (side tables — the packed row order never changes)
+---------------------------------------------------------
+
+A clustered index keeps the packed database exactly as before (user row
+order, fused bias row, incremental add/delete patches all unchanged) and
+adds a :class:`ClusterState` of side tables:
+
+  * ``centroids``      (C, d)   metric-prepared k-means centroids,
+  * ``centroid_bias``  (C,)     fused metric bias of the centroids (e.g.
+    ``-||mu||^2/2`` for L2), so queries rank centroids with the *same*
+    biased-MIPS scoring the row scan uses,
+  * ``cluster_rows``   (C, R)   user row ids per cluster, ``-1`` = empty
+    slot — this is simultaneously the per-cluster row ranges *and* the
+    permutation map: gathered candidates are user ids natively, so
+    returned indices never need translating,
+  * ``spill_rows``     (B,)     an always-scanned overflow block for rows
+    whose nearest clusters are full (and for incremental ``add`` bursts).
+
+The pruned scan scores queries against the C centroids, gathers the rows
+of the top-``rho`` clusters plus the spill block (S = rho·R + B slots,
+empty slots masked to ``MASK_VALUE`` so partially-filled clusters never
+leak), and runs the usual bin reduction + exact top-k over those S
+candidates only — scanned rows drop from N to S per query.
+
+Derivation (why there are no knobs)
+-----------------------------------
+
+With cluster pruning a true top-K entry can be lost two ways: the usual
+bin *collision* (Eq. 13–14) inside the scanned set, or a cluster *miss* —
+its home cluster is not among the query's top-``rho``.  The guarantee
+becomes a product ``E[recall] = collision_term x miss_term`` and the
+planner budgets each term separately:
+
+  * miss budget: half the allowed loss, ``p_miss <= (1 - target) / 2``.
+  * probe count: under a geometric neighbor-mass decay model — ranked by
+    query-centroid affinity, each successive cluster holds at most half
+    the remaining true-neighbor mass, so ``p_miss <= 2^-rho`` — the
+    budget inverts to ``rho = ceil(log2(2 / (1 - target)))``.
+  * inner scan target: the bin layout over the S scanned rows is planned
+    at ``target_scan = target / (1 - miss_budget)``, so the product meets
+    the original target by construction.
+  * cluster count: ``C = 2^ceil(log2(sqrt(N)))`` — the classic IVF
+    balance point where centroid scoring (C dots) and cluster scanning
+    (N/C rows per probe) cost the same order.
+  * cluster capacity: ``R = roundup(1.25 · N/C, 8)`` slots (25 % balance
+    headroom over the ideal N/C fill, sublane-aligned).
+  * spill block: ``B = roundup(max(64, N/64), 8)`` — bounded incremental
+    headroom, always scanned so spilled rows can never be missed.
+
+The decay model is an *assumption about the data*, not a theorem: it
+holds when the corpus has cluster structure (the regime real embedding
+workloads live in, and the only regime where pruning can win at all) and
+fails on structureless data — e.g. i.i.d. Gaussian rows, where a query's
+true neighbors spread across many Voronoi cells and no sub-linear probe
+schedule can hit them.  The planner's *crossover* is purely a cost
+decision (``repro.search.plan.plan_clusters``): pruning is enabled only
+when the modeled per-query row cost — C centroid dots plus
+gather-penalized S row reads — beats the full scan by at least 2x; it
+prices FLOPs, not geometry, so it cannot see the regime.  The geometry
+is checked **empirically at build time** instead: after the tables are
+built, :func:`sampled_miss_rate` measures the actual cluster-miss rate
+of sampled live rows used as query proxies (true top-k from a dense
+scored pass vs the clusters the probe schedule would visit), and the
+pack layer discards the tables — silently falling back to the dense
+scan, bit-identical to ``cluster="off"`` — when the measured rate blows
+past :func:`miss_check_threshold`.  That keeps the tuning-free claim
+honest on *both* sides: no knobs to enable pruning, and no silent recall
+collapse on data the model does not fit.
+
+One assumption no build-time measurement can verify remains: queries
+must be drawn from (or near) the database distribution — the proxy check
+embodies exactly that premise, and it is the contract every IVF system
+carries.  Out-of-distribution query streams land in unprobed clusters at
+an unpredictable rate; ``cluster="off"`` is the right build for those.
+``tests/test_recall_guarantee.py`` validates the end-to-end guarantee on
+clusterable corpora with a Hoeffding margin.
+
+Nothing here imports the rest of ``repro.search`` — like ``quant``, this
+is a leaf the planner, packed state and backends build *on*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binning import plan_bins, round_up
+
+__all__ = [
+    "ClusterPlan",
+    "ClusterState",
+    "KMEANS_ITERS",
+    "assign_rows",
+    "build_tables",
+    "kmeans",
+    "miss_budget_for",
+    "miss_check_threshold",
+    "num_clusters_for",
+    "probes_for",
+    "sampled_miss_rate",
+    "spill_capacity_for",
+]
+
+# Lloyd iterations for the build-time coarse quantizer.  Fixed and small:
+# the centroids only need to capture coarse structure (the probe schedule
+# and spill block absorb imperfect boundaries), and a deterministic
+# iteration count keeps builds bit-reproducible.
+KMEANS_ITERS = 8
+
+# Nearest-centroid candidates considered by the capacity-constrained
+# assignment before a row falls through to the spill block.
+_ASSIGN_CANDIDATES = 8
+
+# Slot padding / empty-slot sentinel in cluster_rows and spill_rows.
+EMPTY_SLOT = -1
+
+# Per-cluster capacity headroom over the ideal N/C fill.
+_BALANCE_SLACK = 1.25
+
+# Replan trigger: once the spill block is more than half full, the next
+# ``add`` asks the planner for fresh centroids (lazy recluster).
+_SPILL_REPLAN_FRACTION = 0.5
+
+# Build-time empirical miss check: query proxies sampled from the live
+# rows, and the acceptance threshold's slack over the analytical budget.
+# The check is a regime detector (clusterable vs structureless data), not
+# a certifier — the slack absorbs proxy/sampling noise on corpora the
+# model fits, while structureless data overshoots it by an order of
+# magnitude.  The floor keeps tight budgets (high recall targets) from
+# turning sampling noise into spurious rejections.
+_MISS_CHECK_SAMPLES = 256
+_MISS_CHECK_SLACK = 2.0
+_MISS_CHECK_FLOOR = 0.08
+
+
+def num_clusters_for(n: int) -> int:
+    """Planner-chosen centroid count: ``2^ceil(log2(sqrt(n)))``.
+
+    >>> num_clusters_for(8192), num_clusters_for(16384)
+    (128, 128)
+    """
+    if n <= 1:
+        return 1
+    return 1 << max(0, math.ceil(math.log2(math.sqrt(n))))
+
+
+def miss_budget_for(recall_target: float) -> float:
+    """Cluster-miss probability budget: half the allowed recall loss."""
+    if not 0.0 < recall_target < 1.0:
+        raise ValueError(f"recall_target must be in (0, 1), got {recall_target}")
+    return (1.0 - recall_target) / 2.0
+
+
+def probes_for(recall_target: float, num_clusters: int = 128) -> int:
+    """Probe count rho from the geometric-decay miss model.
+
+    ``p_miss <= 2^-rho`` inverted against the miss budget, with a
+    partition-aware floor of ``C/32`` probes: the decay model prices
+    probes in absolute ranks, but the neighbour mass each rank captures
+    shrinks as the partition refines (each cluster holds ~1/C of the
+    data), so a fixed rho under-probes large C.  The floor keeps the
+    probed-mass fraction roughly constant (``rho/C >= 1/32``), which
+    bounds the asymptotic scanned fraction at ~1.25/32 of N plus spill —
+    the pruning win saturates instead of silently trading recall for it.
+
+    >>> probes_for(0.90), probes_for(0.95), probes_for(0.99)
+    (5, 6, 8)
+    >>> probes_for(0.95, num_clusters=256)
+    8
+    """
+    budget = miss_budget_for(recall_target)
+    decay = max(1, math.ceil(math.log2(1.0 / budget)))
+    floor = -(-num_clusters // 32)
+    return min(max(1, num_clusters - 1), max(decay, floor))
+
+
+def spill_capacity_for(n: int) -> int:
+    """Always-scanned overflow slots: ``roundup(max(64, n/64), 8)``."""
+    return round_up(max(64, n // 64), 8)
+
+
+def rows_per_cluster_for(n: int, num_clusters: int) -> int:
+    """Sublane-aligned per-cluster slot count with 25 % balance headroom."""
+    ideal = math.ceil(n / max(1, num_clusters))
+    return round_up(max(1, math.ceil(ideal * _BALANCE_SLACK)), 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    """Frozen, fully-derived cluster-pruning parameters for one row space.
+
+    Built by ``repro.search.plan.plan_clusters`` — never from user knobs.
+    ``enabled=False`` records that the planner evaluated pruning for this
+    workload and rejected it (below the cost crossover), which is how
+    ``cluster="auto"`` stays bit-identical to the full scan at small N.
+    """
+
+    n: int
+    num_clusters: int
+    rows_per_cluster: int
+    probes: int
+    spill_capacity: int
+    miss_budget: float
+    target_scan: float
+    predicted_speedup: float
+    enabled: bool
+
+    @property
+    def scan_rows(self) -> int:
+        """Candidate slots per query: probed cluster slots + spill block."""
+        return self.probes * self.rows_per_cluster + self.spill_capacity
+
+    @property
+    def scanned_fraction(self) -> float:
+        """Predicted fraction of the row space scanned per query."""
+        return min(1.0, self.scan_rows / max(1, self.n))
+
+    def recall_decomposition(self, k_scan: int) -> dict:
+        """The product guarantee: collision term (Eq. 13 over the S
+        scanned slots at ``target_scan``) times the miss term."""
+        bins = plan_bins(
+            self.scan_rows, min(k_scan, self.scan_rows), self.target_scan
+        )
+        # Bin size 1 keeps *every* scanned slot — the reduction is exact,
+        # so no collision is possible.  (Eq. 13's ball-in-bins value is
+        # meaningless there; S is small enough that this is the common
+        # layout for the inner scan.)
+        collision = 1.0 if bins.log2_bin_size == 0 else bins.expected_recall
+        miss = 1.0 - self.miss_budget
+        return {
+            "collision_term": collision,
+            "miss_term": miss,
+            "expected_recall": collision * miss,
+        }
+
+
+@dataclasses.dataclass
+class ClusterState:
+    """Device side tables + host fill counts for one clustered layout.
+
+    The device arrays are search *operands* (passed per dispatch, like the
+    packed bias row, so slot patches never invalidate compiled programs);
+    ``counts``/``spill_count`` mirror the fill level on the host so
+    incremental assignment never needs a device round-trip per row.
+    """
+
+    plan: ClusterPlan
+    centroids: jnp.ndarray      # (C, d) metric-prepared, f32
+    centroid_bias: jnp.ndarray  # (C,) fused metric bias, f32
+    cluster_rows: jnp.ndarray   # (C, R) int32 user row ids, EMPTY_SLOT pad
+    spill_rows: jnp.ndarray     # (B,) int32 user row ids, EMPTY_SLOT pad
+    counts: np.ndarray          # host (C,) slots used per cluster
+    spill_count: int = 0
+    spill_baseline: int = 0     # spill level right after (re)build
+
+    def operands(self) -> Tuple[jnp.ndarray, ...]:
+        """The positional device operands the pruned scan consumes."""
+        return (
+            self.centroids, self.centroid_bias,
+            self.cluster_rows, self.spill_rows,
+        )
+
+    @property
+    def needs_recluster(self) -> bool:
+        """Lazy-replan trigger: incremental assignment has GROWN the spill
+        block past the planner's imbalance threshold since the tables were
+        built.  Growth since build — not the absolute level — is the
+        signal: skewed corpora can legitimately fill part of the spill at
+        build time (every spilled row is always scanned, so recall is
+        unaffected), and reclustering the same data would just reproduce
+        that baseline."""
+        grown = self.spill_count - self.spill_baseline
+        return grown > int(
+            self.plan.spill_capacity * _SPILL_REPLAN_FRACTION
+        )
+
+
+def kmeans(rows: jnp.ndarray, num_clusters: int,
+           iters: int = KMEANS_ITERS) -> jnp.ndarray:
+    """Deterministic Lloyd k-means over metric-prepared rows (device).
+
+    Strided init over the row order (no RNG — builds are bit-reproducible),
+    relaxed-L2 assignment (``argmax <x, mu> - ||mu||^2/2``, Eq. 19's trick
+    reused), mean update with empty clusters keeping their old centroid.
+    O(iters · N · C · D) one-time build cost.
+
+    >>> c = kmeans(jnp.eye(8, 4), 2)
+    >>> c.shape
+    (2, 4)
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    n = rows.shape[0]
+    if num_clusters > n:
+        raise ValueError(f"num_clusters={num_clusters} exceeds rows n={n}")
+    cents = rows[(jnp.arange(num_clusters) * n) // num_clusters]
+    ones = jnp.ones((n,), jnp.float32)
+    for _ in range(iters):
+        logits = rows @ cents.T - 0.5 * jnp.sum(cents * cents, -1)[None, :]
+        assign = jnp.argmax(logits, -1)
+        sums = jax.ops.segment_sum(rows, assign, num_segments=num_clusters)
+        cnt = jax.ops.segment_sum(ones, assign, num_segments=num_clusters)
+        cents = jnp.where(
+            cnt[:, None] > 0, sums / jnp.maximum(cnt, 1.0)[:, None], cents
+        )
+    return cents
+
+
+def _nearest_candidates(
+    rows: jnp.ndarray,
+    centroids: jnp.ndarray,
+    centroid_bias: jnp.ndarray,
+    width: int,
+) -> np.ndarray:
+    """Host (r, width) centroid ids per row, best-first, scored with the
+    same biased-MIPS affinity the search probes use."""
+    width = min(width, centroids.shape[0])
+    aff = (
+        jnp.asarray(rows, jnp.float32) @ centroids.T
+        + centroid_bias[None, :]
+    )
+    _, cand = jax.lax.top_k(aff, width)
+    return np.asarray(cand)
+
+
+def build_tables(
+    rows: jnp.ndarray,
+    live: Optional[np.ndarray],
+    plan: ClusterPlan,
+    prepare: Callable[[jnp.ndarray], Tuple[jnp.ndarray, Optional[jnp.ndarray]]],
+) -> ClusterState:
+    """Build the full side-table set for ``rows`` (build / lazy recluster).
+
+    ``rows`` are the metric-prepared full-precision rows over the whole
+    capacity row space; ``live`` is a host bool mask (None = all live) —
+    dead rows (tombstones, unwritten capacity) get no slot, so they are
+    structurally absent from every candidate set.  ``prepare`` is the
+    metric's ``prepare_database``, re-run on the raw k-means centroids so
+    centroid scoring uses the same prepared space + bias convention as the
+    row scan (e.g. centroids are re-normalized for cosine, giving
+    spherical k-means).
+
+    Capacity-constrained greedy assignment: each live row goes to its
+    best-affinity centroid with a free slot (up to ``_ASSIGN_CANDIDATES``
+    fallbacks), then the spill block, then — spill full — the emptiest
+    cluster (total capacity ``C·R >= 1.25·N`` guarantees a slot exists).
+    The per-row Python loop is build-time-only, O(N) host work.
+    """
+    rows = jnp.asarray(rows)
+    if live is None:
+        live_idx = np.arange(rows.shape[0])
+    else:
+        live_idx = np.flatnonzero(np.asarray(live))
+    if live_idx.size < plan.num_clusters:
+        raise ValueError(
+            f"cannot build {plan.num_clusters} clusters from "
+            f"{live_idx.size} live rows"
+        )
+    live_rows = rows[jnp.asarray(live_idx)]
+    raw_cents = kmeans(live_rows, plan.num_clusters)
+    cents, cent_bias = prepare(raw_cents)
+    cents = jnp.asarray(cents, jnp.float32)
+    bias = (
+        jnp.zeros((plan.num_clusters,), jnp.float32)
+        if cent_bias is None
+        else jnp.asarray(cent_bias, jnp.float32)
+    )
+    cand = _nearest_candidates(live_rows, cents, bias, _ASSIGN_CANDIDATES)
+
+    table = np.full(
+        (plan.num_clusters, plan.rows_per_cluster), EMPTY_SLOT, np.int32
+    )
+    spill = np.full((plan.spill_capacity,), EMPTY_SLOT, np.int32)
+    counts = np.zeros((plan.num_clusters,), np.int64)
+    spill_count = 0
+    for rid, cs in zip(live_idx, cand):
+        placed = False
+        for c in cs:
+            if counts[c] < plan.rows_per_cluster:
+                table[c, counts[c]] = rid
+                counts[c] += 1
+                placed = True
+                break
+        if placed:
+            continue
+        if spill_count < plan.spill_capacity:
+            spill[spill_count] = rid
+            spill_count += 1
+        else:
+            c = int(np.argmin(counts))
+            table[c, counts[c]] = rid
+            counts[c] += 1
+    return ClusterState(
+        plan=plan,
+        centroids=cents,
+        centroid_bias=bias,
+        cluster_rows=jnp.asarray(table),
+        spill_rows=jnp.asarray(spill),
+        counts=counts,
+        spill_count=spill_count,
+        spill_baseline=spill_count,
+    )
+
+
+def miss_check_threshold(miss_budget: float) -> float:
+    """Acceptance threshold for the build-time empirical miss check.
+
+    ``max(2 x budget, 0.08)``: clusterable corpora measure within the
+    budget (the slack absorbs the self-query proxy and sampling noise),
+    structureless data measures 5-10x above it.
+
+    >>> miss_check_threshold(0.05), miss_check_threshold(0.005)
+    (0.1, 0.08)
+    """
+    return max(_MISS_CHECK_SLACK * miss_budget, _MISS_CHECK_FLOOR)
+
+
+def sampled_miss_rate(
+    state: ClusterState,
+    rows: jnp.ndarray,
+    bias_row: jnp.ndarray,
+    live: Optional[np.ndarray],
+    k: int,
+) -> float:
+    """Empirical cluster-miss rate of built tables, no user queries needed.
+
+    Samples (strided, deterministic) live prepared rows as query proxies —
+    the standard IVF self-test, exact for metrics whose prepared database
+    rows are valid query vectors (mips trivially, relaxed L2 because
+    queries enter Eq. 19 unprepared, cosine because prepared rows are
+    already unit-norm) — then measures directly what the decay model only
+    assumes: the fraction of each proxy's true top-``k`` (dense scored
+    pass over all rows with the fused bias, so tombstones can't count)
+    whose home cluster is NOT among the proxy's top-``probes`` centroids
+    (spill rows always count as hit — they are always scanned).
+
+    One (m, N) matmul of build-time work; the per-row cluster membership
+    is recovered from the tables themselves, so the measurement covers
+    exactly the layout the pruned scan will gather from.
+    """
+    plan = state.plan
+    rows = jnp.asarray(rows, jnp.float32)
+    capacity = rows.shape[0]
+    if live is None:
+        live_idx = np.arange(capacity)
+    else:
+        live_idx = np.flatnonzero(np.asarray(live))
+    m = min(_MISS_CHECK_SAMPLES, live_idx.size)
+    sample = live_idx[(np.arange(m) * live_idx.size) // m]
+    q = rows[jnp.asarray(sample)]
+    k_eff = max(1, min(k, live_idx.size))
+    scores = q @ rows.T + jnp.asarray(bias_row, jnp.float32)[None, :]
+    _, true_ids = jax.lax.top_k(scores, k_eff)
+    caff = q @ state.centroids.T + state.centroid_bias[None, :]
+    _, probed = jax.lax.top_k(caff, plan.probes)
+
+    member = np.full((capacity,), -1, np.int64)
+    tbl = np.asarray(state.cluster_rows)
+    filled = tbl >= 0
+    member[tbl[filled]] = np.nonzero(filled)[0]
+    in_spill = np.zeros((capacity,), bool)
+    sp = np.asarray(state.spill_rows)
+    in_spill[sp[sp >= 0]] = True
+
+    true_ids = np.asarray(true_ids)
+    probed = np.asarray(probed)
+    hit = in_spill[true_ids]
+    hit |= (member[true_ids][:, :, None] == probed[:, None, :]).any(-1)
+    return float(1.0 - hit.mean())
+
+
+def assign_rows(state: ClusterState, rows: jnp.ndarray, start: int) -> None:
+    """Incrementally slot appended rows (user ids ``start..start+r``).
+
+    Mirrors the packed ``update_rows`` contract: O(r) work against the
+    existing centroids — nearest centroid with a free slot, else the spill
+    block, else (spill full) the emptiest cluster.  Patches the device
+    tables in place; ``state.needs_recluster`` tells ``Index.add`` when
+    the spill pressure says the centroids should be lazily re-derived.
+    """
+    rows = jnp.atleast_2d(jnp.asarray(rows))
+    cand = _nearest_candidates(
+        rows, state.centroids, state.centroid_bias, _ASSIGN_CANDIDATES
+    )
+    tbl_c, tbl_j, tbl_id = [], [], []
+    sp_j, sp_id = [], []
+    for off, cs in enumerate(cand):
+        rid = start + off
+        placed = False
+        for c in cs:
+            if state.counts[c] < state.plan.rows_per_cluster:
+                tbl_c.append(c)
+                tbl_j.append(int(state.counts[c]))
+                tbl_id.append(rid)
+                state.counts[c] += 1
+                placed = True
+                break
+        if placed:
+            continue
+        if state.spill_count < state.plan.spill_capacity:
+            sp_j.append(state.spill_count)
+            sp_id.append(rid)
+            state.spill_count += 1
+        else:
+            c = int(np.argmin(state.counts))
+            tbl_c.append(c)
+            tbl_j.append(int(state.counts[c]))
+            tbl_id.append(rid)
+            state.counts[c] += 1
+    if tbl_id:
+        state.cluster_rows = state.cluster_rows.at[
+            jnp.asarray(tbl_c), jnp.asarray(tbl_j)
+        ].set(jnp.asarray(tbl_id, jnp.int32))
+    if sp_id:
+        state.spill_rows = state.spill_rows.at[jnp.asarray(sp_j)].set(
+            jnp.asarray(sp_id, jnp.int32)
+        )

@@ -171,6 +171,7 @@ class Index:
                 block_m=spec.block_m, max_block_n=spec.max_block_n,
                 query_block=spec.query_block,
                 storage=spec.storage, rescore=spec.rescore_enabled,
+                cluster=spec.cluster,
             )
             if plan == "measure" and plan_obj.source != "user":
                 plan_obj = planlib.tune_plan(
@@ -250,7 +251,27 @@ class Index:
 
     @property
     def expected_recall(self) -> float:
+        cp = self._cluster_plan_in_effect()
+        if cp is not None:
+            k_scan = packedlib.scan_k_for(self.spec, cp.scan_rows)
+            return cp.recall_decomposition(k_scan)["expected_recall"]
         return self.plan.expected_recall
+
+    def _cluster_plan_in_effect(self):
+        """The ClusterPlan the live search path actually prunes with.
+
+        Prefers the plan the packed side-tables were built with (the one
+        whose probes/target_scan are baked into the compiled program);
+        falls back to the kernel plan's derivation pre-pack.  None when
+        pruning is off or rejected by the planner crossover.
+        """
+        if self._packed is not None:
+            cs = self._packed.cluster
+            return cs.plan if cs is not None else None
+        kp = self._kernel_plan
+        if kp is not None and kp.cluster is not None and kp.cluster.enabled:
+            return kp.cluster
+        return None
 
     def _replan(
         self,
@@ -286,6 +307,7 @@ class Index:
             device=device or (pin_from.device if pin_from else None),
             reduction_input_size_override=spec.reduction_input_size_override,
             storage=spec.storage, rescore=spec.rescore_enabled,
+            cluster=spec.cluster,
             **tiles,
         )
 
@@ -356,6 +378,45 @@ class Index:
                 "k_scan": plan.k_scan or plan.k,
             },
         }
+        cp = self._cluster_plan_in_effect()
+        report["cluster"] = {"mode": self.spec.cluster,
+                             "enabled": cp is not None}
+        if cp is None and plan.cluster is not None:
+            # auto mode, rejected by the crossover: record why.
+            report["cluster"]["predicted_speedup"] = \
+                plan.cluster.predicted_speedup
+        rejected_miss = (
+            self._packed.cluster_rejected_miss
+            if self._packed is not None else None
+        )
+        if cp is None and rejected_miss is not None:
+            # auto mode, planner crossover passed but the build-time
+            # empirical check measured a miss rate the decay model can't
+            # budget (structureless data): record the measurement.
+            report["cluster"].update({
+                "rejected_by": "sampled_miss_check",
+                "sampled_miss": rejected_miss,
+                "miss_budget": plan.cluster.miss_budget
+                if plan.cluster is not None else None,
+            })
+        if cp is not None:
+            k_scan = packedlib.scan_k_for(self.spec, cp.scan_rows)
+            decomp = cp.recall_decomposition(k_scan)
+            report["cluster"].update({
+                "num_clusters": cp.num_clusters,
+                "probes": cp.probes,
+                "rows_per_cluster": cp.rows_per_cluster,
+                "spill_capacity": cp.spill_capacity,
+                "scan_rows": cp.scan_rows,
+                "scanned_fraction": cp.scanned_fraction,
+                "predicted_speedup": cp.predicted_speedup,
+                # E[recall] = P(no bin collision) * P(no cluster miss):
+                # the product the planner certified against the target.
+                "collision_term": decomp["collision_term"],
+                "miss_term": decomp["miss_term"],
+                "expected_recall": decomp["expected_recall"],
+            })
+            report["expected_recall"] = decomp["expected_recall"]
         if self._packed is not None:
             report["packed"] = {
                 "n": self._packed.n,
@@ -383,6 +444,10 @@ class Index:
             if backend != "xla":
                 report["hlo"] = {"skipped": f"hlo check is xla-only "
                                  f"(resolved backend {backend!r})"}
+            elif cp is not None:
+                report["hlo"] = {"skipped": "hlo check models the dense "
+                                 "scan; the clustered program gathers a "
+                                 "pruned row set instead"}
             else:
                 pk = self.pack()
                 q = jax.ShapeDtypeStruct(
@@ -457,7 +522,8 @@ class Index:
         backend = self._resolve_backend()
         if self._packed is None or self._packed.backend != backend:
             self._packed = packedlib.pack_state(
-                self._db, self._live, self.metric, self.spec, backend
+                self._db, self._live, self.metric, self.spec, backend,
+                cluster_plan=self.kernel_plan.cluster,
             )
             self._place_packed()
         return self._packed
@@ -476,6 +542,17 @@ class Index:
         if pk.rescore_db is not None:
             pk.rescore_db = jax.device_put(pk.rescore_db, rows)
             pk.rescore_bias = jax.device_put(pk.rescore_bias, per_row)
+        if pk.cluster is not None:
+            # Cluster side-tables are small (O(C*d + C*R)) and hold GLOBAL
+            # row ids, so they are replicated — every shard probes the same
+            # clusters and masks down to the rows it owns.
+            repl2 = NamedSharding(self._mesh, P(None, None))
+            repl1 = NamedSharding(self._mesh, P(None))
+            cs = pk.cluster
+            cs.centroids = jax.device_put(cs.centroids, repl2)
+            cs.centroid_bias = jax.device_put(cs.centroid_bias, repl1)
+            cs.cluster_rows = jax.device_put(cs.cluster_rows, repl2)
+            cs.spill_rows = jax.device_put(cs.spill_rows, repl1)
 
     # -- search --------------------------------------------------------------
 
@@ -601,6 +678,36 @@ class Index:
         """
         spec = self.spec
         quantized = spec.storage != "f32"
+        clustered = pk.cluster is not None
+        if clustered:
+            # Statics come from the plan the tables were BUILT with (the
+            # live ``pk.cluster``), never ``kernel_plan.cluster``: after
+            # growth the re-derived plan may disagree with the carried
+            # tables until the lazy recluster fires.
+            cplan = pk.cluster.plan
+            probes, target_scan = cplan.probes, cplan.target_scan
+        if backend in ("xla", "pallas") and clustered:
+            trace_as = backend
+            if not quantized:
+                def fn(q, db, bias, ce, cb, cr, sr):
+                    return backends.cluster_search(
+                        q, db, bias, ce, cb, cr, sr,
+                        metric=spec.metric, k=spec.k, probes=probes,
+                        target_scan=target_scan,
+                        aggregate_to_topk=spec.aggregate_to_topk,
+                        use_bitonic=spec.use_bitonic, trace_as=trace_as,
+                    )
+                return fn
+            k_scan = packedlib.scan_k_for(spec, pk.n)
+            def fn(q, db, bias, scale, rs_db, rs_bias, ce, cb, cr, sr):
+                return backends.cluster_search_quant(
+                    q, db, bias, scale, rs_db, rs_bias, ce, cb, cr, sr,
+                    metric=spec.metric, k=spec.k, k_scan=k_scan,
+                    probes=probes, target_scan=target_scan,
+                    aggregate_to_topk=spec.aggregate_to_topk,
+                    use_bitonic=spec.use_bitonic, trace_as=trace_as,
+                )
+            return fn
         if backend == "xla":
             if not quantized:
                 def fn(q, db, bias):
@@ -662,9 +769,21 @@ class Index:
                 use_bitonic=spec.use_bitonic,
                 k_scan=packedlib.scan_k_for(spec, pk.n) if quantized
                 else None,
+                cluster_probes=probes if clustered else None,
+                cluster_target_scan=target_scan if clustered else None,
             )
             jitted = jax.jit(searcher)
             qsharding = NamedSharding(mesh, P(batch_axis, None))
+            if clustered and not quantized:
+                # The searcher signature puts the quant operands before the
+                # cluster tables, so the f32 clustered operand tuple
+                # (db, bias, cents, cbias, crows, srows) must skip them
+                # explicitly or the tables would bind to scale/rescore.
+                def fn(q, db, bias, ce, cb, cr, sr):
+                    return jitted(jax.device_put(q, qsharding),
+                                  db, bias, None, None, None,
+                                  ce, cb, cr, sr)
+                return fn
             def fn(q, *ops):
                 return jitted(jax.device_put(q, qsharding), *ops)
             return fn
@@ -679,6 +798,8 @@ class Index:
         """
         if backend == "sharded":
             mesh, spec = self._mesh, self.spec
+            clustered = pk.cluster is not None
+            cplan = pk.cluster.plan if clustered else None
             searcher = backends.make_sharded_search_fn(
                 mesh, metric=spec.metric, k=spec.k,
                 recall_target=spec.recall_target,
@@ -686,10 +807,23 @@ class Index:
                 use_bitonic=spec.use_bitonic,
                 k_scan=packedlib.scan_k_for(spec, pk.n)
                 if spec.storage != "f32" else None,
+                cluster_probes=cplan.probes if clustered else None,
+                cluster_target_scan=cplan.target_scan
+                if clustered else None,
             )
+            if clustered and spec.storage == "f32":
+                # Same positional-binding hazard as the block fn: the f32
+                # clustered operand tuple must skip the quant slots.
+                def call(q, ops):
+                    db, bias, ce, cb, cr, sr = ops
+                    return searcher(q, db, bias, None, None, None,
+                                    ce, cb, cr, sr)
+            else:
+                def call(q, ops):
+                    return searcher(q, *ops)
             stream = jax.jit(
                 lambda blocks, *ops: jax.lax.map(
-                    lambda q: searcher(q, *ops), blocks
+                    lambda q: call(q, ops), blocks
                 )
             )
             qsharding = NamedSharding(mesh, P(None, batch_axis, None))
@@ -763,6 +897,22 @@ class Index:
         self._num_live = self._num_live + r
         if had_packed and self._packed is None:
             self.pack()  # full repack — still at add() time, never at search
+        pk = self._packed
+        if pk is not None and pk.cluster is not None \
+                and pk.cluster.needs_recluster:
+            # Lazy recluster: incremental assignment spilled past the
+            # planner's imbalance threshold, so rebuild the coarse
+            # quantizer for the *current* capacity — at add() time, never
+            # at search.  Same capacity => same table shapes => the
+            # compiled programs stay valid (zero retraces in steady state).
+            cplan = planlib.plan_clusters(
+                n=self.capacity,
+                k_scan=packedlib.scan_k_for(self.spec, self.capacity),
+                recall_target=self.spec.recall_target,
+            )
+            if cplan.enabled:
+                packedlib.rebuild_cluster(pk, self._live, self.metric, cplan)
+                self._place_packed()
         return self
 
     def delete(self, ids) -> "Index":

@@ -77,7 +77,10 @@ class Metric:
         (internal max-scores negated once at the API boundary).
       prepare_database: db -> (db', row_bias or None).  Called once at
         ``Index.build`` (the precompute the paper calls "index-free":
-        O(N) element-wise work, no data structure).
+        O(N) element-wise work, no data structure).  The cluster-pruned
+        front-end (``repro.search.cluster``) reuses the same hook to put
+        k-means centroids into metric space, so a query scores centroids
+        and database rows under one biased-MIPS contract.
       prepare_queries: q -> q' applied on every search.
       exact: (q, db_raw, k) -> (values, indices) exact baseline obeying the
         same value contract (db_raw is the *unprepared* database).

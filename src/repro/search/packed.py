@@ -31,8 +31,17 @@ Mutation contract (what patches what — the invalidation rules):
     full pack — dtype cast + ``Metric.prepare_database`` over all rows.
 
 ``PACK_EVENTS`` counts these by name ("full_pack", "relayout",
-"rows_updated", "bias_patched") so tests and benchmarks can assert the
-steady state performs none of them.
+"rows_updated", "bias_patched" — plus, on clustered indexes only,
+"cluster_built" / "cluster_assigned" / "recluster") so tests and
+benchmarks can assert the steady state performs none of them.
+
+Clustered indexes (``repro.search.cluster``) add a :class:`ClusterState`
+of *side tables* — centroids, per-cluster row-id slots, a spill block —
+while the packed arrays above stay in user row order, byte-identical to
+the unclustered layout.  The tables are search operands like the bias
+row, so slot patches never invalidate compiled programs; deletes need no
+cluster work at all (the pruned scan gathers the fused bias row, which
+already carries the tombstones).
 """
 from __future__ import annotations
 
@@ -43,6 +52,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.binning import BinPlan, plan_bins, round_up
+from repro.search import cluster as clusterlib
 from repro.search import quant
 from repro.search.backends import MASK_VALUE
 from repro.search.metrics import Metric
@@ -53,6 +63,7 @@ __all__ = [
     "PackedState",
     "fuse_bias",
     "pack_state",
+    "rebuild_cluster",
     "reset_pack_events",
     "scan_k_for",
 ]
@@ -129,6 +140,15 @@ class PackedState:
     scale: Optional[jnp.ndarray] = None
     rescore_db: Optional[jnp.ndarray] = None
     rescore_bias: Optional[jnp.ndarray] = None
+    # cluster-pruning side tables (repro.search.cluster); None on
+    # unclustered layouts — in which case nothing below changes shape,
+    # content or operand order (the bit-identical guarantee).
+    cluster: Optional[clusterlib.ClusterState] = None
+    # set when the planner enabled pruning but the build-time empirical
+    # miss check measured this rate and rejected the tables (structureless
+    # data the decay model does not fit); the layout then behaves exactly
+    # like cluster="off".  Surfaced by Index.explain().
+    cluster_rejected_miss: Optional[float] = None
     # dtype the database was cast to before preparation/quantization;
     # incremental updates must repeat the same cast-then-prepare order so
     # slice and full packs agree exactly (db.dtype itself is the *stored*
@@ -158,16 +178,22 @@ class PackedState:
 
         ``(db, bias)`` for the f32 tier (today's exact call shape);
         ``(db, bias, scale, rescore_db, rescore_bias)`` for quantized
-        tiers (entries may be None — e.g. bf16 has no scale).  Passing
-        these as *operands* rather than closure captures is what lets
-        bias/row/scale patches leave compiled programs valid.
+        tiers (entries may be None — e.g. bf16 has no scale).  Clustered
+        layouts append the four side tables (centroids, centroid_bias,
+        cluster_rows, spill_rows) after either shape.  Passing these as
+        *operands* rather than closure captures is what lets bias/row/
+        scale/slot patches leave compiled programs valid.
         """
         if self.storage == "f32":
-            return (self.db, self.bias)
-        return (
-            self.db, self.bias, self.scale,
-            self.rescore_db, self.rescore_bias,
-        )
+            base: Tuple[Optional[jnp.ndarray], ...] = (self.db, self.bias)
+        else:
+            base = (
+                self.db, self.bias, self.scale,
+                self.rescore_db, self.rescore_bias,
+            )
+        if self.cluster is not None:
+            return base + self.cluster.operands()
+        return base
 
     # -- in-place patches (the cheap mutations) -------------------------------
 
@@ -200,6 +226,11 @@ class PackedState:
             prepped, metric_bias = qr.rows, qr.bias
         r = prepped.shape[0]
         slice_bias = fuse_bias(metric_bias, num_rows=r)
+        # Exact prepared slice (pre-padding) for cluster assignment below:
+        # the same space the centroids were derived in.
+        exact_slice = (
+            prepped if self.storage == "f32" else qr.exact_rows
+        )
         if prepped.shape[1] < self.db.shape[1]:  # pallas lane padding
             prepped = jnp.pad(
                 prepped, ((0, 0), (0, self.db.shape[1] - prepped.shape[1]))
@@ -216,6 +247,12 @@ class PackedState:
                 self.rescore_bias = self.rescore_bias.at[
                     start : start + r
                 ].set(fuse_bias(qr.exact_bias, num_rows=r))
+        if self.cluster is not None:
+            # Incremental nearest-centroid slotting (spill block absorbs
+            # overflow); O(r·C) — no repack, no table reshape, so the
+            # compiled pruned program stays valid.
+            clusterlib.assign_rows(self.cluster, exact_slice, start)
+            PACK_EVENTS["cluster_assigned"] += 1
         PACK_EVENTS["rows_updated"] += 1
 
     def delete_rows(self, ids: jnp.ndarray):
@@ -261,11 +298,17 @@ class PackedState:
                     rescore_bias, (0, grow), constant_values=MASK_VALUE
                 )
         PACK_EVENTS["relayout"] += 1
-        return _layout(
+        out = _layout(
             backend, rows, bias, new_n, self.d, spec,
             scale=scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
             compute_dtype=self.compute_dtype,
         )
+        # The side tables hold user row ids, which a relayout never
+        # renumbers — carry them verbatim (grown rows are slotted by the
+        # update_rows that writes them; a stale-geometry table is caught
+        # by Index.add's lazy-recluster trigger).
+        out.cluster = self.cluster
+        return out
 
 
 def scan_k_for(spec: SearchSpec, n: int) -> int:
@@ -341,12 +384,18 @@ def pack_state(
     metric: Metric,
     spec: SearchSpec,
     backend: str,
+    cluster_plan: Optional[clusterlib.ClusterPlan] = None,
 ) -> PackedState:
     """Full pack: dtype cast + metric preparation over all rows + layout.
 
     The only entry point that runs ``Metric.prepare_database`` on the
     whole database — everything after build goes through the incremental
     patches above.
+
+    ``cluster_plan``: an *enabled* ``repro.search.cluster.ClusterPlan``
+    builds the pruning side tables over the live prepared rows (k-means +
+    capacity-constrained assignment); ``None`` — or a plan the planner
+    left disabled — packs exactly as before.
 
     >>> import jax.numpy as jnp
     >>> from repro.search.metrics import get_metric
@@ -364,7 +413,9 @@ def pack_state(
         db, metric_bias = metric.prepare_database(db)
         bias = fuse_bias(metric_bias, live, num_rows=n)
         PACK_EVENTS["full_pack"] += 1
-        return _layout(backend, db, bias, n, d, spec)
+        state = _layout(backend, db, bias, n, d, spec)
+        _attach_cluster(state, db, bias, live, metric, cluster_plan, spec.k)
+        return state
     # Quantized tier: metric-prepare, quantize, fold the bias correction
     # (metric bias of the *stored* values) into the fused scan bias, and
     # optionally keep the full-precision rescore tail with its own fused
@@ -376,8 +427,91 @@ def pack_state(
         rescore_db = qr.exact_rows.astype(jnp.float32)
         rescore_bias = fuse_bias(qr.exact_bias, live, num_rows=n)
     PACK_EVENTS["full_pack"] += 1
-    return _layout(
+    state = _layout(
         backend, qr.rows, bias, n, d, spec,
         scale=qr.scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
         compute_dtype=str(db.dtype),
     )
+    exact_fused = (
+        rescore_bias
+        if rescore_bias is not None
+        else fuse_bias(qr.exact_bias, live, num_rows=n)
+    )
+    _attach_cluster(
+        state, qr.exact_rows, exact_fused, live, metric, cluster_plan, spec.k
+    )
+    return state
+
+
+def _attach_cluster(
+    state: PackedState,
+    exact_rows: jnp.ndarray,
+    fused_bias: jnp.ndarray,
+    live: Optional[jnp.ndarray],
+    metric: Metric,
+    cluster_plan: Optional[clusterlib.ClusterPlan],
+    k: int,
+) -> None:
+    """Build, validate and attach the pruning side tables (enabled plans).
+
+    ``exact_rows`` are the metric-prepared full-precision rows — the space
+    queries score in, so centroids derived here rank clusters exactly the
+    way the pruned scan will; ``fused_bias`` is the matching fused
+    (metric + tombstone) bias row.
+
+    The planner's crossover prices FLOPs, not geometry, so the decay
+    model's clusterable-data assumption is checked empirically here:
+    ``sampled_miss_rate`` measures the actual miss rate of the built
+    tables on sampled live rows, and a measurement past
+    ``miss_check_threshold`` discards them — the layout falls back to the
+    dense scan (bit-identical to ``cluster="off"``) instead of silently
+    trading recall for speed on data the model does not fit.
+    """
+    if cluster_plan is None or not cluster_plan.enabled:
+        return
+    cs = clusterlib.build_tables(
+        exact_rows, live, cluster_plan, metric.prepare_database
+    )
+    miss = clusterlib.sampled_miss_rate(cs, exact_rows, fused_bias, live, k)
+    if miss > clusterlib.miss_check_threshold(cluster_plan.miss_budget):
+        state.cluster_rejected_miss = miss
+        PACK_EVENTS["cluster_rejected"] += 1
+        return
+    state.cluster = cs
+    PACK_EVENTS["cluster_built"] += 1
+
+
+def rebuild_cluster(
+    state: PackedState,
+    live: Optional[jnp.ndarray],
+    metric: Metric,
+    cluster_plan: clusterlib.ClusterPlan,
+) -> None:
+    """Lazy recluster: re-derive centroids + tables from the packed rows.
+
+    Triggered by ``Index.add`` when ``ClusterState.needs_recluster`` says
+    spill pressure is past the planner threshold (the cluster analogue of
+    the lazy bin replan).  O(N·C·D) device k-means plus O(N) host
+    assignment — but *no* repack: the packed rows/bias/scale arrays are
+    reused as-is, and at unchanged capacity the new tables keep their
+    shapes, so compiled pruned programs stay valid (zero retrace).
+
+    Quantized tiers recluster from the exact rescore tail when present,
+    else from the dequantized stored rows — centroid geometry only needs
+    coarse structure, so tier rounding is immaterial.
+
+    No miss re-check here: the data passed the build-time check (the
+    clustered path only exists because it did), and dropping the tables
+    mid-life would change the compiled program's operand shape — a
+    retrace the steady-state contract forbids.
+    """
+    if state.storage == "f32":
+        rows = state.rows()
+    elif state.rescore_db is not None:
+        rows = state.rescore_db[: state.n]
+    else:
+        rows = quant.dequantize_rows(state.rows(), state.scale_row())
+    state.cluster = clusterlib.build_tables(
+        rows, live, cluster_plan, metric.prepare_database
+    )
+    PACK_EVENTS["recluster"] += 1

@@ -58,6 +58,7 @@ from repro.core.roofline import (
     cops_per_dot,
     partial_reduce_cost,
 )
+from repro.search import cluster as clusterlib
 from repro.search import quant
 from repro.search.spec import SearchSpec
 
@@ -66,6 +67,7 @@ __all__ = [
     "PlanCache",
     "plan_search",
     "plan_buckets",
+    "plan_clusters",
     "tune_plan",
     "detect_device",
     "hlo_check",
@@ -74,6 +76,8 @@ __all__ = [
     "DEFAULT_QUERY_BLOCK",
     "SCORE_TILE_BUDGET",
     "MIN_SERVE_BUCKET",
+    "CLUSTER_GATHER_PENALTY",
+    "CLUSTER_SPEEDUP_BAR",
 ]
 
 # The legacy hard-coded tiles, now the *anchors* the model shrinks from when
@@ -92,6 +96,20 @@ SCORE_TILE_BUDGET = 64 * 2**20
 # tile of query rows, so a lone 1-row request is not padded to a full
 # query_block.
 MIN_SERVE_BUCKET = 8
+
+# Cluster-pruning cost model (repro.search.cluster).  A gathered candidate
+# row costs more than a streamed one — the pruned scan trades the fused
+# kernel's sequential database stream for random row gathers — so pruned
+# rows are priced at this multiple of a full-scan row when deciding the
+# crossover.  4x is deliberately pessimistic for HBM gather granularity;
+# it keeps the planner from enabling pruning on workloads where the win
+# would be marginal.
+CLUSTER_GATHER_PENALTY = 4.0
+
+# Pruning is enabled only when the modeled row cost (C centroid dots +
+# gather-penalized scanned rows) beats the full scan by at least this
+# factor: below it, the bit-identical full scan is the better default.
+CLUSTER_SPEEDUP_BAR = 2.0
 
 _DTYPE_BYTES = {
     "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
@@ -221,6 +239,14 @@ class Plan:
     # the over-fetched k the scan's bin layout was planned for (== k for
     # the f32 tier; quant.scan_k otherwise).
     k_scan: int = 0
+    # cluster-pruned front-end (repro.search.cluster): None when the build
+    # asked for cluster="off"; a ClusterPlan otherwise — with
+    # ``enabled=False`` recording that ``cluster="auto"`` evaluated the
+    # crossover and rejected pruning for this N (the bit-identical case).
+    # When enabled, ``expected_recall`` above is the *product* bound
+    # (collision term over the scanned slots x the cluster-miss term) and
+    # the roofline numbers model the gathered pruned program.
+    cluster: Optional[clusterlib.ClusterPlan] = None
 
     @property
     def bin_size(self) -> int:
@@ -440,6 +466,73 @@ def _rescore_cost(m: int, l: int, k_scan: int, d: int) -> KernelCost:
     return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
 
 
+def plan_clusters(
+    *, n: int, k_scan: int, recall_target: float
+) -> clusterlib.ClusterPlan:
+    """Derive the cluster-pruning parameters — and the enable decision.
+
+    All geometry comes from ``repro.search.cluster``'s closed forms (C =
+    2^ceil(log2(sqrt(N))), rho from the geometric-decay miss budget, 25 %
+    balance headroom per cluster, an always-scanned spill block); this
+    wrapper adds the *cost* decision: per query the pruned path pays C
+    centroid dots plus ``CLUSTER_GATHER_PENALTY`` x S gathered-row dots
+    against the full scan's N, and pruning is enabled only when that wins
+    by ``CLUSTER_SPEEDUP_BAR`` — plus sanity floors (the scanned slot
+    count must comfortably hold the over-fetched ``k_scan``, and pruning a
+    scan smaller than its own candidate set is never a win).
+
+    >>> plan_clusters(n=8192, k_scan=10, recall_target=0.95).enabled
+    True
+    >>> plan_clusters(n=2048, k_scan=10, recall_target=0.95).enabled
+    False
+    """
+    num_clusters = clusterlib.num_clusters_for(n)
+    rows_per_cluster = clusterlib.rows_per_cluster_for(n, num_clusters)
+    probes = clusterlib.probes_for(recall_target, num_clusters)
+    spill = clusterlib.spill_capacity_for(n)
+    budget = clusterlib.miss_budget_for(recall_target)
+    # Inner-scan target so the product (collision x miss) meets the
+    # original target: target / (1 - budget) = 2t/(1+t) < 1 always.
+    target_scan = recall_target / (1.0 - budget)
+    scan_rows = probes * rows_per_cluster + spill
+    speedup = n / (num_clusters + CLUSTER_GATHER_PENALTY * scan_rows)
+    enabled = (
+        speedup >= CLUSTER_SPEEDUP_BAR
+        and probes < num_clusters
+        and scan_rows < n
+        and scan_rows >= 4 * k_scan
+    )
+    return clusterlib.ClusterPlan(
+        n=n, num_clusters=num_clusters, rows_per_cluster=rows_per_cluster,
+        probes=probes, spill_capacity=spill, miss_budget=budget,
+        target_scan=target_scan, predicted_speedup=speedup, enabled=enabled,
+    )
+
+
+def _cluster_cost(m: int, d: int, l: int, cp: clusterlib.ClusterPlan,
+                  dtype_bytes: int, db_bytes: int) -> KernelCost:
+    """Cost of the pruned gathered scan (all backends share this program).
+
+    Centroid scoring is a small dense matmul; the candidate rows are then
+    *gathered* — every query reads its own S rows with no cross-query
+    reuse, so the database term is ``m*S*d`` at the storage tier's width
+    (the pruning win is that ``S << N``, not better locality).  The fused
+    Eq. 20 kernel is bypassed on this path: a gather-dominated scan has no
+    sequential stream to fuse.
+    """
+    c, s = cp.num_clusters, cp.scan_rows
+    flops = 2.0 * m * (c + s) * d
+    hbm = (
+        dtype_bytes * m * d                    # queries
+        + 4.0 * c * d + 4.0 * c               # centroid table + bias
+        + 4.0 * m * s                          # gathered candidate ids
+        + db_bytes * m * s * d                 # gathered rows, no reuse
+        + 4.0 * (2.0 * m * s + 2.0 * m * l)    # score tile + bin winners
+    )
+    cops = float(m) * (c + s)
+    return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
 def plan_buckets(
     max_batch: int, *, min_bucket: int = MIN_SERVE_BUCKET
 ) -> Tuple[int, ...]:
@@ -512,6 +605,7 @@ def plan_search(
     query_block: Optional[int] = None,
     storage: str = "f32",
     rescore: Optional[bool] = None,
+    cluster: str = "off",
 ) -> Plan:
     """Derive every kernel parameter analytically (Eq. 4–10 + Eq. 13–14).
 
@@ -532,6 +626,14 @@ def plan_search(
     stored-dtype sublane alignment of ``block_n``, and — when ``rescore``
     (default: on for quantized tiers) — the over-fetched scan k
     (``quant.scan_k``) plus the exact second pass's O(M·L·D) cost.
+
+    ``cluster="auto"`` evaluates the cluster-pruned front-end
+    (:func:`plan_clusters`): the returned plan carries a ``ClusterPlan``
+    and — when it is past the cost crossover — the roofline prediction
+    models the gathered pruned program and ``expected_recall`` becomes the
+    product bound (collision over the scanned slots x the miss term).
+    ``cluster="off"`` (the default) never evaluates it: ``plan.cluster``
+    stays ``None`` and nothing else changes.
 
     >>> plan_search(n=100, d=8, k=1, device="tpu_v4").num_bins >= 1
     True
@@ -563,6 +665,12 @@ def plan_search(
         )
     rescore_on = (storage != "f32") if rescore is None else rescore
     ks = quant.scan_k(storage, k, n=n) if rescore_on else k
+    if cluster not in ("auto", "off"):
+        raise ValueError(f'cluster must be "auto" or "off", got {cluster!r}')
+    cplan = (
+        plan_clusters(n=n, k_scan=ks, recall_target=recall_target)
+        if cluster == "auto" else None
+    )
 
     bins = plan_bins(
         n, ks, recall_target,
@@ -604,6 +712,14 @@ def plan_search(
         # The dense xla path (and each sharded shard) runs the *unpadded*
         # operands unfused — model the program that actually executes.
         cost = _dense_cost(m_eff, n, d, bins.num_bins, dbytes, sbytes)
+    expected = bins.expected_recall
+    if cplan is not None and cplan.enabled:
+        # The pruned gathered program replaces the scan cost wholesale,
+        # and the guarantee becomes the collision x miss product over the
+        # S scanned slots (the full-scan bin fields above still describe
+        # the packed layout, which clustering leaves untouched).
+        cost = _cluster_cost(m_eff, d, bins.num_bins, cplan, dbytes, sbytes)
+        expected = cplan.recall_decomposition(ks)["expected_recall"]
     if rescore_on:
         extra = _rescore_cost(m_eff, bins.num_bins, ks, d)
         cost = KernelCost(
@@ -618,7 +734,7 @@ def plan_search(
         m=m or 0, n=n, d=d, k=k, metric=metric, dtype=dtype_name,
         recall_target=recall_target, backend=backend, device=device,
         num_bins=bins.num_bins, log2_bin_size=bins.log2_bin_size,
-        padded_n=bins.padded_n, expected_recall=bins.expected_recall,
+        padded_n=bins.padded_n, expected_recall=expected,
         d_pad=d_pad, block_m=bm, block_n=bn, query_block=qb,
         stream=True,
         flops=cost.flops, hbm_bytes=cost.hbm_bytes, cops=cost.cops,
@@ -627,7 +743,7 @@ def plan_search(
         predicted_s=predicted_s, predicted_qps=m_eff / predicted_s,
         source="user" if pinned else "model",
         reduction_input_size_override=reduction_input_size_override,
-        storage=storage, rescore=rescore_on, k_scan=ks,
+        storage=storage, rescore=rescore_on, k_scan=ks, cluster=cplan,
     )
 
 
@@ -669,6 +785,7 @@ def _with_measured_tiles(plan: Plan, bm: int, bn: int, qb: int) -> Plan:
         reduction_input_size_override=plan.reduction_input_size_override,
         block_m=bm, max_block_n=bn, query_block=qb,
         storage=plan.storage, rescore=plan.rescore,
+        cluster="auto" if plan.cluster is not None else "off",
     )
     return dataclasses.replace(refreshed, source="measure")
 
@@ -703,6 +820,10 @@ class PlanCache:
             # Tiers tile and cost differently; never serve a measured f32
             # layout to a quantized build (or vice versa).
             base += f"/st-{plan.storage}" + ("" if plan.rescore else "-raw")
+        if plan.cluster is not None and plan.cluster.enabled:
+            # The pruned gathered program times nothing like the full
+            # scan; keep its measurements in their own bucket.
+            base += "/cl"
         if spec is not None and not (
             spec.block_m is None
             and spec.max_block_n is None

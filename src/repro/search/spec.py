@@ -39,6 +39,14 @@ class SearchSpec:
         recall guarantee holds in expectation while database HBM traffic
         drops 2–4x (Eq. 10/20).  ``"f32"`` is bit-identical to the
         pre-quantization path.
+      cluster: cluster-pruned scan front-end (``repro.search.cluster``).
+        ``"auto"`` (the default) lets the planner decide: above the cost
+        crossover the index builds a k-means coarse quantizer and each
+        query scans only its top-rho clusters (plus the spill block);
+        below the crossover nothing is built and the search is
+        bit-identical to ``"off"``.  ``"off"`` never evaluates pruning.
+        There are no other values — every cluster parameter (C, rho,
+        capacities) is derived by the planner, never supplied by the user.
       rescore: run the exact second pass on quantized tiers.  ``None``
         (default) resolves to True whenever ``storage != "f32"`` and
         ``aggregate_to_topk`` holds; False skips the f32 rescore tail
@@ -91,6 +99,7 @@ class SearchSpec:
     backend: str = "auto"
     dtype: Optional[str] = None
     storage: str = "f32"
+    cluster: str = "auto"
     rescore: Optional[bool] = None
     block_m: Optional[int] = None
     max_block_n: Optional[int] = None
@@ -113,6 +122,11 @@ class SearchSpec:
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
             )
         quant.storage_bytes(self.storage)  # validate the tier name
+        if self.cluster not in ("auto", "off"):
+            raise ValueError(
+                f'cluster must be "auto" or "off", got {self.cluster!r} — '
+                "cluster parameters are planner-derived, not user knobs"
+            )
         if self.rescore and self.storage == "f32":
             raise ValueError(
                 "rescore=True requires a quantized storage tier "

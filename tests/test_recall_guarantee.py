@@ -44,25 +44,53 @@ def _hoeffding_eps(n_samples: int, delta: float = DELTA) -> float:
     return math.sqrt(math.log(1.0 / delta) / (2.0 * n_samples))
 
 
+def _gaussian_draw(kd, kq, n, m, d):
+    """The default i.i.d. Gaussian (db, queries) draw."""
+    return jax.random.normal(kd, (n, d)), jax.random.normal(kq, (m, d))
+
+
+def _mixture_draw(kd, kq, n, m, d, components=64, sep=2.5):
+    """Mixture-of-Gaussians (db, queries) draw — queries from the SAME
+    component centers as the database.
+
+    This is the regime the cluster-pruned front-end's miss bound models
+    (``repro.search.cluster``): neighbour mass concentrated in a few
+    clusters, so pruned probing finds it.  On i.i.d. Gaussian data every
+    point is nearly equidistant and NO coarse quantizer can prune without
+    large misses — that is a property of the data, not a code bug, which
+    is why the cluster corners below use this draw instead of reusing
+    ``_gaussian_draw``.
+    """
+    kc, ka, kn = jax.random.split(kd, 3)
+    centers = jax.random.normal(kc, (components, d)) * sep
+    assign = jax.random.randint(ka, (n,), 0, components)
+    db = centers[assign] + jax.random.normal(kn, (n, d))
+    kqa, kqn = jax.random.split(kq)
+    qassign = jax.random.randint(kqa, (m,), 0, components)
+    q = centers[qassign] + jax.random.normal(kqn, (m, d))
+    return db, q
+
+
 def _recall_samples(metric, backend, k, recall_target, *, trials, m, seed=0,
-                    storage="f32"):
+                    storage="f32", cluster="auto", n=N, d=D,
+                    draw=_gaussian_draw):
     """Per-query recall samples over ``trials`` fresh (db, queries) draws.
 
     Returns (samples, expected_recall) where ``expected_recall`` is the
     planner's analytic Eq. 13 value for the layout it chose (for quantized
     ``storage`` tiers: the over-fetched ``((L-1)/L)^(K'-1)`` bound the
-    two-pass guarantee rests on).
+    two-pass guarantee rests on; for a cluster-pruned index: the product
+    P(no bin collision) x P(no cluster miss)).
     """
     samples = []
     expected = None
     root = jax.random.PRNGKey(seed)
     for t in range(trials):
         kd, kq = jax.random.split(jax.random.fold_in(root, t))
-        db = jax.random.normal(kd, (N, D))
-        q = jax.random.normal(kq, (m, D))
+        db, q = draw(kd, kq, n, m, d)
         index = Index.build(
             db, metric=metric, k=k, recall_target=recall_target,
-            backend=backend, storage=storage,
+            backend=backend, storage=storage, cluster=cluster,
         )
         assert index.kernel_plan.source == "model"  # the default config
         # Eq. 14: the planner's layout must meet the target analytically.
@@ -153,6 +181,56 @@ def test_recall_meets_target_quantized(
         f"{metric}/{backend}/{storage} k={k}: {mean:.4f} vs over-fetched "
         f"E[recall] {expected:.4f} (margin {eps:.4f})"
     )
+
+
+# Cluster-pruned front-end (repro.search.cluster): above the planner's
+# crossover the scan covers only the top-rho clusters plus the spill
+# block, and the guarantee becomes P(no bin collision) x P(no cluster
+# miss) >= recall_target — still with ZERO user tuning parameters (the
+# spec only says cluster="auto").  N is above the crossover so the
+# planner actually enables pruning; the corpus is the mixture draw the
+# miss bound models (see _mixture_draw).  One corner stacks cluster
+# pruning over the int8 tier, so the quantized over-fetch and the pruned
+# gather compose in a single search.
+CLUSTER_N = 8192
+CLUSTER_CORNERS = [
+    ("mips", "xla", "f32", 10, 0.95, 2, 256),
+    ("l2", "xla", "f32", 32, 0.90, 2, 256),
+    ("cosine", "xla", "f32", 4, 0.95, 2, 256),
+    ("l2", "xla", "int8", 10, 0.95, 2, 256),
+    ("l2", "pallas", "f32", 16, 0.90, 1, 128),
+]
+
+
+@pytest.mark.parametrize(
+    "metric,backend,storage,k,recall_target,trials,m", CLUSTER_CORNERS
+)
+def test_recall_meets_target_cluster_pruned(
+    metric, backend, storage, k, recall_target, trials, m
+):
+    samples, expected = _recall_samples(
+        metric, backend, k, recall_target, trials=trials, m=m, seed=17,
+        storage=storage, cluster="auto", n=CLUSTER_N, draw=_mixture_draw,
+    )
+    # The planner must have actually enabled pruning at this N — otherwise
+    # this test silently degenerates to the dense path.
+    probe = Index.build(
+        jax.random.normal(jax.random.PRNGKey(0), (CLUSTER_N, D)),
+        metric=metric, k=k, recall_target=recall_target, backend=backend,
+        storage=storage,
+    )
+    assert probe.kernel_plan.cluster is not None
+    assert probe.kernel_plan.cluster.enabled
+    eps = _hoeffding_eps(len(samples))
+    mean = float(samples.mean())
+    assert mean >= recall_target - eps, (
+        f"{metric}/{backend}/{storage} k={k}: cluster-pruned recall "
+        f"{mean:.4f} below target {recall_target} beyond the {eps:.4f} "
+        f"margin over {len(samples)} samples — the collision x miss "
+        f"guarantee broke"
+    )
+    # the planner's own product bound must itself certify the target
+    assert expected >= recall_target
 
 
 def test_recall_is_approximate_not_exact():
