@@ -13,6 +13,14 @@ served at coalesced-batch efficiency instead of one dispatch each:
   * **coalesce-vs-direct**: R requests totalling B rows pushed through the
     server (virtual clock, zero sleeps) against one pre-formed (B, D)
     ``Index.search`` — the serving overhead everything above pays.
+  * **fault-rate axis**: the closed-loop load repeated at 0 / 1% / 5%
+    injected transient dispatch faults (seeded ``FaultInjector``) —
+    goodput (successfully served rows/s), p50/p99 of *successful*
+    requests, retry/failure counters: what the retry-with-backoff layer
+    costs and saves under an unreliable dispatch path;
+  * **snapshot**: ``Index.save`` / ``Index.restore`` wall time for the
+    benchmark index (``time_to_restore_s`` is the cold-replica recovery
+    story), with bit-parity asserted against the live index.
 
 Writes ``BENCH_serve.json`` (commit full runs; CI smoke runs write to an
 untracked path, exactly like ``bench_search.py``).
@@ -31,7 +39,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import shutil
+import tempfile
 import threading
 import time
 
@@ -39,6 +50,7 @@ import jax
 import numpy as np
 
 from repro.search import Index, SearchSpec, SearchServer, ServeConfig, backends
+from repro.search.faults import FaultInjector, InjectedFault
 from repro.search.serve import VirtualClock
 
 N, D, K = 4096, 64, 10
@@ -278,6 +290,122 @@ def bench_coalesce_vs_direct(index, total_rows, request_rows, repeats, emit):
     return row, dispatches, batches
 
 
+FAULT_RATES = (0.0, 0.01, 0.05)
+
+
+def bench_fault_rate(index, fault_rate, clients, requests_per_client, emit,
+                     seed=11):
+    """Closed-loop load with seeded transient dispatch faults injected.
+
+    The retry loop absorbs most faults (bounded retries + backoff); the
+    rest fail their batch with the typed error.  Goodput counts only the
+    rows of requests that actually returned results, and the latency
+    percentiles are over successful requests — so this row answers the
+    operator question directly: what does an x% flaky dispatch path do to
+    delivered throughput and tail latency?
+    """
+    inj = FaultInjector(seed=seed, rates={"serve.dispatch": fault_rate})
+    server = SearchServer(
+        index, ServeConfig(max_batch=MAX_BATCH, max_delay_s=0.001),
+        warmup=True, faults=inj,
+    )
+    queries = [
+        np.asarray(jax.random.normal(jax.random.PRNGKey(300 + c),
+                                     (REQUEST_ROWS, D)))
+        for c in range(clients)
+    ]
+    latencies, failures, errors = [], [], []
+
+    def client(cid):
+        try:
+            for _ in range(requests_per_client):
+                t = server.submit(queries[cid])
+                try:
+                    t.result(timeout=120)
+                except InjectedFault:
+                    failures.append(t)  # typed taxonomy: expected under load
+                else:
+                    latencies.append(t.latency_s)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    total = clients * requests_per_client
+    s = server.stats()
+    row = {
+        "mode": "fault_rate",
+        "fault_rate": fault_rate,
+        "clients": clients,
+        "requests": total,
+        "request_rows": REQUEST_ROWS,
+        "ok_requests": len(latencies),
+        "failed_requests": len(failures),
+        "wall_s": wall,
+        "goodput_qps": len(latencies) * REQUEST_ROWS / wall,
+        "transient_faults": s["transient_faults"],
+        "dispatch_retries": s["dispatch_retries"],
+        "failed_batches": s["failed_batches"],
+        **_percentiles(latencies),
+    }
+    server.close()
+    emit(
+        f"fault-rate {fault_rate:.0%}: {row['goodput_qps']:.0f} qps goodput "
+        f"({row['ok_requests']}/{total} ok), p50 {row['p50_ms']:.2f}ms "
+        f"p99 {row['p99_ms']:.2f}ms, {row['dispatch_retries']} retries, "
+        f"{row['failed_batches']} failed batches"
+    )
+    return row
+
+
+def bench_snapshot(index, emit, repeats=3):
+    """Crash-safe snapshot round-trip: save + restore wall time, with
+    restored-replica bit-parity asserted (the recovery-correctness half
+    of the ``time_to_restore_s`` story)."""
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (64, D)))
+    direct = index.search(q)
+    tmp = tempfile.mkdtemp(prefix="bench_snap_")
+    path = os.path.join(tmp, "snap")
+    try:
+        save_s = restore_s = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            index.save(path)
+            save_s = min(save_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            restored = Index.restore(path)
+            out = restored.search(q)
+            out.values.block_until_ready()  # restored replica is HOT here
+            restore_s = min(restore_s, time.perf_counter() - t0)
+        np.testing.assert_array_equal(
+            np.asarray(out.indices), np.asarray(direct.indices)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.values), np.asarray(direct.values)
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    row = {
+        "mode": "snapshot",
+        "rows": int(index.size),
+        "save_s": save_s,
+        "time_to_restore_s": restore_s,  # load + repack-free first search
+    }
+    emit(
+        f"snapshot: save {save_s * 1e3:.1f}ms, restore-to-first-result "
+        f"{restore_s * 1e3:.1f}ms ({row['rows']} rows, bit-identical)"
+    )
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -305,11 +433,26 @@ def main() -> None:
             results.append(
                 bench_poisson(index, rate, args.duration, emit=print)
             )
+        fault_rows = [
+            bench_fault_rate(index, rate, clients=4, requests_per_client=50,
+                             emit=print)
+            for rate in FAULT_RATES
+        ]
+        results.extend(fault_rows)
+        results.append(bench_snapshot(index, emit=print))
     else:
         results.append(
             bench_closed_loop(index, clients=4, requests_per_client=10,
                               emit=print)
         )
+        fault_rows = [
+            bench_fault_rate(index, rate, clients=2, requests_per_client=10,
+                             emit=print)
+            for rate in (0.0, 0.05)
+        ]
+        results.extend(fault_rows)
+        snapshot_row = bench_snapshot(index, emit=print, repeats=1)
+        results.append(snapshot_row)
 
     report = {
         "meta": {
@@ -340,12 +483,23 @@ def main() -> None:
             f"coalesced serving is {parity['server_over_per_request']:.2f}x "
             "per-request dispatching — the coalescing win disappeared"
         )
-        closed = results[-1]
+        closed = next(r for r in results if r["mode"] == "closed_loop")
         assert closed["dispatches_per_request"] <= 1.0, (
             "closed-loop serving issued more than one dispatch per request "
             f"on average: {closed['dispatches_per_request']:.2f} — "
             "coalescing is not happening"
         )
+        clean, faulty = fault_rows[0], fault_rows[-1]
+        assert clean["fault_rate"] == 0.0
+        assert clean["failed_requests"] == 0 and clean["dispatch_retries"] == 0, (
+            f"fault-free serving saw retries/failures: {clean}"
+        )
+        # every request terminated (result or typed error) — none lost
+        for row in fault_rows:
+            assert row["ok_requests"] + row["failed_requests"] == row["requests"], row
+        # the retry layer keeps delivering under a 5% flaky dispatch path
+        assert faulty["goodput_qps"] > 0 and faulty["ok_requests"] > 0, faulty
+        assert snapshot_row["time_to_restore_s"] > 0
         print("smoke contract OK")
 
 

@@ -22,20 +22,25 @@ else
     python scripts/shim_lint.py
     # Perf contracts first (fail fast on re-introduced per-search padding /
     # dispatch-loop regressions, cluster-pruning regressions, and on
-    # serving-layer coalescing regressions), then the benchmark smoke runs
-    # (planner-vs-legacy, one-dispatch-per-coalesced-batch + stream-path
-    # parity, and pruned-scan speedup/recall contracts), docs lint +
-    # public-API doctests, then the rest of the fast tier
-    # (test_packed/test_serve/test_cluster already ran — don't repeat
-    # them).  (smoke runs write to untracked paths so they never clobber
-    # the committed full-grid BENCH_search.json / BENCH_serve.json seeds)
+    # serving-layer coalescing regressions), then the fault-injection
+    # suite (deadline/retry/watchdog/snapshot contracts; its seeded chaos
+    # smoke is @pytest.mark.slow and runs in the full tier), then the
+    # benchmark smoke runs (planner-vs-legacy,
+    # one-dispatch-per-coalesced-batch + stream-path parity, pruned-scan
+    # speedup/recall contracts, and the fault-rate/snapshot serve
+    # contracts), docs lint + public-API doctests, then the rest of the
+    # fast tier (test_packed/test_serve/test_cluster/test_faults already
+    # ran — don't repeat them).  (smoke runs write to untracked paths so
+    # they never clobber the committed full-grid BENCH_search.json /
+    # BENCH_serve.json seeds)
     python -m pytest -x -q tests/test_packed.py tests/test_serve.py \
         tests/test_cluster.py
+    python -m pytest -x -q -m "not slow" tests/test_faults.py
     python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
     python benchmarks/bench_serve.py --smoke --out BENCH_serve.smoke.json
     python scripts/docs_lint.py
     python -m pytest -x -q --doctest-modules src/repro/search
     exec python -m pytest -x -q -m "not slow" \
         --ignore=tests/test_packed.py --ignore=tests/test_serve.py \
-        --ignore=tests/test_cluster.py
+        --ignore=tests/test_cluster.py --ignore=tests/test_faults.py
 fi

@@ -29,6 +29,8 @@ __all__ = [
     "restore_checkpoint",
     "latest_step",
     "AsyncCheckpointer",
+    "save_snapshot",
+    "load_snapshot",
 ]
 
 
@@ -102,6 +104,104 @@ def restore_checkpoint(directory: str, like, step: Optional[int] = None,
         else:
             leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+# -- named snapshots (single logical state, e.g. Index.save/restore) ---------
+
+def _encode_array(a) -> Tuple[np.ndarray, str]:
+    """npz-safe encoding.  ``ml_dtypes`` types (bfloat16) do not survive a
+    npz round-trip (they load back as raw void records), so they are
+    stored as same-width unsigned bit patterns plus the logical dtype
+    name; everything numpy-native passes through unchanged."""
+    a = np.asarray(a)
+    if a.dtype.name == "bfloat16":
+        return a.view(np.uint16), "bfloat16"
+    return a, a.dtype.name
+
+
+def _decode_array(a: np.ndarray, logical: str) -> np.ndarray:
+    if logical == "bfloat16":
+        import ml_dtypes  # ships with jax
+
+        return a.view(ml_dtypes.bfloat16)
+    return a
+
+
+def _fsync_dir_contents(path: str) -> None:
+    for name in os.listdir(path):
+        fd = os.open(os.path.join(path, name), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+
+def save_snapshot(path: str, arrays: dict, meta: dict) -> str:
+    """Atomically write one named snapshot directory.
+
+    Protocol (crash-safe at every step):
+      1. write ``<path>.tmp/`` (arrays.npz + META.json), fsync the files;
+      2. move any existing committed ``<path>`` aside to ``<path>.old``
+         (POSIX rename cannot replace a non-empty directory);
+      3. rename ``<path>.tmp`` -> ``<path>``  — the commit point;
+      4. delete ``<path>.old``.
+
+    A crash before step 3 leaves the old snapshot committed (the ``.tmp``
+    is garbage, ignored by readers); a crash between 2 and 3 leaves
+    ``.old``, which :func:`load_snapshot` falls back to.  The
+    ``checkpoint.commit`` fault point fires between 1 and 2, so chaos
+    tests can assert exactly this invariant.
+    """
+    from repro.search import faults  # leaf module; lazy to avoid cycles
+
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp, old = path + ".tmp", path + ".old"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    encoded, logical = {}, {}
+    for key, value in arrays.items():
+        encoded[key], logical[key] = _encode_array(value)
+    meta = dict(meta, array_dtypes=logical)
+    np.savez(os.path.join(tmp, "arrays.npz"), **encoded)
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump(meta, f)
+    _fsync_dir_contents(tmp)
+    faults.fire("checkpoint.commit")
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(path):
+        os.rename(path, old)
+    os.rename(tmp, path)  # commit
+    if os.path.exists(old):
+        shutil.rmtree(old, ignore_errors=True)
+    return path
+
+
+def load_snapshot(path: str) -> Tuple[dict, dict]:
+    """Load a committed snapshot: returns ``(meta, arrays)``.
+
+    Falls back to ``<path>.old`` when only the aside copy exists (a crash
+    landed between the move-aside and the commit rename); ``.tmp`` dirs
+    are never read — they are by definition uncommitted.
+    """
+    path = os.path.abspath(path)
+    if not os.path.exists(os.path.join(path, "META.json")):
+        old = path + ".old"
+        if os.path.exists(os.path.join(old, "META.json")):
+            path = old
+        else:
+            raise FileNotFoundError(f"no committed snapshot at {path}")
+    with open(os.path.join(path, "META.json")) as f:
+        meta = json.load(f)
+    logical = meta.get("array_dtypes", {})
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {
+            key: _decode_array(data[key], logical.get(key, ""))
+            for key in data.files
+        }
+    return meta, arrays
 
 
 class AsyncCheckpointer:

@@ -68,7 +68,21 @@ many small concurrent requests into planner-sized micro-batches (padded to
 a fixed bucket ladder so nothing retraces), dispatches each coalesced
 batch once over the packed/streamed path, and scatters per-request slices
 back — with admission backpressure, a deterministic virtual-clock mode for
-tests, and double-buffered host→device query staging.
+tests, and double-buffered host→device query staging.  Fault tolerance
+(``repro.search.faults``, ``docs/operations.md``): per-request deadlines
+(``DeadlineExceeded`` — expired tickets are never dispatched), bounded
+retry-with-backoff for transient dispatch faults, a worker watchdog that
+restarts a dead worker without dropping queued tickets, sustained-overload
+shedding (``Overloaded`` with a ``retry_after_s`` estimate), and
+``SearchServer.health()`` — all driveable deterministically through the
+seeded ``FaultInjector`` (``TransientFault`` / ``FatalFault`` /
+``WorkerDeath`` at the named ``INJECTION_POINTS``).
+
+Crash-safe snapshots: ``Index.save(path)`` / ``Index.restore(path)``
+persist the packed state, cluster tables and quantization artifacts
+through ``repro.checkpoint``'s atomic-rename commit (``SNAPSHOT_FORMAT`` /
+``SNAPSHOT_VERSION`` stamped) — a restored replica serves bit-identical
+results without re-running build/k-means/quantization.
 
 ``repro.core.knn``, ``repro.kernels.ops`` and ``repro.core.distributed``
 remain as deprecated thin shims over this package.
@@ -109,8 +123,21 @@ from repro.search.functional import (
     mips,
     search,
 )
-from repro.search.cluster import ClusterPlan, ClusterState
-from repro.search.index import Index, SearchResult
+from repro.search.cluster import ClusterPlan, ClusterState, query_miss_rate
+from repro.search.faults import (
+    INJECTION_POINTS,
+    FatalFault,
+    FaultInjector,
+    InjectedFault,
+    TransientFault,
+    WorkerDeath,
+)
+from repro.search.index import (
+    SNAPSHOT_FORMAT,
+    SNAPSHOT_VERSION,
+    Index,
+    SearchResult,
+)
 from repro.search.metrics import (
     Metric,
     available_metrics,
@@ -123,6 +150,8 @@ from repro.search.packed import (
     fuse_bias,
     pack_state,
     reset_pack_events,
+    restore_state,
+    snapshot_state,
 )
 from repro.search.quant import (
     STORAGE_TIERS,
@@ -132,6 +161,7 @@ from repro.search.quant import (
     scan_k,
     storage_bytes,
     storage_dtype,
+    validate_restored,
 )
 from repro.search.plan import (
     Plan,
@@ -145,6 +175,8 @@ from repro.search.plan import (
 )
 from repro.search.serve import (
     SERVE_EVENTS,
+    DeadlineExceeded,
+    Overloaded,
     QueueFull,
     SearchServer,
     SearchTicket,
@@ -217,6 +249,22 @@ __all__ = [
     "ServeConfig",
     "VirtualClock",
     "QueueFull",
+    "Overloaded",
+    "DeadlineExceeded",
+    # fault injection (repro.search.faults)
+    "FaultInjector",
+    "InjectedFault",
+    "TransientFault",
+    "FatalFault",
+    "WorkerDeath",
+    "INJECTION_POINTS",
+    # crash-safe snapshots
+    "SNAPSHOT_FORMAT",
+    "SNAPSHOT_VERSION",
+    "snapshot_state",
+    "restore_state",
+    "validate_restored",
+    "query_miss_rate",
     # observability
     "TRACE_COUNTS",
     "DISPATCH_COUNTS",

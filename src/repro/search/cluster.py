@@ -111,7 +111,10 @@ __all__ = [
     "miss_check_threshold",
     "num_clusters_for",
     "probes_for",
+    "query_miss_rate",
+    "restore_tables",
     "sampled_miss_rate",
+    "snapshot_tables",
     "spill_capacity_for",
 ]
 
@@ -266,6 +269,13 @@ class ClusterState:
     counts: np.ndarray          # host (C,) slots used per cluster
     spill_count: int = 0
     spill_baseline: int = 0     # spill level right after (re)build
+    # Served-query miss monitor accumulators (repro.search.serve samples a
+    # fraction of real served queries through ``query_miss_rate``).  The
+    # build-time check above uses db rows as query proxies, so these are
+    # the only signal that covers out-of-distribution *query* streams —
+    # the one assumption no build-time measurement can verify.
+    served_miss_checked: int = 0
+    served_miss_missed: int = 0
 
     def operands(self) -> Tuple[jnp.ndarray, ...]:
         """The positional device operands the pruned scan consumes."""
@@ -273,6 +283,17 @@ class ClusterState:
             self.centroids, self.centroid_bias,
             self.cluster_rows, self.spill_rows,
         )
+
+    @property
+    def served_miss_rate(self) -> Optional[float]:
+        """Sampled miss rate of real served queries (None before any
+        sample).  Compare against ``miss_check_threshold(plan.miss_budget)``
+        — a sustained rate above it means the query stream is out of the
+        distribution the tables were certified on (rebuild with
+        ``cluster="off"``)."""
+        if self.served_miss_checked == 0:
+            return None
+        return self.served_miss_missed / self.served_miss_checked
 
     @property
     def needs_recluster(self) -> bool:
@@ -451,7 +472,6 @@ def sampled_miss_rate(
     is recovered from the tables themselves, so the measurement covers
     exactly the layout the pruned scan will gather from.
     """
-    plan = state.plan
     rows = jnp.asarray(rows, jnp.float32)
     capacity = rows.shape[0]
     if live is None:
@@ -462,6 +482,51 @@ def sampled_miss_rate(
     sample = live_idx[(np.arange(m) * live_idx.size) // m]
     q = rows[jnp.asarray(sample)]
     k_eff = max(1, min(k, live_idx.size))
+    missed, checked = _miss_counts(state, q, rows, bias_row, k_eff)
+    return missed / checked
+
+
+def query_miss_rate(
+    state: ClusterState,
+    queries: jnp.ndarray,
+    rows: jnp.ndarray,
+    bias_row: jnp.ndarray,
+    k: int,
+) -> Tuple[int, int]:
+    """Cluster-miss counts for *real* query rows — the served-traffic
+    monitor behind ``SearchServer.health()``.
+
+    Same measurement as :func:`sampled_miss_rate` (true top-``k`` of a
+    dense scored pass vs the clusters the probe schedule visits, spill
+    rows always hit) but over caller-supplied queries instead of db-row
+    proxies, and returning raw ``(missed, checked)`` neighbour-pair counts
+    so a server can accumulate a running estimate across samples.
+
+    ``rows`` / ``bias_row`` must be the *exact* (full-precision) prepared
+    rows and fused bias — ``PackedState.exact_rows_bias()`` — so the
+    "true" neighbours are the real ones, not tier-rounded ones, and
+    tombstoned rows can never count as misses.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    rows = jnp.asarray(rows, jnp.float32)
+    k_eff = max(1, min(k, rows.shape[0]))
+    return _miss_counts(state, q, rows, bias_row, k_eff)
+
+
+def _miss_counts(
+    state: ClusterState,
+    q: jnp.ndarray,
+    rows: jnp.ndarray,
+    bias_row: jnp.ndarray,
+    k_eff: int,
+) -> Tuple[int, int]:
+    """Shared miss measurement: of the true top-``k_eff`` neighbour pairs
+    of ``q`` (dense scored pass), how many live in clusters the probe
+    schedule would NOT visit?  Membership is recovered from the tables
+    themselves, so the measurement covers exactly the layout the pruned
+    scan gathers from.  Returns host ints ``(missed, checked)``."""
+    plan = state.plan
+    capacity = rows.shape[0]
     scores = q @ rows.T + jnp.asarray(bias_row, jnp.float32)[None, :]
     _, true_ids = jax.lax.top_k(scores, k_eff)
     caff = q @ state.centroids.T + state.centroid_bias[None, :]
@@ -479,7 +544,57 @@ def sampled_miss_rate(
     probed = np.asarray(probed)
     hit = in_spill[true_ids]
     hit |= (member[true_ids][:, :, None] == probed[:, None, :]).any(-1)
-    return float(1.0 - hit.mean())
+    return int(hit.size - hit.sum()), int(hit.size)
+
+
+def snapshot_tables(state: ClusterState) -> Tuple[dict, dict]:
+    """Serialize a ClusterState into ``(arrays, meta)`` for a snapshot.
+
+    Everything is captured — device tables, host fill counts, spill
+    bookkeeping, the frozen plan, the served-miss accumulators — so a
+    restored replica resumes the incremental-assignment contract exactly
+    where the original left off (no k-means re-run, no slot drift).
+    """
+    arrays = {
+        "cluster/centroids": state.centroids,
+        "cluster/centroid_bias": state.centroid_bias,
+        "cluster/cluster_rows": state.cluster_rows,
+        "cluster/spill_rows": state.spill_rows,
+        "cluster/counts": np.asarray(state.counts),
+    }
+    meta = {
+        "plan": dataclasses.asdict(state.plan),
+        "spill_count": int(state.spill_count),
+        "spill_baseline": int(state.spill_baseline),
+        "served_miss_checked": int(state.served_miss_checked),
+        "served_miss_missed": int(state.served_miss_missed),
+    }
+    return arrays, meta
+
+
+def restore_tables(arrays: dict, meta: dict) -> ClusterState:
+    """Inverse of :func:`snapshot_tables` (loud on unknown plan fields —
+    the same version-skew contract as ``SearchSpec.from_json_dict``)."""
+    plan_dict = dict(meta["plan"])
+    known = {f.name for f in dataclasses.fields(ClusterPlan)}
+    unknown = sorted(set(plan_dict) - known)
+    if unknown:
+        raise ValueError(
+            f"snapshot cluster plan carries unknown fields {unknown} — "
+            "written by a newer version? Rebuild the index or upgrade."
+        )
+    return ClusterState(
+        plan=ClusterPlan(**plan_dict),
+        centroids=jnp.asarray(arrays["cluster/centroids"]),
+        centroid_bias=jnp.asarray(arrays["cluster/centroid_bias"]),
+        cluster_rows=jnp.asarray(arrays["cluster/cluster_rows"]),
+        spill_rows=jnp.asarray(arrays["cluster/spill_rows"]),
+        counts=np.asarray(arrays["cluster/counts"]),
+        spill_count=int(meta["spill_count"]),
+        spill_baseline=int(meta["spill_baseline"]),
+        served_miss_checked=int(meta.get("served_miss_checked", 0)),
+        served_miss_missed=int(meta.get("served_miss_missed", 0)),
+    )
 
 
 def assign_rows(state: ClusterState, rows: jnp.ndarray, start: int) -> None:

@@ -34,11 +34,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.binning import BinPlan, plan_bins, round_up
 from repro.search import backends, packed as packedlib, plan as planlib
+from repro.search import cluster as clusterlib
+from repro.search import faults as faultslib
 from repro.search import quant
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
 
-__all__ = ["Index", "SearchResult"]
+__all__ = ["Index", "SNAPSHOT_FORMAT", "SNAPSHOT_VERSION", "SearchResult"]
+
+# Snapshot stamping (Index.save / Index.restore).  The format string guards
+# against loading some other repro.checkpoint artifact as an index; the
+# version gates forward compatibility — restore refuses snapshots written
+# by a NEWER version (older ones are handled field-by-field).
+SNAPSHOT_FORMAT = "repro.search.index"
+SNAPSHOT_VERSION = 1
 
 
 class SearchResult(NamedTuple):
@@ -417,6 +426,20 @@ class Index:
                 "expected_recall": decomp["expected_recall"],
             })
             report["expected_recall"] = decomp["expected_recall"]
+            cs = self._packed.cluster if self._packed is not None else None
+            if cs is not None:
+                # Served-query miss monitor (fed by SearchServer sampling):
+                # the build-time check used db rows as query proxies; this
+                # is the live estimate over *real* traffic, the only signal
+                # for out-of-distribution query streams.
+                rate = cs.served_miss_rate
+                threshold = clusterlib.miss_check_threshold(cp.miss_budget)
+                report["cluster"]["served_miss"] = {
+                    "sampled_pairs": cs.served_miss_checked,
+                    "miss_rate": rate,
+                    "warn_threshold": threshold,
+                    "warning": rate is not None and rate > threshold,
+                }
         if self._packed is not None:
             report["packed"] = {
                 "n": self._packed.n,
@@ -849,6 +872,9 @@ class Index:
         growth re-lays-out the packed operands (one device copy) without
         re-deriving the metric precompute of existing rows.
         """
+        faultslib.fire("index.add")  # before any state changes: add is
+        # all-or-nothing under injection, so a failed extend never leaves
+        # a half-patched packed state behind.
         rows = jnp.atleast_2d(jnp.asarray(rows))
         if rows.shape[1] != self.dim:
             raise ValueError(f"row dim {rows.shape[1]} != index dim {self.dim}")
@@ -923,6 +949,7 @@ class Index:
         patches — no host sync, so a serving loop's dispatch pipeline is
         never blocked (the live count materializes lazily via ``size``).
         """
+        faultslib.fire("index.delete")  # before any patch: all-or-nothing
         ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
         self._live = self._live.at[ids].set(False)
         # Recount rather than decrement: ids may repeat (within a call or
@@ -932,6 +959,79 @@ class Index:
         if self._packed is not None:
             self._packed.delete_rows(ids)
         return self
+
+    # -- crash-safe snapshots ------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write a crash-safe snapshot directory; returns the committed path.
+
+        Serializes the raw database + live mask AND the packed search
+        state — prepared rows, fused bias, quant scale/rescore tails,
+        cluster side tables — via ``repro.checkpoint.save_snapshot``
+        (tmp-dir + fsync + atomic-rename commit; an existing snapshot at
+        ``path`` is replaced atomically, and a crash mid-save always
+        leaves a loadable snapshot behind).  :meth:`restore` therefore
+        re-runs *nothing*: no metric preparation, no quantization, no
+        k-means — and returns bit-identical search results.
+
+        Meshed (sharded) indexes save their full logical arrays; restore
+        always lands unmeshed — call ``.shard(mesh)`` on the restored
+        index before searching a ``backend="sharded"`` spec.
+        """
+        from repro.checkpoint.checkpoint import save_snapshot
+
+        faultslib.fire("index.save")
+        pk = self.pack()
+        arrays, pk_meta = packedlib.snapshot_state(pk)
+        arrays["db"] = self._db
+        arrays["live"] = self._live
+        meta = {
+            "format": SNAPSHOT_FORMAT,
+            "version": SNAPSHOT_VERSION,
+            "spec": self.spec.to_json_dict(),
+            "size": self._size,
+            "num_live": self.size,  # materializes the lazy device scalar
+            "capacity_block": self._capacity_block,
+            "packed": pk_meta,
+        }
+        return save_snapshot(path, arrays, meta)
+
+    @classmethod
+    def restore(cls, path: str) -> "Index":
+        """Load a snapshot written by :meth:`save` — no build work re-run.
+
+        >>> import tempfile, os, jax.numpy as jnp
+        >>> idx = Index.build(jnp.eye(32), metric="mips", k=2)
+        >>> with tempfile.TemporaryDirectory() as d:
+        ...     _ = idx.save(os.path.join(d, "snap"))
+        ...     r = Index.restore(os.path.join(d, "snap"))
+        >>> r.size == idx.size
+        True
+        """
+        from repro.checkpoint.checkpoint import load_snapshot
+
+        meta, arrays = load_snapshot(path)
+        if meta.get("format") != SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"{path} is not an index snapshot "
+                f"(format={meta.get('format')!r})"
+            )
+        if int(meta.get("version", 0)) > SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {meta['version']} is newer than this "
+                f"code's {SNAPSHOT_VERSION} — upgrade to restore it"
+            )
+        spec = SearchSpec.from_json_dict(meta["spec"])
+        index = cls(
+            spec,
+            jnp.asarray(arrays["db"]),
+            jnp.asarray(arrays["live"]),
+            size=int(meta["size"]),
+            num_live=int(meta["num_live"]),
+            capacity_block=int(meta["capacity_block"]),
+        )
+        index._packed = packedlib.restore_state(arrays, meta["packed"], spec)
+        return index
 
     # -- sharding ------------------------------------------------------------
 

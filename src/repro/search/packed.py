@@ -31,9 +31,10 @@ Mutation contract (what patches what — the invalidation rules):
     full pack — dtype cast + ``Metric.prepare_database`` over all rows.
 
 ``PACK_EVENTS`` counts these by name ("full_pack", "relayout",
-"rows_updated", "bias_patched" — plus, on clustered indexes only,
-"cluster_built" / "cluster_assigned" / "recluster") so tests and
-benchmarks can assert the steady state performs none of them.
+"rows_updated", "bias_patched", "restore" — plus, on clustered indexes
+only, "cluster_built" / "cluster_assigned" / "recluster") so tests and
+benchmarks can assert the steady state performs none of them (and that a
+snapshot restore performs *only* "restore" — no pack, no k-means).
 
 Clustered indexes (``repro.search.cluster``) add a :class:`ClusterState`
 of *side tables* — centroids, per-cluster row-id slots, a spill block —
@@ -65,7 +66,9 @@ __all__ = [
     "pack_state",
     "rebuild_cluster",
     "reset_pack_events",
+    "restore_state",
     "scan_k_for",
+    "snapshot_state",
 ]
 
 # event name -> count of packing work performed (test observability hook;
@@ -172,6 +175,23 @@ class PackedState:
             return None
         flat = self.scale[0] if self.scale.ndim == 2 else self.scale
         return flat[: self.n]
+
+    def exact_rows_bias(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-precision prepared rows + fused bias, (n, d) / (n,).
+
+        The exact scoring source the monitors and the lazy recluster use:
+        the f32 tier's own rows, a quantized tier's rescore tail, or —
+        rescore disabled — the dequantized stored rows (coarse structure
+        only, fine for centroid geometry and miss sampling).
+        """
+        if self.storage == "f32":
+            return self.rows(), self.bias_row()
+        if self.rescore_db is not None:
+            return self.rescore_db[: self.n], self.rescore_bias[: self.n]
+        return (
+            quant.dequantize_rows(self.rows(), self.scale_row()),
+            self.bias_row(),
+        )
 
     def operands(self) -> Tuple[Optional[jnp.ndarray], ...]:
         """The positional device operands a search dispatch consumes.
@@ -505,13 +525,95 @@ def rebuild_cluster(
     mid-life would change the compiled program's operand shape — a
     retrace the steady-state contract forbids.
     """
-    if state.storage == "f32":
-        rows = state.rows()
-    elif state.rescore_db is not None:
-        rows = state.rescore_db[: state.n]
-    else:
-        rows = quant.dequantize_rows(state.rows(), state.scale_row())
+    rows, _ = state.exact_rows_bias()
     state.cluster = clusterlib.build_tables(
         rows, live, cluster_plan, metric.prepare_database
     )
     PACK_EVENTS["recluster"] += 1
+
+
+# -- crash-safe snapshots (Index.save / Index.restore) ------------------------
+
+def snapshot_state(state: PackedState) -> Tuple[dict, dict]:
+    """Serialize a PackedState into ``(arrays, meta)`` for a snapshot.
+
+    Captures everything a bit-identical restore needs *without* re-running
+    any build work: the laid-out device arrays verbatim (including pallas
+    padding — so the restored operands are byte-identical to the saved
+    ones), the layout constants, and the cluster side tables.  The BinPlan
+    is NOT serialized: ``plan_bins`` is deterministic in (n, k_scan,
+    recall_target), so :func:`restore_state` recomputes it and *verifies*
+    the recomputed bin size against the recorded one — which doubles as a
+    version-skew detector for the binning math itself.
+    """
+    arrays = {"packed/db": state.db, "packed/bias": state.bias}
+    if state.scale is not None:
+        arrays["packed/scale"] = state.scale
+    if state.rescore_db is not None:
+        arrays["packed/rescore_db"] = state.rescore_db
+        arrays["packed/rescore_bias"] = state.rescore_bias
+    meta = {
+        "backend": state.backend,
+        "n": state.n,
+        "d": state.d,
+        "bin_size": state.bin_size,
+        "block_n": state.block_n,
+        "storage": state.storage,
+        "compute_dtype": state.compute_dtype,
+        "cluster_rejected_miss": state.cluster_rejected_miss,
+        "cluster": None,
+    }
+    if state.cluster is not None:
+        cl_arrays, cl_meta = clusterlib.snapshot_tables(state.cluster)
+        arrays.update(cl_arrays)
+        meta["cluster"] = cl_meta
+    return arrays, meta
+
+
+def restore_state(arrays: dict, meta: dict, spec: SearchSpec) -> PackedState:
+    """Rebuild a PackedState from :func:`snapshot_state` output.
+
+    No metric preparation, no quantization, no k-means — the arrays land
+    on device exactly as saved, which is what makes restored search
+    results bit-identical to the original replica's.
+    """
+    n = int(meta["n"])
+    plan = plan_bins(
+        n, scan_k_for(spec, n), spec.recall_target,
+        reduction_input_size_override=spec.reduction_input_size_override,
+    )
+    if plan.bin_size != meta["bin_size"]:
+        raise ValueError(
+            f"snapshot bin_size={meta['bin_size']} but this version plans "
+            f"bin_size={plan.bin_size} for the same (n, k, target) — the "
+            "binning math changed since the snapshot was written; rebuild "
+            "the index"
+        )
+    scale = arrays.get("packed/scale")
+    quant.validate_restored(
+        meta["storage"], arrays["packed/db"].dtype, has_scale=scale is not None
+    )
+    rescore_db = arrays.get("packed/rescore_db")
+    state = PackedState(
+        backend=meta["backend"],
+        db=jnp.asarray(arrays["packed/db"]),
+        bias=jnp.asarray(arrays["packed/bias"]),
+        n=n,
+        d=int(meta["d"]),
+        plan=plan,
+        bin_size=int(meta["bin_size"]),
+        block_n=int(meta["block_n"]),
+        storage=meta["storage"],
+        scale=None if scale is None else jnp.asarray(scale),
+        rescore_db=None if rescore_db is None else jnp.asarray(rescore_db),
+        rescore_bias=(
+            None if rescore_db is None
+            else jnp.asarray(arrays["packed/rescore_bias"])
+        ),
+        cluster_rejected_miss=meta.get("cluster_rejected_miss"),
+        compute_dtype=meta.get("compute_dtype", "float32"),
+    )
+    if meta.get("cluster") is not None:
+        state.cluster = clusterlib.restore_tables(arrays, meta["cluster"])
+    PACK_EVENTS["restore"] += 1
+    return state

@@ -68,6 +68,7 @@ __all__ = [
     "scan_k",
     "storage_bytes",
     "storage_dtype",
+    "validate_restored",
 ]
 
 # The legal ``SearchSpec.storage`` values, in decreasing bytes/element.
@@ -194,6 +195,36 @@ def check_metric_storage(metric, storage: str) -> None:
             "a supported tier, or register the metric with a "
             "quantization-compatible preparation (normalized/bounded rows) "
             "and declare it via Metric(storage_tiers=...)."
+        )
+
+
+def validate_restored(storage: str, db_dtype, has_scale: bool) -> None:
+    """Consistency check for a snapshot-restored packed database.
+
+    A snapshot's META names the storage tier and its arrays carry the
+    stored rows — if they disagree (truncated write that dodged the
+    commit protocol, hand-edited META, version skew) the search kernels
+    would fail deep inside a dispatch with a dtype error, or worse,
+    silently misinterpret int8 codes.  Fail here instead, actionably.
+
+    >>> import jax.numpy as jnp
+    >>> validate_restored("int8", jnp.int8, has_scale=True)
+    >>> validate_restored("f32", jnp.float32, has_scale=False)
+    """
+    expected = storage_dtype(storage)
+    if is_quantized(storage) and jnp.dtype(db_dtype) != jnp.dtype(expected):
+        raise ValueError(
+            f"snapshot claims storage={storage!r} but the stored rows are "
+            f"{jnp.dtype(db_dtype).name} (expected "
+            f"{jnp.dtype(expected).name}) — corrupt or version-skewed "
+            "snapshot; rebuild the index"
+        )
+    if (storage == "int8") != has_scale:
+        raise ValueError(
+            f"snapshot storage={storage!r} "
+            + ("is missing its per-row scale table"
+               if storage == "int8" else "carries an unexpected scale table")
+            + " — corrupt or version-skewed snapshot; rebuild the index"
         )
 
 

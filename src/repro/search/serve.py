@@ -36,6 +36,29 @@ The moving parts, and the contracts tests pin down:
     scatter happens after the next dispatch is enqueued.  Host-side
     gather/scatter work therefore overlaps device compute instead of
     serializing with it.
+  * **Fault tolerance.**  Every request can carry a deadline
+    (``submit(..., deadline_s=...)``): expired tickets fail fast with
+    :class:`DeadlineExceeded` and are NEVER dispatched (no dead work on
+    the device).  Transient dispatch faults (``repro.search.faults``
+    taxonomy, or anything in ``ServeConfig.retryable``) are retried with
+    exponential backoff up to ``max_dispatch_retries``; exhausted retries
+    fail the batch's tickets with the typed error.  A dead worker (thread
+    exception / injected :class:`~repro.search.faults.WorkerDeath`) is
+    restarted by a watchdog without dropping queued tickets — the popped
+    batch is requeued at the front.  Sustained overload (admission queue
+    full past ``overload_grace_s``) sheds load with a structured
+    :class:`Overloaded` error carrying a ``retry_after_s`` estimate —
+    callers get an explicit backpressure signal, never silent recall
+    loss.  ``SearchServer.health()`` reports status
+    ("ok" / "degraded" / "overloaded"), worker liveness, the failure
+    counters, and the served-query cluster-miss estimate.
+  * **Served-query cluster-miss monitor.**  On clustered indexes, every
+    ``miss_sample_every``-th batch samples ``miss_sample_rows`` real
+    query rows through ``repro.search.cluster.query_miss_rate``; the
+    running estimate surfaces in ``health()["cluster_miss"]`` and
+    ``Index.explain()["cluster"]["served_miss"]``.  A rate above the
+    ``miss_check_threshold`` warn level flags an out-of-distribution
+    query stream (the documented ``cluster="off"`` case).
 
 Typical use::
 
@@ -43,13 +66,18 @@ Typical use::
     from repro.search.serve import SearchServer
 
     server = SearchServer(Index.build(db, k=10), warmup=True)
-    ticket = server.submit(q)          # from any thread
+    ticket = server.submit(q, deadline_s=0.1)   # from any thread
     values, indices = ticket.result()  # (m_i, k) slices of one big dispatch
     server.close()
 
-``SERVE_EVENTS`` counts batches / coalesced requests / padded rows
-globally (same taxonomy style as ``DISPATCH_COUNTS`` / ``PACK_EVENTS``);
-``SearchServer.stats()`` reports the per-server view.
+``SERVE_EVENTS`` counts batches / coalesced requests / padded rows /
+oversize batches — plus the failure taxonomy: "deadline_expired",
+"transient_faults", "dispatch_retries", "failed_batches",
+"worker_deaths", "worker_restarts", "requeued_tickets", "load_shed",
+"miss_sampled_rows" — globally (same taxonomy style as
+``DISPATCH_COUNTS`` / ``PACK_EVENTS``); ``SearchServer.stats()`` reports
+the per-server view.  ``docs/operations.md`` is the runbook mapping each
+counter to its failure mode and operator action.
 """
 from __future__ import annotations
 
@@ -64,10 +92,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.search import cluster as clusterlib
+from repro.search import faults as faultslib
 from repro.search.index import Index, SearchResult
 from repro.search.plan import plan_buckets
 
 __all__ = [
+    "DeadlineExceeded",
+    "Overloaded",
     "QueueFull",
     "SERVE_EVENTS",
     "SearchServer",
@@ -79,7 +111,8 @@ __all__ = [
 
 # event name -> count across every server (test observability hook, same
 # reset-act-assert style as backends.DISPATCH_COUNTS / packed.PACK_EVENTS):
-# "batches", "coalesced_requests", "padded_rows", "oversize_batches".
+# "batches", "coalesced_requests", "padded_rows", "oversize_batches", plus
+# the failure taxonomy listed in the module docstring.
 SERVE_EVENTS = collections.Counter()
 
 
@@ -90,6 +123,38 @@ def reset_serve_events() -> None:
 
 class QueueFull(RuntimeError):
     """Admission control rejected a request: the pending-row queue is full."""
+
+
+class Overloaded(QueueFull):
+    """Sustained-overload load shed: the queue has been full past
+    ``ServeConfig.overload_grace_s``.  Subclasses :class:`QueueFull` (old
+    handlers keep working) and adds ``retry_after_s`` — the server's
+    estimate of when queued work will have drained — so callers can back
+    off intelligently instead of hammering a saturated server."""
+
+    def __init__(self, rows_pending: int, retry_after_s: float):
+        self.rows_pending = rows_pending
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"server overloaded: {rows_pending} rows pending past the "
+            f"overload grace window; retry in ~{retry_after_s:.3f}s"
+        )
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before its batch was dispatched.
+
+    Raised through ``SearchTicket.result()``.  The contract is strict:
+    an expired ticket is failed at batch-formation (or retry) time and
+    its rows are NEVER dispatched — deadlines exist to stop dead work
+    from reaching the device, not just to time out the caller."""
+
+    def __init__(self, rows: int, deadline: float, now: float):
+        self.deadline = deadline
+        super().__init__(
+            f"deadline {deadline:.6f} passed (now {now:.6f}) before "
+            f"dispatch; request of {rows} rows was never dispatched"
+        )
 
 
 class VirtualClock:
@@ -139,6 +204,24 @@ class ServeConfig:
         virtual clock (the driver decides when to ``step``).
       admission_timeout_s: longest a wall-clock ``submit`` blocks for queue
         space before raising :class:`QueueFull`.
+      max_dispatch_retries: redispatch attempts after a retryable fault
+        (0 disables retries); exhausted retries fail the batch's tickets
+        with the typed error.
+      retry_backoff_s: base backoff before the first retry, doubled per
+        attempt.  Wall-clock servers sleep; virtual-clock servers advance
+        the clock (so backoff interacts with deadlines deterministically).
+      retryable: exception types the retry loop redispatches on.  Default
+        :class:`repro.search.faults.TransientFault` — extend with runtime
+        exception types known to be transient on your platform.
+      overload_grace_s: how long the admission queue must stay full before
+        ``submit`` sheds load with :class:`Overloaded` instead of
+        blocking/raising :class:`QueueFull`.  0 sheds immediately on a
+        full queue.
+      miss_sample_every: on clustered indexes, sample the served-query
+        cluster-miss rate every Nth dispatched batch (0 disables the
+        monitor).
+      miss_sample_rows: query rows scored per sample (clipped to the
+        batch's live rows).
     """
 
     max_batch: Optional[int] = None
@@ -146,6 +229,12 @@ class ServeConfig:
     max_pending_rows: int = 4096
     max_delay_s: float = 0.002
     admission_timeout_s: float = 5.0
+    max_dispatch_retries: int = 2
+    retry_backoff_s: float = 0.001
+    retryable: Tuple[type, ...] = (faultslib.TransientFault,)
+    overload_grace_s: float = 0.25
+    miss_sample_every: int = 32
+    miss_sample_rows: int = 8
 
     def __post_init__(self):
         if self.max_batch is not None and self.max_batch <= 0:
@@ -156,6 +245,17 @@ class ServeConfig:
             )
         if self.max_delay_s < 0 or self.admission_timeout_s < 0:
             raise ValueError("delays/timeouts must be non-negative")
+        if self.max_dispatch_retries < 0:
+            raise ValueError(
+                f"max_dispatch_retries must be >= 0, got "
+                f"{self.max_dispatch_retries}"
+            )
+        if self.retry_backoff_s < 0 or self.overload_grace_s < 0:
+            raise ValueError("backoff/grace must be non-negative")
+        if self.miss_sample_every < 0 or self.miss_sample_rows <= 0:
+            raise ValueError(
+                "miss_sample_every must be >= 0 and miss_sample_rows > 0"
+            )
         if self.buckets is not None:
             object.__setattr__(
                 self, "buckets", tuple(int(b) for b in self.buckets)
@@ -173,16 +273,19 @@ class SearchTicket:
     """
 
     __slots__ = (
-        "rows", "k", "submitted_at", "completed_at",
+        "rows", "k", "deadline", "submitted_at", "completed_at",
         "_queries", "_offset", "_server", "_done", "_event", "_result",
         "_error",
     )
 
-    def __init__(self, server: "SearchServer", queries: np.ndarray, k: int):
+    def __init__(self, server: "SearchServer", queries: np.ndarray, k: int,
+                 deadline: Optional[float] = None):
         self._server = server
         self._queries = queries
         self.rows = queries.shape[0]
         self.k = k
+        # Absolute deadline on the server's clock; None = no deadline.
+        self.deadline = deadline
         self.submitted_at = server._now()
         self.completed_at: Optional[float] = None
         self._offset = 0
@@ -268,8 +371,12 @@ class SearchServer:
         *,
         clock: Optional[VirtualClock] = None,
         warmup: bool = False,
+        faults: Optional[faultslib.FaultInjector] = None,
     ):
         self.index = index
+        # Per-server injector for the serve.* points; None falls through
+        # to the process-global ``faults.active()`` registry.
+        self._faults = faults
         self.config = config or ServeConfig()
         spec = index.spec
         if not spec.aggregate_to_topk:
@@ -309,19 +416,43 @@ class SearchServer:
         self._stats = collections.Counter()
         self._latency_sum = 0.0
         self._worker: Optional[threading.Thread] = None
+        # Overload tracking: when the admission queue first went (and
+        # stayed) full; None while there is space.
+        self._full_since: Optional[float] = None
+        # EWMA of wall seconds per service cycle — the Overloaded
+        # retry-after estimate's drain rate.
+        self._service_ema = 0.0
+        self._miss_sample_countdown = self.config.miss_sample_every
 
         if warmup:
             self.precompile()
         if not self._manual:
             self._worker = threading.Thread(
-                target=self._worker_loop, name="SearchServer", daemon=True
+                target=self._worker_main, name="SearchServer", daemon=True
             )
             self._worker.start()
 
-    # -- time ----------------------------------------------------------------
+    # -- time / fault plumbing -----------------------------------------------
 
     def _now(self) -> float:
         return self._clock.now() if self._manual else time.monotonic()
+
+    def _fire(self, point: str) -> None:
+        """Hit a serve.* injection point (per-server injector first, then
+        the process-global registry; no-op when neither is installed)."""
+        inj = self._faults if self._faults is not None else faultslib.active()
+        if inj is not None:
+            inj.fire(point)
+
+    def _backoff(self, delay: float) -> None:
+        """Retry backoff: sleep on the wall clock, advance a virtual one
+        (so backoff-vs-deadline interactions stay deterministic in tests)."""
+        if delay <= 0:
+            return
+        if self._manual:
+            self._clock.advance(delay)
+        else:
+            time.sleep(delay)
 
     # -- admission -----------------------------------------------------------
 
@@ -331,15 +462,21 @@ class SearchServer:
         backpressure bound applies to)."""
         return self._pending_rows
 
-    def submit(self, queries, k: Optional[int] = None) -> SearchTicket:
+    def submit(self, queries, k: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> SearchTicket:
         """Enqueue one request: ``(rows, D)`` (or a single ``(D,)`` row).
 
         ``k`` is the request's own neighbour budget — it must not exceed
         the index's ``spec.k`` (the coalesced dispatch computes ``spec.k``
         winners once; per-request budgets are slices of that, which is what
-        lets requests with different ``k`` share a batch).  Returns a
-        :class:`SearchTicket`; raises :class:`QueueFull` when admission
-        control rejects the request.
+        lets requests with different ``k`` share a batch).  ``deadline_s``
+        is a relative deadline on the server's clock: if it passes before
+        the request's batch dispatches, the ticket fails with
+        :class:`DeadlineExceeded` and its rows are never dispatched.
+        Returns a :class:`SearchTicket`; raises :class:`QueueFull` when
+        admission control rejects the request, or its subclass
+        :class:`Overloaded` (with a ``retry_after_s`` estimate) under
+        sustained overload.
         """
         q = np.asarray(queries, self._qdtype)
         if q.ndim == 1:
@@ -356,6 +493,8 @@ class SearchServer:
                 f"per-request k={k} must be in [1, spec.k={self.index.spec.k}]"
                 " — build the index with the largest k any request needs"
             )
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
         rows = q.shape[0]
         with self._lock:
             if self._closed:
@@ -366,27 +505,46 @@ class SearchServer:
                     f"({self.config.max_pending_rows} rows)"
                 )
             if self._pending_rows + rows > self.config.max_pending_rows:
+                now = self._now()
+                if self._full_since is None:
+                    self._full_since = now
+                if now - self._full_since >= self.config.overload_grace_s:
+                    self._shed_locked()  # raises Overloaded
                 if self._manual:
                     raise QueueFull(
                         f"{self._pending_rows} rows pending; admitting {rows} "
                         f"more exceeds max_pending_rows="
                         f"{self.config.max_pending_rows}"
                     )
-                deadline = time.monotonic() + self.config.admission_timeout_s
+                timeout = time.monotonic() + self.config.admission_timeout_s
                 while self._pending_rows + rows > self.config.max_pending_rows:
-                    remaining = deadline - time.monotonic()
+                    remaining = timeout - time.monotonic()
                     if remaining <= 0 or self._closed:
                         raise QueueFull(
                             f"no queue space for {rows} rows within "
                             f"{self.config.admission_timeout_s}s"
                         )
                     self._not_full.wait(remaining)
+                    if (
+                        self._pending_rows + rows
+                        > self.config.max_pending_rows
+                        and self._full_since is not None
+                        and self._now() - self._full_since
+                        >= self.config.overload_grace_s
+                    ):
+                        # The queue stayed full past the grace window while
+                        # this thread waited: fail fast with the structured
+                        # signal instead of stacking blocked submitters.
+                        self._shed_locked()
                 if self._closed:
                     # close() may have drained the queue and retired the
                     # worker while this thread waited for space; enqueueing
                     # now would strand the ticket forever.
                     raise RuntimeError("server is closed")
-            ticket = SearchTicket(self, q, k)
+            deadline = (
+                None if deadline_s is None else self._now() + deadline_s
+            )
+            ticket = SearchTicket(self, q, k, deadline)
             self._queue.append(ticket)
             self._pending_rows += rows
             self._stats["peak_pending_rows"] = max(
@@ -409,20 +567,83 @@ class SearchServer:
 
     # -- micro-batch formation and dispatch ----------------------------------
 
-    def _take_batch_locked(self) -> Optional[List[SearchTicket]]:
+    def _shed_locked(self) -> None:
+        """Raise :class:`Overloaded` with a drain-time estimate (caller
+        must hold the lock)."""
+        batches = max(1, -(-self._pending_rows // self.max_batch))
+        per_batch = max(
+            self._service_ema, self.config.max_delay_s, 1e-3
+        )
+        self._stats["load_shed"] += 1
+        SERVE_EVENTS["load_shed"] += 1
+        raise Overloaded(self._pending_rows, batches * per_batch)
+
+    def _fail_expired_locked(self, t: SearchTicket, now: float) -> None:
+        """Fail one deadline-expired ticket (caller must hold the lock)."""
+        t._fail(DeadlineExceeded(t.rows, t.deadline, now), now)
+        self._stats["deadline_expired"] += 1
+        SERVE_EVENTS["deadline_expired"] += 1
+
+    def _take_batch_locked(self, now: float) -> Optional[List[SearchTicket]]:
         """Pop the next FIFO micro-batch: whole requests only, up to
         ``max_batch`` rows (a request bigger than ``max_batch`` ships solo
-        through the streaming executor)."""
-        if not self._queue:
-            return None
-        batch = [self._queue.popleft()]
-        total = batch[0].rows
-        while self._queue and total + self._queue[0].rows <= self.max_batch:
-            t = self._queue.popleft()
-            batch.append(t)
-            total += t.rows
+        through the streaming executor).  Deadline-expired tickets are
+        failed here — popped and skipped, never staged or dispatched."""
+        batch: List[SearchTicket] = []
+        total = 0
+        while self._queue:
+            head = self._queue[0]
+            if head.deadline is not None and now >= head.deadline:
+                self._queue.popleft()
+                self._pending_rows -= head.rows
+                self._fail_expired_locked(head, now)
+                continue
+            if batch and total + head.rows > self.max_batch:
+                break
+            self._queue.popleft()
+            batch.append(head)
+            total += head.rows
+            if total >= self.max_batch:
+                break
         self._pending_rows -= total
-        return batch
+        if self._pending_rows < self.config.max_pending_rows:
+            self._full_since = None
+        return batch or None
+
+    def _expire_batch(
+        self, batch: List[SearchTicket], now: float
+    ) -> List[SearchTicket]:
+        """Drop (and fail) tickets whose deadline passed — re-checked
+        before every retry so backoff never redispatches dead work."""
+        live = [
+            t for t in batch if t.deadline is None or now < t.deadline
+        ]
+        if len(live) != len(batch):
+            with self._lock:
+                for t in batch:
+                    if t.deadline is not None and now >= t.deadline:
+                        self._fail_expired_locked(t, now)
+        return live
+
+    def _fail_batch(self, batch: List[SearchTicket],
+                    error: BaseException) -> None:
+        """Fail every ticket of a batch with one typed error."""
+        now = self._now()
+        with self._lock:
+            for t in batch:
+                t._fail(error, now)
+        self._stats["failed_batches"] += 1
+        SERVE_EVENTS["failed_batches"] += 1
+
+    def _requeue(self, batch: List[SearchTicket]) -> None:
+        """Put a popped-but-undispatched batch back at the queue front
+        (FIFO order preserved) — the worker-death no-ticket-loss leg."""
+        with self._lock:
+            for t in reversed(batch):
+                self._queue.appendleft(t)
+                self._pending_rows += t.rows
+        self._stats["requeued_tickets"] += len(batch)
+        SERVE_EVENTS["requeued_tickets"] += len(batch)
 
     def _bucket_for(self, rows: int) -> int:
         """Smallest pre-compiled shape holding ``rows``; oversize requests
@@ -475,30 +696,67 @@ class SearchServer:
         the previous dispatch runs on device, enqueue the new dispatch,
         *then* block on the previous result and scatter it — so the device
         is never idle waiting for host gather/scatter bookkeeping.
+
+        Faults: retryable exceptions (``ServeConfig.retryable``) redispatch
+        the batch after exponential backoff, re-checking deadlines each
+        attempt; exhausted retries (and non-retryable errors) fail the
+        batch's tickets with the typed error.  :class:`WorkerDeath` requeues
+        the batch (nothing was dispatched) and propagates — the watchdog /
+        ``step()`` restart path handles it without ticket loss.
         """
+        # Death here = nothing popped yet; the queue is untouched.
+        self._fire("serve.worker")
+        cfg = self.config
+        t_start = time.perf_counter()
         with self._lock:
-            batch = self._take_batch_locked()
+            batch = self._take_batch_locked(self._now())
             if batch is not None:
                 self._not_full.notify_all()
         if batch is None:
             self._finalize(self._pop_inflight())
             return False
-        rows = sum(t.rows for t in batch)
-        try:
-            # bucket/stage inside the guard too: an allocation failure on a
-            # huge oversize request must fail its tickets, not kill the
-            # worker thread with the popped batch stranded.
-            bucket = self._bucket_for(rows)
-            buf = self._stage(bucket, batch)
-            with self._dispatch_gate:
-                result = self.index.search(jnp.asarray(buf))  # ONE dispatch
-        except Exception as e:  # scatter the failure, keep serving
-            now = self._now()
-            with self._lock:
-                for t in batch:
-                    t._fail(e, now)
-            self._stats["failed_batches"] += 1
-            return True
+        attempt = 0
+        while True:
+            try:
+                # bucket/stage inside the guard too: an allocation failure
+                # on a huge oversize request must fail its tickets, not kill
+                # the worker thread with the popped batch stranded.
+                self._fire("serve.staging_alloc")
+                rows = sum(t.rows for t in batch)
+                bucket = self._bucket_for(rows)
+                buf = self._stage(bucket, batch)
+                self._fire("serve.transfer")
+                q = jnp.asarray(buf)
+                # Fired OUTSIDE the gate: a death injected here while the
+                # main thread holds ``mutation()`` must not deadlock the
+                # restarted worker on a gate its dead self never took.
+                self._fire("serve.dispatch")
+                with self._dispatch_gate:
+                    result = self.index.search(q)  # ONE dispatch
+                break
+            except faultslib.WorkerDeath:
+                # This thread is about to die; nothing was dispatched for
+                # this batch, so hand it back intact for the next worker.
+                self._requeue(batch)
+                raise
+            except cfg.retryable as e:
+                self._stats["transient_faults"] += 1
+                SERVE_EVENTS["transient_faults"] += 1
+                if attempt >= cfg.max_dispatch_retries:
+                    self._fail_batch(batch, e)
+                    return True
+                attempt += 1
+                self._stats["dispatch_retries"] += 1
+                SERVE_EVENTS["dispatch_retries"] += 1
+                self._backoff(cfg.retry_backoff_s * (2 ** (attempt - 1)))
+                # Deadlines keep ticking through backoff: drop expired
+                # tickets rather than dispatch dead work on the retry.
+                batch = self._expire_batch(batch, self._now())
+                if not batch:
+                    return True
+            except Exception as e:  # scatter the failure, keep serving
+                self._fail_batch(batch, e)
+                return True
         self._stats["batches"] += 1
         self._stats["coalesced_requests"] += len(batch)
         self._stats["dispatched_rows"] += rows
@@ -509,6 +767,13 @@ class SearchServer:
         prev = self._pop_inflight()
         self._inflight = (result, batch)
         self._finalize(prev)
+        self._maybe_sample_miss(buf, rows)
+        # EWMA of service time feeds the Overloaded retry-after estimate.
+        elapsed = time.perf_counter() - t_start
+        self._service_ema = (
+            elapsed if self._service_ema == 0.0
+            else 0.8 * self._service_ema + 0.2 * elapsed
+        )
         return True
 
     def _pop_inflight(self) -> Optional[tuple]:
@@ -527,18 +792,22 @@ class SearchServer:
             return
         result, batch = entry
         try:
+            self._fire("serve.scatter")
             result.values.block_until_ready()
             values = np.asarray(result.values)
             indices = np.asarray(result.indices)
+        except faultslib.WorkerDeath as e:
+            # The dispatch already ran; its device-side work is lost with
+            # the dying worker.  Fail the tickets with the typed error
+            # (never silently re-dispatch completed work) and let the
+            # watchdog restart the worker for the still-queued rest.
+            self._fail_batch(batch, e)
+            raise
         except Exception as e:
             # Accelerator errors surface asynchronously, at the block — a
             # bare raise here would kill the worker thread and strand every
             # waiter; fail the batch's tickets instead and keep serving.
-            now = self._now()
-            with self._lock:
-                for t in batch:
-                    t._fail(e, now)
-            self._stats["failed_batches"] += 1
+            self._fail_batch(batch, e)
             return
         now = self._now()
         with self._lock:  # one acquisition per batch, not per ticket
@@ -554,6 +823,39 @@ class SearchServer:
                     self._latency_sum += t.latency_s
             self._stats["completed_requests"] += len(batch)
 
+    def _maybe_sample_miss(self, buf: np.ndarray, live_rows: int) -> None:
+        """Served-query cluster-miss monitor: every Nth batch, score a few
+        real query rows through ``cluster.query_miss_rate`` and fold the
+        counts into the ``ClusterState`` accumulators.
+
+        Uses the *live* front of the staging buffer (padding rows would
+        bias the estimate toward the all-zeros query).  Best-effort by
+        design: the monitor must never take serving down, so any failure
+        is swallowed — the signal just stays stale."""
+        if self.config.miss_sample_every <= 0:
+            return
+        pk = getattr(self.index, "_packed", None)
+        cs = pk.cluster if pk is not None else None
+        if cs is None:
+            return
+        self._miss_sample_countdown -= 1
+        if self._miss_sample_countdown > 0:
+            return
+        self._miss_sample_countdown = self.config.miss_sample_every
+        m = min(self.config.miss_sample_rows, live_rows)
+        try:
+            rows, bias = pk.exact_rows_bias()
+            missed, checked = clusterlib.query_miss_rate(
+                cs, jnp.asarray(np.array(buf[:m])), rows, bias,
+                self.index.spec.k,
+            )
+        except Exception:
+            return
+        cs.served_miss_checked += checked
+        cs.served_miss_missed += missed
+        self._stats["miss_sampled_rows"] += m
+        SERVE_EVENTS["miss_sampled_rows"] += m
+
     # -- deterministic (virtual-clock) driving -------------------------------
 
     def step(self) -> bool:
@@ -565,7 +867,15 @@ class SearchServer:
                 "step() is the virtual-clock driver; wall-clock servers "
                 "run their own worker thread"
             )
-        return self._service_once()
+        try:
+            return self._service_once()
+        except faultslib.WorkerDeath:
+            # The virtual-clock analogue of the wall watchdog: the "worker"
+            # (this step) died and is instantly "restarted" — queued tickets
+            # were requeued by the dying service pass, so the next step
+            # picks them up.  Returns True: there may still be work.
+            self._record_restart()
+            return True
 
     def run_until_idle(self) -> None:
         """Drive the queue to empty and scatter everything in flight."""
@@ -573,6 +883,36 @@ class SearchServer:
             pass
 
     # -- wall-clock worker ---------------------------------------------------
+
+    def _record_restart(self) -> None:
+        self._stats["worker_deaths"] += 1
+        self._stats["worker_restarts"] += 1
+        SERVE_EVENTS["worker_deaths"] += 1
+        SERVE_EVENTS["worker_restarts"] += 1
+
+    def _worker_main(self) -> None:
+        """Watchdog wrapper: restart a dead worker loop in place.
+
+        A worker death (injected :class:`~repro.search.faults.WorkerDeath`
+        or any escaped exception) would otherwise strand every queued
+        ticket forever.  Restarting *inside the same thread* keeps
+        ``close()``'s join working unchanged, and the dying service pass
+        already requeued any popped-but-undispatched batch — so no ticket
+        is lost across a restart."""
+        while True:
+            try:
+                self._worker_loop()
+                return
+            except BaseException:
+                with self._lock:
+                    done = (
+                        self._closed
+                        and not self._queue
+                        and self._inflight is None
+                    )
+                self._record_restart()
+                if done:
+                    return
 
     def _worker_loop(self) -> None:
         cfg = self.config
@@ -675,6 +1015,14 @@ class SearchServer:
             "staging_swaps": s.get("staging_swaps", 0),
             "peak_pending_rows": s.get("peak_pending_rows", 0),
             "precompiled_buckets": s.get("precompiled_buckets", 0),
+            "deadline_expired": s.get("deadline_expired", 0),
+            "transient_faults": s.get("transient_faults", 0),
+            "dispatch_retries": s.get("dispatch_retries", 0),
+            "worker_deaths": s.get("worker_deaths", 0),
+            "worker_restarts": s.get("worker_restarts", 0),
+            "requeued_tickets": s.get("requeued_tickets", 0),
+            "load_shed": s.get("load_shed", 0),
+            "miss_sampled_rows": s.get("miss_sampled_rows", 0),
             "pending_rows": self._pending_rows,
             "cache": self.index.cache_info(),
         }
@@ -683,3 +1031,63 @@ class SearchServer:
         done = out["completed_requests"]
         out["mean_latency_s"] = self._latency_sum / done if done else 0.0
         return out
+
+    def health(self) -> dict:
+        """Liveness / degradation report for operators and load balancers.
+
+        ``status`` is the headline: ``"ok"``, ``"degraded"`` (dead worker
+        on an open server, or the served-query cluster-miss estimate past
+        its warn threshold), or ``"overloaded"`` (admission queue full past
+        ``overload_grace_s`` — submits are being shed).  The rest is the
+        evidence: worker liveness, queue depth, the failure counters, and
+        (clustered indexes) the ``cluster_miss`` block mirroring
+        ``Index.explain()["cluster"]["served_miss"]``.  See
+        ``docs/operations.md`` for the counter-by-counter runbook.
+        """
+        with self._lock:
+            pending = self._pending_rows
+            queued = len(self._queue)
+            full_since = self._full_since
+            closed = self._closed
+        now = self._now()
+        worker_alive = self._manual or (
+            self._worker is not None and self._worker.is_alive()
+        )
+        overloaded = (
+            full_since is not None
+            and now - full_since >= self.config.overload_grace_s
+        )
+        s = self._stats
+        report = {
+            "worker_alive": worker_alive,
+            "closed": closed,
+            "pending_rows": pending,
+            "queued_requests": queued,
+            "deadline_expired": s.get("deadline_expired", 0),
+            "transient_faults": s.get("transient_faults", 0),
+            "dispatch_retries": s.get("dispatch_retries", 0),
+            "failed_batches": s.get("failed_batches", 0),
+            "worker_deaths": s.get("worker_deaths", 0),
+            "worker_restarts": s.get("worker_restarts", 0),
+            "load_shed": s.get("load_shed", 0),
+            "requeued_tickets": s.get("requeued_tickets", 0),
+        }
+        miss_warning = False
+        pk = getattr(self.index, "_packed", None)
+        cs = pk.cluster if pk is not None else None
+        if cs is not None:
+            rate = cs.served_miss_rate
+            threshold = clusterlib.miss_check_threshold(cs.plan.miss_budget)
+            miss_warning = rate is not None and rate > threshold
+            report["cluster_miss"] = {
+                "sampled_pairs": cs.served_miss_checked,
+                "miss_rate": rate,
+                "warn_threshold": threshold,
+                "warning": miss_warning,
+            }
+        degraded = (not worker_alive and not closed) or miss_warning
+        report["status"] = (
+            "overloaded" if overloaded
+            else ("degraded" if degraded else "ok")
+        )
+        return report

@@ -192,3 +192,33 @@ class SearchSpec:
 
     def with_backend(self, backend: str) -> "SearchSpec":
         return dataclasses.replace(self, backend=backend)
+
+    # -- snapshot (de)serialization ------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        """JSON-safe field dict (``Index.save`` stamps it into snapshots).
+
+        >>> SearchSpec.from_json_dict(SearchSpec(k=4).to_json_dict()).k
+        4
+        """
+        d = dataclasses.asdict(self)
+        if d["serve_buckets"] is not None:
+            d["serve_buckets"] = list(d["serve_buckets"])
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "SearchSpec":
+        """Inverse of :meth:`to_json_dict`, with loud version-skew errors:
+        a snapshot written by a newer code version may carry fields this
+        version does not know."""
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(
+                f"snapshot spec carries unknown fields {unknown} — written "
+                "by a newer version? Rebuild the index or upgrade."
+            )
+        if d.get("serve_buckets") is not None:
+            d["serve_buckets"] = tuple(d["serve_buckets"])
+        return cls(**d)

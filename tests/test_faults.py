@@ -1,0 +1,613 @@
+"""Fault-tolerant serving: deterministic chaos tests.
+
+Everything here is seeded and (except the wall-clock watchdog tests)
+driven on the virtual clock, so every failure scenario replays exactly:
+
+  * the ``FaultInjector`` itself — schedule exactness, rate determinism
+    across ``reset()``, point validation, the global registry;
+  * the serve retry loop — a transient dispatch fault is retried with
+    backoff and still returns bit-identical results through ONE extra
+    dispatch (never a retrace); exhausted retries surface the typed error;
+  * deadlines — an expired ticket fails with ``DeadlineExceeded`` and its
+    rows are NEVER dispatched (``DISPATCH_COUNTS`` stays empty), including
+    expiry during retry backoff and mixed expired/live batches;
+  * worker death — virtual ``step()`` restart and the wall-clock watchdog
+    both recover without losing queued tickets (requeue contract);
+  * overload — sustained-full admission sheds with ``Overloaded`` carrying
+    a ``retry_after_s`` estimate, and ``health()`` reports the taxonomy;
+  * crash-safe snapshots — ``Index.save``/``restore`` round-trips are
+    bit-identical without re-running build/k-means/quantization, and a
+    fault between the tmp write and the commit rename leaves the previous
+    snapshot loadable (the crash-safety contract);
+  * a seeded chaos smoke (``@pytest.mark.slow``): a fixed fault schedule
+    over a request stream — every ticket terminates with a result or a
+    typed error, none hang or vanish, and the fault-free phase afterwards
+    still holds the one-dispatch / zero-retrace contracts.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.search import (
+    DeadlineExceeded,
+    Index,
+    Overloaded,
+    QueueFull,
+    SearchServer,
+    ServeConfig,
+    VirtualClock,
+    backends,
+    faults,
+)
+from repro.search.backends import DISPATCH_COUNTS, TRACE_COUNTS
+from repro.search.faults import (
+    FatalFault,
+    FaultInjector,
+    TransientFault,
+    WorkerDeath,
+)
+from repro.search.packed import PACK_EVENTS, reset_pack_events
+from repro.search.serve import SERVE_EVENTS, reset_serve_events
+
+K = 10
+D = 16
+
+
+@pytest.fixture(scope="module")
+def index():
+    db = jax.random.normal(jax.random.PRNGKey(1), (2048, D))
+    return Index.build(db, metric="mips", k=K, backend="xla")
+
+
+@pytest.fixture(autouse=True)
+def _reset_counters():
+    backends.reset_trace_counts()
+    backends.reset_dispatch_counts()
+    reset_serve_events()
+    reset_pack_events()
+    yield
+    faults.uninstall()  # never leak an injector into another test
+
+
+def _vserver(index, inj=None, clock=None, **cfg):
+    cfg.setdefault("max_batch", 32)
+    return SearchServer(
+        index, ServeConfig(**cfg), clock=clock or VirtualClock(), faults=inj
+    )
+
+
+def _queries(seed, m):
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (m, D)))
+
+
+# --- the injector itself -----------------------------------------------------
+
+
+def test_schedule_fires_exactly_the_nth_hit():
+    inj = FaultInjector(schedule=[("serve.dispatch", 3, "fatal")])
+    inj.fire("serve.dispatch")
+    inj.fire("serve.dispatch")
+    with pytest.raises(FatalFault) as e:
+        inj.fire("serve.dispatch")
+    assert (e.value.point, e.value.hit) == ("serve.dispatch", 3)
+    inj.fire("serve.dispatch")  # hit 4: passes again
+    assert inj.hits["serve.dispatch"] == 4
+    assert inj.fired["serve.dispatch"] == 1
+
+
+def test_rate_based_firing_is_deterministic_across_reset():
+    inj = FaultInjector(seed=7, rates={"serve.dispatch": 0.3})
+
+    def pattern(n=200):
+        fired = []
+        for i in range(n):
+            try:
+                inj.fire("serve.dispatch")
+            except TransientFault:
+                fired.append(i)
+        return fired
+
+    first = pattern()
+    assert first, "0.3 over 200 hits must fire sometimes"
+    inj.reset()
+    assert pattern() == first  # same seed + reset -> identical replay
+    # an independent point's stream is untouched by the dispatch draws
+    twin = FaultInjector(seed=7, rates={"serve.dispatch": 0.3,
+                                        "serve.transfer": 0.3})
+    fired = []
+    for i in range(200):
+        try:
+            twin.fire("serve.dispatch")
+        except TransientFault:
+            fired.append(i)
+        if i % 3 == 0:  # interleave extra traffic on another point
+            try:
+                twin.fire("serve.transfer")
+            except TransientFault:
+                pass
+    assert fired == first
+
+
+def test_injector_validates_points_and_kinds():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        FaultInjector(rates={"serve.nope": 0.5})
+    with pytest.raises(ValueError, match="unknown injection point"):
+        FaultInjector(schedule=[("bogus", 1, "fatal")])
+    with pytest.raises(ValueError, match="kind"):
+        FaultInjector(schedule=[("serve.dispatch", 1, "oops")])
+    with pytest.raises(ValueError, match="1-based"):
+        FaultInjector(schedule=[("serve.dispatch", 0, "fatal")])
+    with pytest.raises(ValueError, match="rate"):
+        FaultInjector(rates={"serve.dispatch": 1.5})
+    inj = FaultInjector()
+    with pytest.raises(ValueError, match="unknown injection point"):
+        inj.fire("nope")
+
+
+def test_global_registry_scoping():
+    assert faults.active() is None
+    faults.fire("serve.worker")  # no-op without an injector
+    with faults.injected(FaultInjector()) as inj:
+        assert faults.active() is inj
+        with faults.injected(FaultInjector()) as inner:
+            assert faults.active() is inner
+        assert faults.active() is inj  # nesting restores the outer one
+    assert faults.active() is None
+
+
+# --- retries: transient dispatch faults --------------------------------------
+
+
+def test_transient_dispatch_fault_is_retried_bit_identically(index):
+    q = _queries(10, 6)
+    direct = index.search(q)
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "transient")])
+    server = _vserver(index, inj)
+    server.precompile()
+    backends.reset_dispatch_counts()
+    backends.reset_trace_counts()
+    vals, idxs = server.submit(q).result()
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(direct.indices))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(direct.values))
+    s = server.stats()
+    assert s["transient_faults"] == 1
+    assert s["dispatch_retries"] == 1
+    assert s["failed_batches"] == 0
+    assert SERVE_EVENTS["dispatch_retries"] == 1
+    # the fault fired BEFORE the dispatch: one batch -> still one dispatch,
+    # and a retry of a precompiled bucket never retraces
+    assert DISPATCH_COUNTS["xla"] == 1, dict(DISPATCH_COUNTS)
+    assert not dict(TRACE_COUNTS)
+    server.close()
+
+
+def test_exhausted_retries_surface_the_typed_error(index):
+    inj = FaultInjector(rates={"serve.dispatch": 1.0})
+    server = _vserver(index, inj, max_dispatch_retries=2)
+    t = server.submit(_queries(11, 4))
+    with pytest.raises(TransientFault):
+        t.result()
+    s = server.stats()
+    assert s["transient_faults"] == 3  # initial + 2 retries
+    assert s["dispatch_retries"] == 2
+    assert s["failed_batches"] == 1
+    server.close()
+
+
+def test_fatal_fault_fails_fast_without_retry(index):
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "fatal")])
+    server = _vserver(index, inj)
+    t_dead = server.submit(_queries(12, 4))
+    with pytest.raises(FatalFault):
+        t_dead.result()
+    assert server.stats()["dispatch_retries"] == 0
+    # the server keeps serving after a fatal batch
+    q = _queries(13, 4)
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(q).result().indices),
+        np.asarray(index.search(q).indices),
+    )
+    server.close()
+
+
+@pytest.mark.parametrize(
+    "point", ["serve.staging_alloc", "serve.transfer", "serve.scatter"]
+)
+def test_pipeline_stage_faults_fail_with_typed_errors(index, point):
+    inj = FaultInjector(schedule=[(point, 1, "fatal")])
+    server = _vserver(index, inj)
+    t = server.submit(_queries(14, 4))
+    if point == "serve.scatter":
+        # scatter runs when the NEXT service pass (or idle drain) finalizes
+        server.run_until_idle()
+    with pytest.raises(FatalFault) as e:
+        t.result()
+    assert e.value.point == point
+    server.close()
+
+
+# --- deadlines ---------------------------------------------------------------
+
+
+def test_expired_ticket_is_never_dispatched(index):
+    clock = VirtualClock()
+    server = _vserver(index, clock=clock)
+    server.precompile()
+    backends.reset_dispatch_counts()
+    t = server.submit(_queries(20, 4), deadline_s=0.5)
+    clock.advance(1.0)  # deadline passes while queued
+    with pytest.raises(DeadlineExceeded):
+        t.result()
+    assert sum(DISPATCH_COUNTS.values()) == 0, dict(DISPATCH_COUNTS)
+    assert server.stats()["deadline_expired"] == 1
+    assert SERVE_EVENTS["deadline_expired"] == 1
+    assert server.pending_rows == 0  # the dead ticket freed its rows
+    server.close()
+
+
+def test_mixed_expired_and_live_batch(index):
+    clock = VirtualClock()
+    server = _vserver(index, clock=clock)
+    dead = server.submit(_queries(21, 4), deadline_s=0.5)
+    clock.advance(1.0)
+    q = _queries(22, 4)
+    live = server.submit(q, deadline_s=10.0)  # still well within deadline
+    server.run_until_idle()
+    with pytest.raises(DeadlineExceeded):
+        dead.result()
+    np.testing.assert_array_equal(
+        np.asarray(live.result().indices), np.asarray(index.search(q).indices)
+    )
+    server.close()
+
+
+def test_deadline_expires_during_retry_backoff(index):
+    # backoff advances the virtual clock past the ticket's deadline: the
+    # retry must drop it instead of dispatching dead work
+    clock = VirtualClock()
+    inj = FaultInjector(rates={"serve.dispatch": 1.0})
+    server = _vserver(
+        index, inj, clock=clock,
+        max_dispatch_retries=5, retry_backoff_s=0.4,
+    )
+    server.precompile()
+    backends.reset_dispatch_counts()
+    t = server.submit(_queries(23, 4), deadline_s=1.0)
+    with pytest.raises(DeadlineExceeded):
+        t.result()
+    assert sum(DISPATCH_COUNTS.values()) == 0
+    # fewer retries than the budget: the deadline cut the loop short
+    assert server.stats()["dispatch_retries"] < 5
+    server.close()
+
+
+def test_submit_rejects_nonpositive_deadline(index):
+    server = _vserver(index)
+    with pytest.raises(ValueError, match="deadline_s"):
+        server.submit(_queries(24, 2), deadline_s=0.0)
+    server.close()
+
+
+# --- worker death / watchdog -------------------------------------------------
+
+
+def test_virtual_worker_death_requeues_and_recovers(index):
+    q = _queries(30, 4)
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "death")])
+    server = _vserver(index, inj)
+    t = server.submit(q)
+    # the popped batch is requeued by the dying pass; step() absorbs the
+    # death and the next pass serves it
+    np.testing.assert_array_equal(
+        np.asarray(t.result().indices), np.asarray(index.search(q).indices)
+    )
+    s = server.stats()
+    assert s["worker_deaths"] == 1
+    assert s["worker_restarts"] == 1
+    assert s["requeued_tickets"] == 1
+    assert SERVE_EVENTS["requeued_tickets"] == 1
+    server.close()
+
+
+def test_death_between_batches_loses_nothing(index):
+    # serve.worker fires before anything is popped: queue fully intact
+    inj = FaultInjector(schedule=[("serve.worker", 1, "death")])
+    server = _vserver(index, inj)
+    qs = [_queries(31 + i, 3) for i in range(3)]
+    tickets = [server.submit(q) for q in qs]
+    server.run_until_idle()
+    for q, t in zip(qs, tickets):
+        np.testing.assert_array_equal(
+            np.asarray(t.result().indices),
+            np.asarray(index.search(q).indices),
+        )
+    assert server.stats()["requeued_tickets"] == 0
+    server.close()
+
+
+def test_wall_clock_watchdog_restarts_dead_worker(index):
+    q = _queries(33, 4)
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "death")])
+    server = SearchServer(
+        index, ServeConfig(max_batch=32, max_delay_s=0.0), faults=inj
+    )
+    t = server.submit(q)
+    vals, idxs = t.result(timeout=60)
+    np.testing.assert_array_equal(
+        np.asarray(idxs), np.asarray(index.search(q).indices)
+    )
+    assert server.stats()["worker_restarts"] == 1
+    assert server.health()["worker_alive"]
+    # the restarted worker is the same joinable thread: close() still works
+    server.close()
+    assert server.health()["status"] == "ok"  # closed cleanly, not degraded
+
+
+def test_worker_death_mid_mutation_gate(index):
+    """Death injected at serve.dispatch while the main thread holds
+    ``mutation()``: the fault fires BEFORE the worker takes the gate, so
+    the restarted worker never deadlocks on a gate its dead self held."""
+    db = jax.random.normal(jax.random.PRNGKey(40), (512, D))
+    ix = Index.build(db, metric="mips", k=4, capacity=1024)
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "death")])
+    server = SearchServer(
+        ix, ServeConfig(max_batch=32, max_delay_s=0.0), faults=inj
+    )
+    with server.mutation():
+        t = server.submit(_queries(41, 4))  # worker may die while we hold it
+        ix.add(_queries(42, 8))
+    vals, idxs = t.result(timeout=60)
+    assert vals.shape == (4, 4)
+    assert server.stats()["worker_deaths"] == 1
+    server.close()
+
+
+# --- overload shedding -------------------------------------------------------
+
+
+def test_sustained_overload_sheds_with_retry_after(index):
+    clock = VirtualClock()
+    server = _vserver(
+        index, clock=clock, max_pending_rows=8, overload_grace_s=0.2
+    )
+    server.submit(_queries(50, 8))  # fills the queue
+    with pytest.raises(QueueFull) as e:  # inside grace: plain QueueFull
+        server.submit(_queries(51, 4))
+    assert not isinstance(e.value, Overloaded)
+    clock.advance(0.5)  # still full past the grace window
+    with pytest.raises(Overloaded) as e:
+        server.submit(_queries(52, 4))
+    assert e.value.retry_after_s > 0
+    assert e.value.rows_pending == 8
+    assert server.health()["status"] == "overloaded"
+    assert SERVE_EVENTS["load_shed"] == 1
+    server.run_until_idle()  # drain clears the overload state
+    assert server.health()["status"] == "ok"
+    server.submit(_queries(53, 4))  # admitted again
+    server.run_until_idle()
+    server.close()
+
+
+def test_health_reports_failure_taxonomy(index):
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "transient"),
+                                  ("serve.worker", 2, "death")])
+    server = _vserver(index, inj)
+    server.submit(_queries(54, 4)).result()
+    h = server.health()
+    assert h["status"] == "ok"
+    assert h["worker_alive"] and not h["closed"]
+    assert h["transient_faults"] == 1
+    assert h["dispatch_retries"] == 1
+    assert h["worker_deaths"] == 1
+    assert h["pending_rows"] == 0 and h["queued_requests"] == 0
+    for key in ("deadline_expired", "failed_batches", "load_shed",
+                "requeued_tickets", "worker_restarts"):
+        assert key in h
+    server.close()
+
+
+# --- index mutation faults ---------------------------------------------------
+
+
+def test_index_add_fault_is_all_or_nothing(index):
+    db = jax.random.normal(jax.random.PRNGKey(60), (256, D))
+    ix = Index.build(db, metric="mips", k=4, capacity=1024)
+    with faults.injected(FaultInjector(schedule=[("index.add", 1, "fatal")])):
+        with pytest.raises(FatalFault):
+            ix.add(_queries(61, 8))
+        assert ix.size == 256  # nothing was appended
+        ix.add(_queries(61, 8))  # hit 2: clean — and the index still works
+    assert ix.size == 264
+    with faults.injected(
+        FaultInjector(schedule=[("index.delete", 1, "fatal")])
+    ):
+        with pytest.raises(FatalFault):
+            ix.delete([0, 1])
+        assert ix.size == 264
+
+
+def test_extend_fault_under_serving_keeps_server_alive():
+    from repro.retrieval.datastore import KNNDatastore
+
+    keys = jax.random.normal(jax.random.PRNGKey(62), (512, D))
+    toks = jax.random.randint(jax.random.PRNGKey(63), (512,), 0, 100)
+    ds = KNNDatastore(keys, toks, k=4, capacity=2048)
+    ds.attach_server(clock=VirtualClock(), config=ServeConfig(max_batch=32))
+    with faults.injected(FaultInjector(schedule=[("index.add", 1, "fatal")])):
+        with pytest.raises(FatalFault):
+            ds.extend(_queries(64, 16), np.full((16,), 1))
+        assert len(ds) == 512
+        # serving continues across the failed mutation...
+        q = _queries(65, 4)
+        scores, _ = ds.lookup(q)
+        assert scores.shape == (4, 4)
+        # ...and the next extend succeeds
+        ds.extend(_queries(64, 16), np.full((16,), 1))
+    assert len(ds) == 512 + 16
+    ds.server.close()
+
+
+# --- crash-safe snapshots ----------------------------------------------------
+
+
+def test_snapshot_restore_is_bit_identical_without_rebuild(index, tmp_path):
+    q = _queries(70, 8)
+    direct = index.search(q)
+    path = os.path.join(tmp_path, "snap")
+    index.save(path)
+    reset_pack_events()
+    restored = Index.restore(path)
+    got = restored.search(q)
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(direct.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.values), np.asarray(direct.values)
+    )
+    # restore reconstructs packed state directly: no build/pack/quantize
+    assert PACK_EVENTS["restore"] == 1
+    assert PACK_EVENTS["full_pack"] == 0, dict(PACK_EVENTS)
+    assert PACK_EVENTS["cluster_built"] == 0, dict(PACK_EVENTS)
+
+
+def test_snapshot_commit_fault_leaves_previous_snapshot_loadable(tmp_path):
+    db = jax.random.normal(jax.random.PRNGKey(71), (256, D))
+    ix = Index.build(db, metric="mips", k=4, capacity=512)
+    q = _queries(72, 4)
+    before = np.asarray(ix.search(q).indices)
+    path = os.path.join(tmp_path, "snap")
+    ix.save(path)
+    ix.add(_queries(73, 8))
+    with faults.injected(
+        FaultInjector(schedule=[("checkpoint.commit", 1, "fatal")])
+    ):
+        with pytest.raises(FatalFault):
+            ix.save(path)  # crashes after tmp write, before the rename
+    survivor = Index.restore(path)  # the ORIGINAL snapshot must load
+    assert survivor.size == 256
+    np.testing.assert_array_equal(
+        np.asarray(survivor.search(q).indices), before
+    )
+    # a later clean save supersedes it
+    ix.save(path)
+    assert Index.restore(path).size == 264
+
+
+def test_index_save_fault_fires_before_any_write(tmp_path):
+    db = jax.random.normal(jax.random.PRNGKey(74), (256, D))
+    ix = Index.build(db, metric="mips", k=4)
+    path = os.path.join(tmp_path, "snap")
+    with faults.injected(
+        FaultInjector(schedule=[("index.save", 1, "fatal")])
+    ):
+        with pytest.raises(FatalFault):
+            ix.save(path)
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_restore_rejects_foreign_and_future_snapshots(tmp_path):
+    from repro.checkpoint.checkpoint import save_snapshot
+    from repro.search.index import SNAPSHOT_FORMAT, SNAPSHOT_VERSION
+
+    alien = os.path.join(tmp_path, "alien")
+    save_snapshot(alien, {"x": np.zeros(2)}, {"format": "other.thing"})
+    with pytest.raises(ValueError, match="not an index snapshot"):
+        Index.restore(alien)
+    future = os.path.join(tmp_path, "future")
+    save_snapshot(
+        future, {"x": np.zeros(2)},
+        {"format": SNAPSHOT_FORMAT, "version": SNAPSHOT_VERSION + 1},
+    )
+    with pytest.raises(ValueError, match="version"):
+        Index.restore(future)
+
+
+def test_restore_then_serve_matches_direct(index, tmp_path):
+    path = os.path.join(tmp_path, "snap")
+    index.save(path)
+    restored = Index.restore(path)
+    server = _vserver(restored)
+    q = _queries(75, 6)
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(q).result().indices),
+        np.asarray(index.search(q).indices),
+    )
+    server.close()
+
+
+# --- seeded chaos smoke ------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_seeded_chaos_run_loses_no_tickets(index):
+    """A fixed fault schedule over a request stream: every ticket
+    terminates (result or typed error), none hang or vanish — then a
+    fault-free phase re-asserts the one-dispatch / zero-retrace contracts
+    (retries and restarts must not have poisoned the compile caches)."""
+    clock = VirtualClock()
+    inj = FaultInjector(
+        seed=3,
+        rates={"serve.dispatch": 0.15},
+        schedule=[
+            ("serve.worker", 2, "death"),
+            ("serve.dispatch", 5, "fatal"),
+            ("serve.staging_alloc", 3, "fatal"),
+            ("serve.dispatch", 9, "death"),
+            ("serve.scatter", 4, "fatal"),
+        ],
+    )
+    server = _vserver(index, inj, clock=clock, max_pending_rows=4096,
+                      max_dispatch_retries=2, retry_backoff_s=0.01)
+    server.precompile()
+    rng = np.random.default_rng(3)
+    tickets = []
+    for wave in range(10):
+        for r in range(4):
+            m = int(rng.integers(1, 9))
+            deadline = (
+                None if r % 3 else float(rng.uniform(0.05, 5.0))
+            )
+            q = _queries(1000 + 10 * wave + r, m)
+            tickets.append((q, server.submit(q, deadline_s=deadline)))
+        clock.advance(float(rng.uniform(0.0, 0.5)))
+        server.run_until_idle()
+    server.run_until_idle()
+
+    ok = failed = 0
+    for q, t in tickets:
+        assert t.done, "chaos run left a ticket hanging"
+        try:
+            vals, idxs = t.result()
+        except (faults.InjectedFault, DeadlineExceeded):
+            failed += 1  # typed taxonomy only — never a bare RuntimeError
+        else:
+            ok += 1
+            np.testing.assert_array_equal(
+                np.asarray(idxs), np.asarray(index.search(q).indices)
+            )
+    assert ok + failed == len(tickets)
+    assert ok > 0 and failed > 0  # the schedule really exercised both paths
+    assert server.pending_rows == 0
+
+    # fault-free phase: contracts hold after all that chaos
+    server._faults = None
+    backends.reset_dispatch_counts()
+    backends.reset_trace_counts()
+    reset_serve_events()
+    qs = [_queries(2000 + i, 8) for i in range(4)]  # one 32-row batch
+    clean = [server.submit(q) for q in qs]
+    server.run_until_idle()
+    served_dispatches = DISPATCH_COUNTS["xla"]  # before the parity searches
+    for q, t in zip(qs, clean):
+        np.testing.assert_array_equal(
+            np.asarray(t.result().indices),
+            np.asarray(index.search(q).indices),
+        )
+    assert served_dispatches == 1, dict(DISPATCH_COUNTS)
+    assert not dict(TRACE_COUNTS)
+    assert SERVE_EVENTS["batches"] == 1
+    assert SERVE_EVENTS["failed_batches"] == 0
+    server.close()

@@ -408,3 +408,82 @@ def test_all_rows_deleted_returns_only_sentinels():
 
     assert (np.asarray(vals) <= MASK_VALUE).all()
     assert int(np.asarray(idxs).max()) < 40
+
+
+# --- snapshot restore-then-serve bit-parity (PR 7) ---------------------------
+#
+# ``Index.save`` / ``Index.restore`` must reproduce the packed state well
+# enough that a restored replica returns BIT-identical results — across
+# every backend x storage-tier x cluster combination — without re-running
+# build / k-means / quantization (asserted via ``PACK_EVENTS``).
+
+import os  # noqa: E402  (section-local import, mirrors the PR-7 tests)
+
+import pytest  # noqa: E402
+
+from repro.search.packed import PACK_EVENTS, reset_pack_events  # noqa: E402
+
+
+def _restore_parity(index, queries, tmp_path, *, mesh_axis=None):
+    direct = index.search(queries)
+    path = os.path.join(tmp_path, "snap")
+    index.save(path)
+    reset_pack_events()
+    restored = Index.restore(path)
+    if mesh_axis is not None:  # snapshots land unmeshed; re-shard explicitly
+        restored = restored.shard(jax.make_mesh((1,), (mesh_axis,)),
+                                  db_axis=mesh_axis)
+    got = restored.search(queries)
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(direct.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.values), np.asarray(direct.values)
+    )
+    assert PACK_EVENTS["restore"] == 1
+    assert PACK_EVENTS["full_pack"] == 0, (
+        f"restore re-ran a packing pass: {dict(PACK_EVENTS)}"
+    )
+    return restored
+
+
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_restore_parity_backend_x_storage(backend, storage, tmp_path):
+    db = _db(11, 512)
+    index = Index.build(db, metric="l2", k=8, backend=backend,
+                        storage=storage)
+    q = jax.random.normal(jax.random.PRNGKey(12), (16, D))
+    _restore_parity(index, q, tmp_path)
+
+
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8"])
+def test_restore_parity_clustered(storage, tmp_path):
+    # the mixture corpus is the regime where cluster="auto" actually
+    # enables pruning (cf. tests/test_cluster.py); restore must bring the
+    # k-means tables back verbatim, never re-cluster
+    rng = np.random.default_rng(13)
+    centers = rng.normal(size=(64, D)) * 2.5
+    db = jnp.asarray(
+        centers[rng.integers(0, 64, 8192)] + rng.normal(size=(8192, D)),
+        jnp.float32,
+    )
+    q = jnp.asarray(
+        centers[rng.integers(0, 64, 16)] + rng.normal(size=(16, D)),
+        jnp.float32,
+    )
+    index = Index.build(db, metric="l2", k=10, backend="xla",
+                        storage=storage)
+    assert index.explain()["cluster"]["enabled"]
+    restored = _restore_parity(index, q, tmp_path)
+    rep = restored.explain()["cluster"]
+    assert rep["enabled"]  # the pruned path, not a silent dense fallback
+    assert PACK_EVENTS["cluster_built"] == 0, dict(PACK_EVENTS)
+
+
+def test_restore_parity_sharded_single_device(tmp_path):
+    mesh = jax.make_mesh((1,), ("model",))
+    db = _db(14, 512)
+    index = Index.build(db, metric="mips", k=8).shard(mesh, db_axis="model")
+    q = jax.random.normal(jax.random.PRNGKey(15), (8, D))
+    _restore_parity(index, q, tmp_path, mesh_axis="model")

@@ -415,3 +415,43 @@ def test_engine_retrieval_coalesces_through_shared_server():
         eng.attach_retrieval(
             idx, tokens, server=SearchServer(other, clock=VirtualClock())
         )
+
+
+# --- fault-tolerance surface (PR 7; depth lives in tests/test_faults.py) -----
+
+
+def test_deadline_request_completes_within_budget(index):
+    """The happy path: a deadline that never expires changes nothing —
+    same coalescing, same results."""
+    clock = VirtualClock()
+    server = SearchServer(index, ServeConfig(max_batch=32), clock=clock)
+    q = _queries(90, 4)
+    t = server.submit(q, deadline_s=10.0)
+    server.run_until_idle()
+    np.testing.assert_array_equal(
+        np.asarray(t.result().indices), np.asarray(index.search(q).indices)
+    )
+    assert server.stats()["deadline_expired"] == 0
+    server.close()
+
+
+def test_health_on_a_clean_server(index):
+    server = _vserver(index)
+    h = server.health()
+    assert h["status"] == "ok"
+    assert h["worker_alive"] and not h["closed"]
+    assert h["pending_rows"] == 0
+    assert "cluster_miss" not in h  # unclustered index: no miss monitor
+    server.submit(_queries(91, 4)).result()
+    assert server.health()["failed_batches"] == 0
+    server.close()
+
+
+def test_stats_include_failure_taxonomy_counters(index):
+    server = _vserver(index)
+    s = server.stats()
+    for key in ("deadline_expired", "transient_faults", "dispatch_retries",
+                "worker_deaths", "worker_restarts", "requeued_tickets",
+                "load_shed", "miss_sampled_rows"):
+        assert s[key] == 0, key
+    server.close()
