@@ -11,7 +11,10 @@ across a backend x metric x (M, N, D) grid:
     state PR),
   * model-planned vs legacy hard-coded tile configs (``plan_results``):
     the kernel planner (``repro.search.plan``) must match or beat the old
-    (256, 1024, 4096) defaults at bit-identical results.
+    (256, 1024, 4096) defaults at bit-identical results,
+  * sharded scaling + the host cold tier (``shard_results``): QPS and the
+    one-dispatch contract vs fake device count (one subprocess per count),
+    and the host tier's segment-wave schedule with per-wave occupancy.
 
 Writes ``BENCH_search.json`` (one run per invocation; history lives in git —
 commit full-grid runs, CI smoke runs only touch the working tree).
@@ -30,7 +33,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import subprocess
+import sys
 import time
 
 import jax
@@ -309,6 +315,112 @@ def bench_cluster(backend, metric, m, n, d, query_block, repeats, emit):
     return row
 
 
+# Child script for the device-count scaling sweep.  Fake devices only exist
+# per-process (XLA_FLAGS is read at jax import), so each device count is one
+# subprocess; the result rides back on a marked JSON stdout line.  @NAME@
+# placeholders avoid brace-escaping an f-string template.
+_SHARD_CHILD = """\
+import json, time
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.search import Index, SearchSpec, backends
+
+NDEV, M, N, D, REPEATS = @NDEV@, @M@, @N@, @D@, @REPEATS@
+rng = np.random.default_rng(0)
+db = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+q = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+index = Index.build(db, metric="mips", k=10, backend="xla",
+                    recall_target=0.95)
+if NDEV > 1:
+    mesh = jax.make_mesh((NDEV,), ("model",))
+    index = index.shard(mesh, db_axis="model")
+index.search(q).values.block_until_ready()  # warmup/compile
+backends.reset_dispatch_counts()
+t0 = time.perf_counter()
+for _ in range(REPEATS):
+    out = index.search(q)
+out.values.block_until_ready()
+wall = (time.perf_counter() - t0) / REPEATS
+print("@@SHARD@@" + json.dumps({
+    "devices": NDEV,
+    "backend": "sharded" if NDEV > 1 else "xla",
+    "qps": M / wall,
+    "wall_s_per_search": wall,
+    "dispatches_per_search": sum(backends.DISPATCH_COUNTS.values()) / REPEATS,
+    "dispatch_counts": dict(backends.DISPATCH_COUNTS),
+}))
+"""
+
+
+def bench_shard(m, n, d, device_counts, repeats, emit):
+    """Device-count scaling of the sharded backend + host-tier waves.
+
+    QPS and the one-dispatch-per-batch contract vs fake device count
+    (each count is a subprocess — XLA fixes the device count at import),
+    plus the host-RAM cold tier's segment-wave schedule and per-wave
+    live-row occupancy on the default single device.
+    """
+    src_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "src")
+    rows = []
+    for ndev in device_counts:
+        child = _SHARD_CHILD
+        for name, val in (("NDEV", ndev), ("M", m), ("N", n), ("D", d),
+                          ("REPEATS", repeats)):
+            child = child.replace(f"@{name}@", str(val))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={ndev}"
+        )
+        env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", child], env=env,
+                              capture_output=True, text=True, timeout=600)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"shard bench child (devices={ndev}) failed:\n"
+                f"{proc.stdout}\n{proc.stderr}"
+            )
+        line = next(l for l in proc.stdout.splitlines()
+                    if l.startswith("@@SHARD@@"))
+        row = json.loads(line[len("@@SHARD@@"):])
+        rows.append(row)
+        emit(f"shard,M={m},N={n},D={d},devices={ndev}: "
+             f"{row['qps']:.0f} qps "
+             f"({row['dispatches_per_search']:.0f} dispatch)")
+
+    # Host-RAM cold tier: budget sized for 1024-row segments so the build
+    # streams N/1024 waves; occupancy is the per-wave live-row fraction.
+    rng = np.random.default_rng(0)
+    hn = max(4096, n)
+    db = jnp.asarray(rng.normal(size=(hn, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    index = Index.build(db, metric="mips", k=10, residency="host",
+                        hbm_budget_bytes=2 * 1024 * d * 4)
+    index.search(q).values.block_until_ready()  # warmup/compile
+    backends.reset_dispatch_counts()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = index.search(q)
+    out.values.block_until_ready()
+    wall = (time.perf_counter() - t0) / repeats
+    searcher = index._build_host_searcher()
+    occupancy = searcher.occupancy(index.pack())
+    host = {
+        "n": hn, "d": d, "m": m,
+        "segment_rows": searcher.segment_rows,
+        "num_segments": len(occupancy),
+        "occupancy": occupancy,
+        "qps": m / wall,
+        "wall_s_per_search": wall,
+        "dispatches_per_search":
+            backends.DISPATCH_COUNTS["host"] / repeats,
+    }
+    emit(f"shard,host-tier,N={hn},D={d}: {host['qps']:.0f} qps over "
+         f"{host['num_segments']} waves of {host['segment_rows']} rows")
+    return {"m": m, "n": n, "d": d, "devices": rows, "host_tier": host}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -360,6 +472,13 @@ def main() -> None:
                           qb if qb >= 256 else 256, repeats, print)
         )
 
+    # Device-count scaling (subprocess per count — fake devices are fixed
+    # at jax import) + the host cold tier.  Smoke keeps to [1, 2] so the
+    # fast tier pays for two interpreter startups, not four.
+    shard_devices = (1, 2) if args.smoke else (1, 2, 4, 8)
+    sm, sn, sd = grid[0]
+    shard_results = bench_shard(sm, sn, sd, shard_devices, repeats, print)
+
     report = {
         "meta": {
             "jax": jax.__version__,
@@ -372,6 +491,7 @@ def main() -> None:
         "plan_results": plan_results,
         "quant_results": quant_results,
         "cluster_results": cluster_results,
+        "shard_results": shard_results,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -439,6 +559,17 @@ def main() -> None:
             assert auto["dispatches_per_search"] == 1, auto
             assert auto["steady_retraces"] == 0, auto
             assert auto["steady_pack_events"] == 0, auto
+        # Sharded + host-tier contracts (deterministic): every device count
+        # keeps the one-dispatch-per-batch contract (the top-k merge is part
+        # of the same compiled program, not extra dispatches), and the host
+        # tier dispatches exactly one wave per segment with fully-live
+        # occupancy on a fresh build.
+        for srow in shard_results["devices"]:
+            assert srow["dispatches_per_search"] == 1, srow
+        host = shard_results["host_tier"]
+        assert host["num_segments"] >= 2, host
+        assert host["dispatches_per_search"] == host["num_segments"], host
+        assert all(o == 1.0 for o in host["occupancy"]), host
         print("smoke contract OK")
 
 

@@ -36,11 +36,15 @@ else
     python -m pytest -x -q tests/test_packed.py tests/test_serve.py \
         tests/test_cluster.py
     python -m pytest -x -q -m "not slow" tests/test_faults.py
+    # Layout-parity grid under 8 fake devices (subprocess harness in
+    # tests/conftest.py); the 16/48-device grids are @slow / full tier.
+    python -m pytest -x -q -m "not slow" tests/test_sharded2d.py
     python benchmarks/bench_search.py --smoke --out BENCH_search.smoke.json
     python benchmarks/bench_serve.py --smoke --out BENCH_serve.smoke.json
     python scripts/docs_lint.py
     python -m pytest -x -q --doctest-modules src/repro/search
     exec python -m pytest -x -q -m "not slow" \
         --ignore=tests/test_packed.py --ignore=tests/test_serve.py \
-        --ignore=tests/test_cluster.py --ignore=tests/test_faults.py
+        --ignore=tests/test_cluster.py --ignore=tests/test_faults.py \
+        --ignore=tests/test_sharded2d.py
 fi

@@ -30,6 +30,24 @@ P(no bin collision) x P(no cluster miss), both reported by
 ``Index.explain()``.  Below the crossover (small N) "auto" builds nothing
 and is bit-identical to "off".
 
+Stage pipeline (``repro.search.stages``): every backend is an assembly of
+the same scan → rescore → gather stage primitives — ``score_rows``,
+``scan_candidates``, ``rescore_candidates``, ``prune_candidates``,
+``merge_topk``, ``finalize_values`` (+ ``pad_queries_to`` for lane
+padding) — which is what makes layouts bit-comparable: replicated, 1-D /
+2-D sharded and host-tiered searches run identical per-row math and
+differ only in where rows live.  2-D (query x database) sharding:
+``index.shard(mesh, db_axis=("data", "model"), batch_axis=...)`` folds
+several mesh axes into one logical database split (pod-shaped meshes,
+``normalize_db_axes`` / ``db_shard_count``); only O(k) (value, global id)
+winners per shard cross the ICI, which ``Index.explain()`` prices.  Host
+cold tier: ``Index.build(..., residency="host")`` keeps packed operands
+in host RAM and streams planner-sized segment waves (``plan_segments``,
+``SEGMENT_ALIGN``-row aligned) through device HBM via
+``repro.search.hosttier`` (``HostTierSearcher`` driving ``wave_program``),
+double-buffered one wave ahead — N bounded by host memory, one dispatch
+per wave, zero retraces in steady state.
+
 Kernel planning (``repro.search.plan``): every tile size and the bin count
 are derived analytically from the paper's performance model (Eq. 4–10) and
 recall guarantee (Eq. 13–14) — ``Index.build(plan="model")`` is the default;
@@ -102,15 +120,27 @@ from repro.search.backends import (
     CompileCache,
     cluster_search,
     cluster_search_quant,
+    db_shard_count,
     default_backend,
     dense_search,
     dense_search_quant,
     make_sharded_search_fn,
+    normalize_db_axes,
     pallas_search,
     pallas_search_packed,
     pallas_search_packed_quant,
     reset_dispatch_counts,
     reset_trace_counts,
+)
+from repro.search.hosttier import HostTierSearcher, wave_program
+from repro.search.stages import (
+    finalize_values,
+    merge_topk,
+    pad_queries_to,
+    prune_candidates,
+    rescore_candidates,
+    scan_candidates,
+    score_rows,
 )
 from repro.search.functional import (
     cosine_nns,
@@ -164,6 +194,7 @@ from repro.search.quant import (
     validate_restored,
 )
 from repro.search.plan import (
+    SEGMENT_ALIGN,
     Plan,
     PlanCache,
     detect_device,
@@ -171,6 +202,7 @@ from repro.search.plan import (
     plan_buckets,
     plan_clusters,
     plan_search,
+    plan_segments,
     tune_plan,
 )
 from repro.search.serve import (
@@ -213,8 +245,21 @@ __all__ = [
     "pallas_search",
     "pallas_search_packed",
     "make_sharded_search_fn",
+    "normalize_db_axes",
+    "db_shard_count",
     "CompileCache",
     "MASK_VALUE",
+    # stage primitives (repro.search.stages) — what backends compose
+    "score_rows",
+    "scan_candidates",
+    "rescore_candidates",
+    "prune_candidates",
+    "merge_topk",
+    "finalize_values",
+    "pad_queries_to",
+    # host-RAM cold tier (repro.search.hosttier)
+    "HostTierSearcher",
+    "wave_program",
     # packed state
     "PackedState",
     "pack_state",
@@ -239,6 +284,8 @@ __all__ = [
     "Plan",
     "plan_search",
     "plan_buckets",
+    "plan_segments",
+    "SEGMENT_ALIGN",
     "tune_plan",
     "PlanCache",
     "detect_device",

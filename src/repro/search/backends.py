@@ -32,16 +32,24 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.binning import plan_bins, round_up
 from repro.core.partial_reduce import partial_reduce_with_plan
-from repro.core.rescoring import exact_rescoring
-from repro.core.topk import approx_max_k
 from repro.kernels.partial_reduce import partial_reduce_packed, partial_reduce_pallas
 from repro.parallel.sharding import shard_map_compat
 from repro.search.metrics import get_metric
+from repro.search.stages import (
+    MASK_VALUE,
+    finalize_values,
+    merge_topk,
+    pad_queries_to,
+    prune_candidates,
+    rescore_candidates,
+    scan_candidates,
+    score_gathered,
+    score_rows,
+)
 
 __all__ = [
     "MASK_VALUE",
@@ -57,14 +65,14 @@ __all__ = [
     "pallas_search_packed_quant",
     "prepare_pallas_inputs",
     "make_sharded_search_fn",
+    "normalize_db_axes",
+    "db_shard_count",
     "default_backend",
     "reset_trace_counts",
     "reset_dispatch_counts",
 ]
 
-# Finite -inf surrogate (float32 min): keeps the MXU/VPU paths free of NaN
-# propagation while still losing every comparison against real scores.
-MASK_VALUE = float(np.finfo(np.float32).min)
+# MASK_VALUE is defined in (and re-exported from) ``repro.search.stages``.
 
 # backend name -> number of jit traces (test observability hook).
 TRACE_COUNTS = collections.Counter()
@@ -159,10 +167,8 @@ def dense_search(
     m = get_metric(metric)
     TRACE_COUNTS["xla"] += 1
     q = m.prepare_queries(queries)
-    scores = jnp.einsum("ik,jk->ij", q, database)
-    if row_bias is not None:
-        scores = scores + row_bias[None, :]
-    vals, idxs = approx_max_k(
+    scores = score_rows(q, database, row_bias)
+    vals, idxs = scan_candidates(
         scores,
         k,
         recall_target=recall_target,
@@ -170,37 +176,16 @@ def dense_search(
         aggregate_to_topk=aggregate_to_topk,
         use_bitonic=use_bitonic,
     )
-    if m.negate_output:
-        vals = -vals
-    return vals, idxs
+    return finalize_values(vals, m.negate_output), idxs
 
 
 # --- Quantized two-pass (scan -> exact rescore), repro.search.quant ---------
 
 
-def _rescore_candidates(q, scan_vals, idxs, rescore_db, rescore_bias, k,
-                        k_scan, use_bitonic):
-    """Exact second pass of the quantized search (internal max convention).
-
-    Two stages, mirroring the paper's score/rescore split with the *scan*
-    at reduced precision: first the L bin winners are cut to the
-    ``k_scan`` best by quantized score (``k_scan = k + T``, the
-    over-fetch budget of ``repro.search.quant.scan_k`` — a true top-k
-    entry drops out only past T quantization-promoted rivals, the same
-    event the bin over-fetch already insures), then only those O(M·K')
-    rows are gathered from the full-precision rescore tail and re-scored
-    exactly.  Candidates the scan masked (tombstoned rows, padded bins —
-    their clamped indices would otherwise rescore to a live row's true
-    score and duplicate it into top-k) stay masked.
-    """
-    if k_scan < scan_vals.shape[-1]:
-        scan_vals, sel = jax.lax.top_k(scan_vals, k_scan)
-        idxs = jnp.take_along_axis(idxs, sel, axis=-1)
-    rows = rescore_db[idxs]                           # (m, k_scan, d) gather
-    exact = jnp.einsum("md,mld->ml", q, rows)
-    exact = exact + rescore_bias[idxs]
-    exact = jnp.where(scan_vals > MASK_VALUE * 0.5, exact, MASK_VALUE)
-    return exact_rescoring(exact, idxs, k, mode="max", use_bitonic=use_bitonic)
+# Stage alias: the exact second pass lives in ``repro.search.stages``;
+# the underscored name predates the stage split and stays for callers
+# (and tests) that reached into this module.
+_rescore_candidates = rescore_candidates
 
 
 @functools.partial(
@@ -240,24 +225,20 @@ def dense_search_quant(
     m = get_metric(metric)
     TRACE_COUNTS["xla"] += 1
     q = m.prepare_queries(queries)
-    scores = jnp.einsum("ik,jk->ij", q, database)
-    if scale is not None:
-        scores = scores * scale[None, :]
-    if row_bias is not None:
-        scores = scores + row_bias[None, :]
+    scores = score_rows(q, database, row_bias, scale)
     if rescore_db is not None:
-        vals, idxs = approx_max_k(
+        vals, idxs = scan_candidates(
             scores,
             k_scan,
             recall_target=recall_target,
             reduction_input_size_override=reduction_input_size_override,
             aggregate_to_topk=False,
         )
-        vals, idxs = _rescore_candidates(
+        vals, idxs = rescore_candidates(
             q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
         )
     else:
-        vals, idxs = approx_max_k(
+        vals, idxs = scan_candidates(
             scores,
             k,
             recall_target=recall_target,
@@ -265,53 +246,17 @@ def dense_search_quant(
             aggregate_to_topk=aggregate_to_topk,
             use_bitonic=use_bitonic,
         )
-    if m.negate_output:
-        vals = -vals
-    return vals, idxs
+    return finalize_values(vals, m.negate_output), idxs
 
 
 # --- Cluster-pruned scan (repro.search.cluster) ------------------------------
 
 
-def _cluster_candidates(q, centroids, centroid_bias, cluster_rows,
-                        spill_rows, probes):
-    """Per-query candidate row ids from the pruning side tables.
-
-    Scores the prepared queries against the (C, d) centroids with the same
-    biased-MIPS convention as the row scan, keeps the top-``probes``
-    clusters, and concatenates their slot tables with the always-scanned
-    spill block.  Returns ``(ids, valid)`` where ``ids`` (m, S) are
-    *user-space* row ids clamped to >= 0 and ``valid`` marks real slots —
-    empty slots (padded tails of partially-filled clusters, unused spill
-    capacity) must be masked by the caller so they can never win a bin.
-
-    The slot order INTERLEAVES the probed clusters (slot j of every
-    cluster, then slot j+1, ...) instead of concatenating them whole.
-    Eq. 13's collision bound assumes the true top-k land in random bins;
-    cluster-contiguous order breaks that badly — a query's winners
-    concentrate in its best cluster's slots, adjacent slots share a bin,
-    and measured recall falls below the planned collision term.
-    Interleaving spreads each cluster across the bin space, restoring the
-    random-placement regime the plan prices.
-    """
-    caff = jnp.einsum("md,cd->mc", q, centroids) + centroid_bias[None, :]
-    _, top_c = jax.lax.top_k(caff, probes)
-    m = q.shape[0]
-    slots = cluster_rows[top_c]                       # (m, probes, R)
-    slots = slots.swapaxes(1, 2).reshape(m, -1)       # (m, R * probes)
-    spill = jnp.broadcast_to(
-        spill_rows[None, :], (m, spill_rows.shape[0])
-    )
-    ids = jnp.concatenate([slots, spill], axis=1)     # (m, S)
-    return jnp.maximum(ids, 0), ids >= 0
-
-
-def _pad_queries_to(q, width):
-    """Zero-pad query lanes up to the packed layout's d_pad (exact for dot
-    products — the database's padded lanes are zero too)."""
-    if q.shape[1] == width:
-        return q
-    return jnp.pad(q, ((0, 0), (0, width - q.shape[1])))
+# Stage aliases (see ``repro.search.stages``): the pruning front-end and
+# the lane-padding helper moved to the stage layer; the underscored names
+# stay for in-repo callers that predate the split.
+_cluster_candidates = prune_candidates
+_pad_queries_to = pad_queries_to
 
 
 @functools.partial(
@@ -357,22 +302,18 @@ def cluster_search(
     m_obj = get_metric(metric)
     TRACE_COUNTS[trace_as] += 1
     q = m_obj.prepare_queries(queries)
-    idc, valid = _cluster_candidates(
+    idc, valid = prune_candidates(
         q, centroids, centroid_bias, cluster_rows, spill_rows, probes
     )
-    qp = _pad_queries_to(q, database.shape[1])
+    qp = pad_queries_to(q, database.shape[1])
     rows = database[idc]                              # (m, S, d) gather
-    scores = jnp.einsum("md,msd->ms", qp, rows.astype(jnp.float32))
-    scores = scores + row_bias.reshape(-1)[idc]
-    scores = jnp.where(valid, scores, MASK_VALUE)
-    vals, pos = approx_max_k(
+    scores = score_gathered(qp, rows.astype(jnp.float32), row_bias, idc, valid)
+    vals, pos = scan_candidates(
         scores, k, recall_target=target_scan,
         aggregate_to_topk=aggregate_to_topk, use_bitonic=use_bitonic,
     )
     idxs = jnp.take_along_axis(idc, pos, axis=-1)
-    if m_obj.negate_output:
-        vals = -vals
-    return vals, idxs
+    return finalize_values(vals, m_obj.negate_output), idxs
 
 
 @functools.partial(
@@ -417,34 +358,30 @@ def cluster_search_quant(
     m_obj = get_metric(metric)
     TRACE_COUNTS[trace_as] += 1
     q = m_obj.prepare_queries(queries)
-    idc, valid = _cluster_candidates(
+    idc, valid = prune_candidates(
         q, centroids, centroid_bias, cluster_rows, spill_rows, probes
     )
-    qp = _pad_queries_to(q, database.shape[1])
+    qp = pad_queries_to(q, database.shape[1])
     rows = database[idc]
-    scores = jnp.einsum("md,msd->ms", qp, rows.astype(jnp.float32))
-    if scale is not None:
-        scores = scores * scale.reshape(-1)[idc]
-    scores = scores + row_bias.reshape(-1)[idc]
-    scores = jnp.where(valid, scores, MASK_VALUE)
+    scores = score_gathered(
+        qp, rows.astype(jnp.float32), row_bias, idc, valid, scale
+    )
     if rescore_db is not None:
-        vals, pos = approx_max_k(
+        vals, pos = scan_candidates(
             scores, k_scan, recall_target=target_scan,
             aggregate_to_topk=False,
         )
         idxs = jnp.take_along_axis(idc, pos, axis=-1)
-        vals, idxs = _rescore_candidates(
+        vals, idxs = rescore_candidates(
             q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
         )
     else:
-        vals, pos = approx_max_k(
+        vals, pos = scan_candidates(
             scores, k, recall_target=target_scan,
             aggregate_to_topk=aggregate_to_topk, use_bitonic=use_bitonic,
         )
         idxs = jnp.take_along_axis(idc, pos, axis=-1)
-    if m_obj.negate_output:
-        vals = -vals
-    return vals, idxs
+    return finalize_values(vals, m_obj.negate_output), idxs
 
 
 # --- Pallas backend ---------------------------------------------------------
@@ -527,12 +464,8 @@ def _pallas_search_jit(
     )
     vals, idxs = vals[:m], jnp.minimum(idxs[:m], n - 1)
     if aggregate_to_topk:
-        vals, idxs = exact_rescoring(
-            vals, idxs, k, mode="max", use_bitonic=use_bitonic
-        )
-    if m_obj.negate_output:
-        vals = -vals
-    return vals, idxs
+        vals, idxs = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
+    return finalize_values(vals, m_obj.negate_output), idxs
 
 
 @functools.partial(
@@ -576,12 +509,8 @@ def pallas_search_packed(
     )
     idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
     if aggregate_to_topk:
-        vals, idxs = exact_rescoring(
-            vals, idxs, k, mode="max", use_bitonic=use_bitonic
-        )
-    if m_obj.negate_output:
-        vals = -vals
-    return vals, idxs
+        vals, idxs = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
+    return finalize_values(vals, m_obj.negate_output), idxs
 
 
 @functools.partial(
@@ -631,16 +560,12 @@ def pallas_search_packed_quant(
     )
     idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
     if rescore_db is not None:
-        vals, idxs = _rescore_candidates(
+        vals, idxs = rescore_candidates(
             q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic
         )
     elif aggregate_to_topk:
-        vals, idxs = exact_rescoring(
-            vals, idxs, k, mode="max", use_bitonic=use_bitonic
-        )
-    if m_obj.negate_output:
-        vals = -vals
-    return vals, idxs
+        vals, idxs = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
+    return finalize_values(vals, m_obj.negate_output), idxs
 
 
 def pallas_search(
@@ -700,13 +625,29 @@ def pallas_search(
 # --- Sharded backend (paper §7) ---------------------------------------------
 
 
+def normalize_db_axes(db_axis) -> Tuple[str, ...]:
+    """Canonicalize a database-axis spec (``"model"`` or a tuple of mesh
+    axis names) into a tuple; the tuple form is a 2-D/N-D database split
+    whose shards linearize row-major over the named axes."""
+    return (db_axis,) if isinstance(db_axis, str) else tuple(db_axis)
+
+
+def db_shard_count(mesh: Mesh, db_axis) -> int:
+    """Number of database shards: the product of the mesh extents of every
+    axis the database rows are split over."""
+    count = 1
+    for a in normalize_db_axes(db_axis):
+        count *= mesh.shape[a]
+    return count
+
+
 def make_sharded_search_fn(
     mesh: Mesh,
     *,
     metric: str = "mips",
     k: int = 10,
     recall_target: float = 0.95,
-    db_axis: str = "model",
+    db_axis="model",
     batch_axis: Optional[str] = None,
     use_bitonic: bool = False,
     k_scan: Optional[int] = None,
@@ -720,6 +661,18 @@ def make_sharded_search_fn(
     Each shard PartialReduces its rows with recall accounted against the
     *global* N (``reduction_input_size_override``), the L bin winners are
     all-gathered, and ExactRescoring runs replicated.
+
+    ``db_axis`` may be a single mesh axis name or a *tuple* of names: the
+    tuple form splits the database rows over the product of those axes
+    (a pod-shaped 2-D mesh folds into one logical row partition), with
+    shard ids — and hence the global-id offset arithmetic — linearized
+    row-major over the named axes, matching both ``P((a, b), None)``
+    placement and the tiled all-gather's concatenation order.  Combining
+    a tuple ``db_axis`` with ``batch_axis`` gives full 2-D+ (query x
+    database) sharding: per-device work is O(M/batch_shards x
+    N/db_shards) and only the O(k_scan) per-shard winners cross the ICI
+    (paper §7's traffic contract, priced by ``repro.search.plan`` as the
+    ici term in ``Index.explain()``).
 
     Quantized storage tiers pass the extra sharded operands ``scale``
     (int8 per-row scale, P(db_axis)) and ``rescore_db``/``rescore_bias``
@@ -742,12 +695,18 @@ def make_sharded_search_fn(
     """
     m_obj = get_metric(metric)
     scan_k = k if k_scan is None else k_scan
+    db_axes = normalize_db_axes(db_axis)
+    if batch_axis is not None and batch_axis in db_axes:
+        raise ValueError(
+            f"batch_axis {batch_axis!r} cannot also shard the database "
+            f"(db_axis={db_axes!r})"
+        )
+    n_shards = db_shard_count(mesh, db_axes)
 
     def searcher(queries, database, row_bias=None, scale=None,
                  rescore_db=None, rescore_bias=None, centroids=None,
                  centroid_bias=None, cluster_rows=None, spill_rows=None):
         global_n = database.shape[0]
-        n_shards = mesh.shape[db_axis]
         if global_n % n_shards:
             raise ValueError(
                 f"database rows {global_n} not divisible by {n_shards} shards"
@@ -762,7 +721,7 @@ def make_sharded_search_fn(
         qspec = P(batch_axis, None) if batch_axis else P(None, None)
 
         args = [q, database, bias]
-        in_specs = [qspec, P(db_axis, None), P(db_axis)]
+        in_specs = [qspec, P(db_axes, None), P(db_axes)]
         with_scale = scale is not None
         with_rescore = rescore_db is not None
         with_cluster = centroids is not None
@@ -775,10 +734,10 @@ def make_sharded_search_fn(
             )
         if with_scale:
             args.append(scale)
-            in_specs.append(P(db_axis))
+            in_specs.append(P(db_axes))
         if with_rescore:
             args.extend([rescore_db, rescore_bias])
-            in_specs.extend([P(db_axis, None), P(db_axis)])
+            in_specs.extend([P(db_axes, None), P(db_axes)])
         if with_cluster:
             # Side tables replicated: centroid ranking must be identical
             # on every shard for the ownership partition to cover the
@@ -787,7 +746,9 @@ def make_sharded_search_fn(
             in_specs.extend([P(None, None), P(None), P(None, None), P(None)])
 
         def local_fn(q, db, b, *rest):
-            axis_idx = jax.lax.axis_index(db_axis)
+            # Linearized shard id over the (possibly multi-axis) database
+            # split — row-major over db_axes, matching tiled all-gather.
+            axis_idx = jax.lax.axis_index(db_axes)
             n_local = db.shape[0]
             offset = axis_idx.astype(jnp.int32) * n_local
             rest = list(rest)
@@ -797,7 +758,7 @@ def make_sharded_search_fn(
             )
             if with_cluster:
                 cents, cbias, crows, srows = rest
-                gidc, valid = _cluster_candidates(
+                gidc, valid = prune_candidates(
                     q, cents, cbias, crows, srows, cluster_probes
                 )
                 # Global candidate ids -> this shard's row range; slots
@@ -805,13 +766,9 @@ def make_sharded_search_fn(
                 local = gidc - offset
                 owned = valid & (local >= 0) & (local < n_local)
                 lidc = jnp.clip(local, 0, n_local - 1)
-                scores = jnp.einsum(
-                    "md,msd->ms", q, db[lidc].astype(jnp.float32)
+                scores = score_gathered(
+                    q, db[lidc].astype(jnp.float32), b, lidc, owned, sc
                 )
-                if sc is not None:
-                    scores = scores * sc[lidc]
-                scores = scores + b[lidc]
-                scores = jnp.where(owned, scores, MASK_VALUE)
                 s_slots = scores.shape[-1]
                 plan = plan_bins(
                     s_slots, min(scan_k, s_slots), cluster_target_scan
@@ -834,10 +791,7 @@ def make_sharded_search_fn(
                     )
                 # idxs are global user ids already — no offset to add.
             else:
-                scores = jnp.einsum("ik,jk->ij", q, db)
-                if sc is not None:
-                    scores = scores * sc[None, :]
-                scores = scores + b[None, :]
+                scores = score_rows(q, db, b, sc)
                 plan = plan_bins(
                     n_local, min(scan_k, n_local), recall_target,
                     reduction_input_size_override=global_n,
@@ -862,14 +816,12 @@ def make_sharded_search_fn(
                         vals > MASK_VALUE * 0.5, exact, MASK_VALUE
                     )
                 idxs = idxs + offset
-            vals = jax.lax.all_gather(vals, db_axis, axis=-1, tiled=True)
-            idxs = jax.lax.all_gather(idxs, db_axis, axis=-1, tiled=True)
-            top_v, top_i = exact_rescoring(
-                vals, idxs, k, mode="max", use_bitonic=use_bitonic
-            )
-            if m_obj.negate_output:
-                top_v = -top_v
-            return top_v, top_i
+            # The only cross-device traffic of the whole search: O(k_scan)
+            # (value, global id) winners per shard, merged replicated.
+            vals = jax.lax.all_gather(vals, db_axes, axis=-1, tiled=True)
+            idxs = jax.lax.all_gather(idxs, db_axes, axis=-1, tiled=True)
+            top_v, top_i = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
+            return finalize_values(top_v, m_obj.negate_output), top_i
 
         fn = shard_map_compat(
             local_fn,

@@ -1,0 +1,209 @@
+"""Host-RAM cold tier: segment-wave search over larger-than-HBM databases.
+
+``Index.build(..., residency="host")`` keeps the packed database in host
+memory and bounds device HBM to a planner-sized budget
+(``repro.search.plan.plan_segments``): each search streams the rows
+through the device in fixed-shape *segment waves* — slice segment i+1
+out of the host-resident packed arrays and start its async ``device_put``
+(the double-buffered prefetch) *before* dispatching the wave program over
+segment i, so the copy of the next wave overlaps the scan of the current
+one.  N is then bounded by host memory, not one device's HBM, at the cost
+of re-streaming the database per query batch — the right trade exactly
+when the database dwarfs the query stream.
+
+The wave program is an assembly of the shared stage primitives
+(``repro.search.stages``): score the segment, bin-scan it with recall
+accounted against the *global* N (``reduction_input_size_override`` —
+the same Eq. 13–14 composition argument as a §7 shard), exactly rescore
+the quantized tiers' candidates from the segment's own f32 tail (local
+ids, before any offset), translate ids by the segment's row offset, and
+``merge_topk`` into the running (m, k) carry.  Because the segment
+offset is a *traced* scalar operand and every wave has the same shape,
+the steady state compiles at most two programs — interior waves and the
+final wave (which applies the metric's sign flip) — and then runs one
+dispatch per wave with zero retraces, whatever N grows to.
+
+Observability follows the backend convention: ``TRACE_COUNTS["host"]``
+per wave-program trace, ``DISPATCH_COUNTS["host"]`` per wave dispatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.search.backends import DISPATCH_COUNTS, TRACE_COUNTS
+from repro.search.metrics import get_metric
+from repro.search.stages import (
+    MASK_VALUE,
+    finalize_values,
+    merge_topk,
+    rescore_candidates,
+    scan_candidates,
+    score_rows,
+)
+
+__all__ = ["HostTierSearcher", "wave_program"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "k", "k_scan", "recall_target", "global_n", "rescore",
+        "is_last", "use_bitonic",
+    ),
+)
+def wave_program(
+    queries: jnp.ndarray,
+    seg_db: jnp.ndarray,
+    seg_bias: jnp.ndarray,
+    seg_scale: Optional[jnp.ndarray],
+    seg_rescore_db: Optional[jnp.ndarray],
+    seg_rescore_bias: Optional[jnp.ndarray],
+    offset: jnp.ndarray,
+    carry_vals: jnp.ndarray,
+    carry_idxs: jnp.ndarray,
+    *,
+    metric: str,
+    k: int,
+    k_scan: int,
+    recall_target: float,
+    global_n: int,
+    rescore: bool,
+    is_last: bool,
+    use_bitonic: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One segment wave: scan -> (rescore) -> offset -> merge into carry.
+
+    ``offset`` (the segment's first global row id) is a traced int32
+    scalar, NOT a static — every interior wave shares one compiled
+    program.  ``global_n`` carries the Eq. 13–14 recall accounting: bins
+    over this segment are laid out as if the scan saw the whole database,
+    so the per-wave collision terms compose into the same global bound a
+    resident scan plans for — and the candidate top-k is containment-
+    equivalent to the resident oracle's, which is what the layout-parity
+    grid asserts bit-exactly.  ``is_last`` folds the metric sign flip
+    into the final wave (distance metrics thus trace twice: interior +
+    last; MIPS traces once).
+    """
+    m_obj = get_metric(metric)
+    TRACE_COUNTS["host"] += 1
+    q = m_obj.prepare_queries(queries)
+    scores = score_rows(q, seg_db, seg_bias, seg_scale)
+    if rescore:
+        vals, idxs = scan_candidates(
+            scores, k_scan, recall_target=recall_target,
+            reduction_input_size_override=global_n, aggregate_to_topk=False,
+        )
+        vals, idxs = rescore_candidates(
+            q, vals, idxs, seg_rescore_db, seg_rescore_bias, k, k_scan,
+            use_bitonic,
+        )
+    else:
+        vals, idxs = scan_candidates(
+            scores, k, recall_target=recall_target,
+            reduction_input_size_override=global_n, aggregate_to_topk=True,
+            use_bitonic=use_bitonic,
+        )
+    idxs = idxs + offset
+    vals, idxs = merge_topk(
+        carry_vals, carry_idxs, k,
+        extra_vals=vals, extra_idxs=idxs, use_bitonic=use_bitonic,
+    )
+    if is_last:
+        vals = finalize_values(vals, m_obj.negate_output)
+    return vals, idxs
+
+
+class HostTierSearcher:
+    """Callable ``(queries, packed_state) -> (values, indices)`` that
+    drives the segment-wave schedule over a host-resident xla-layout
+    ``repro.search.packed.PackedState``.
+
+    Built once per (spec, capacity, query shape) by ``Index`` and cached
+    in its ``CompileCache`` — the wave program underneath additionally
+    memoizes its traces, so repeat searches at the same shape are pure
+    dispatches.
+    """
+
+    def __init__(self, spec, *, k_scan: int, segment_rows: int):
+        if spec.segment_rows is not None:
+            segment_rows = spec.segment_rows
+        if segment_rows <= 0:
+            raise ValueError(
+                f"segment_rows must be positive, got {segment_rows}"
+            )
+        self.spec = spec
+        self.segment_rows = segment_rows
+        self.k_scan = k_scan
+        # The hot device the waves stream through: the process default
+        # (the accelerator when one exists; under tests, the host CPU —
+        # same staging code path, trivial copies).
+        self.device = jax.devices()[0]
+
+    def num_segments(self, capacity: int) -> int:
+        if capacity % self.segment_rows:
+            raise ValueError(
+                f"capacity {capacity} is not a whole number of "
+                f"{self.segment_rows}-row segments — Index.build/add must "
+                "pad capacity to whole waves"
+            )
+        return capacity // self.segment_rows
+
+    def _stage(self, pk, seg: int):
+        """Kick off the async host->device copy of one segment's operands
+        (slices of the host-resident packed arrays)."""
+        lo, hi = seg * self.segment_rows, (seg + 1) * self.segment_rows
+        put = lambda a: jax.device_put(a[lo:hi], self.device)
+        quantized = pk.scale is not None
+        rescoring = pk.rescore_db is not None
+        return (
+            put(pk.db),
+            put(pk.bias),
+            put(pk.scale) if quantized else None,
+            put(pk.rescore_db) if rescoring else None,
+            put(pk.rescore_bias) if rescoring else None,
+        )
+
+    def __call__(self, queries, pk) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cap = pk.db.shape[0]
+        waves = self.num_segments(cap)
+        seg = self.segment_rows
+        spec = self.spec
+        rescore = pk.rescore_db is not None
+        m = queries.shape[0]
+        q = jax.device_put(queries, self.device)
+        carry_vals = jnp.full((m, spec.k), MASK_VALUE, jnp.float32)
+        carry_idxs = jnp.zeros((m, spec.k), jnp.int32)
+        nxt = self._stage(pk, 0)
+        for i in range(waves):
+            cur = nxt
+            if i + 1 < waves:
+                # Double buffer: the next wave's copy is in flight while
+                # this wave's program runs.
+                nxt = self._stage(pk, i + 1)
+            DISPATCH_COUNTS["host"] += 1
+            carry_vals, carry_idxs = wave_program(
+                q, cur[0], cur[1], cur[2], cur[3], cur[4],
+                jnp.int32(i * seg), carry_vals, carry_idxs,
+                metric=spec.metric, k=spec.k,
+                k_scan=min(self.k_scan, seg),
+                recall_target=spec.recall_target,
+                global_n=cap, rescore=rescore,
+                is_last=(i == waves - 1),
+                use_bitonic=spec.use_bitonic,
+            )
+        return carry_vals, carry_idxs
+
+    def occupancy(self, pk) -> list:
+        """Per-segment live-row fraction (benchmark observability: how
+        much of each wave's streamed bytes score real rows)."""
+        bias = np.asarray(pk.bias)
+        out = []
+        for s in range(self.num_segments(pk.db.shape[0])):
+            blk = bias[s * self.segment_rows : (s + 1) * self.segment_rows]
+            out.append(float(np.mean(blk > MASK_VALUE * 0.5)))
+        return out

@@ -36,6 +36,7 @@ from repro.core.binning import BinPlan, plan_bins, round_up
 from repro.search import backends, packed as packedlib, plan as planlib
 from repro.search import cluster as clusterlib
 from repro.search import faults as faultslib
+from repro.search import hosttier as hosttierlib
 from repro.search import quant
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
@@ -113,6 +114,7 @@ class Index:
         plan: Union[str, planlib.Plan] = "model",
         device: Optional[str] = None,
         plan_cache: Optional[planlib.PlanCache] = None,
+        hbm_budget_bytes: Optional[float] = None,
         **spec_kwargs,
     ) -> "Index":
         """Create an index over ``database`` rows (N, D).
@@ -136,6 +138,12 @@ class Index:
         Explicit block fields in ``spec``/``spec_kwargs`` always pin the
         corresponding choice.  ``device`` names a hardware profile from
         ``repro.core.roofline.HARDWARE`` (default: auto-detect).
+
+        ``residency="host"`` (a spec field, accepted here as a keyword)
+        builds the cold tier: packed operands stay in host RAM and the
+        planner sizes the segment waves against ``hbm_budget_bytes``
+        (default: the device profile's HBM) — capacity is padded to whole
+        segments so every wave shares one compiled program shape.
 
         >>> import jax.numpy as jnp
         >>> idx = Index.build(jnp.eye(32), metric="mips", k=2)
@@ -181,6 +189,8 @@ class Index:
                 query_block=spec.query_block,
                 storage=spec.storage, rescore=spec.rescore_enabled,
                 cluster=spec.cluster,
+                residency=spec.residency, segment_rows=spec.segment_rows,
+                hbm_budget_bytes=hbm_budget_bytes,
             )
             if plan == "measure" and plan_obj.source != "user":
                 plan_obj = planlib.tune_plan(
@@ -192,6 +202,14 @@ class Index:
                 f"plan must be 'model', 'measure' or a Plan, got {plan!r}"
             )
         spec = plan_obj.to_spec(spec)
+
+        if spec.residency == "host" and spec.segment_rows:
+            # The wave program has one fixed shape; pad capacity (with
+            # tombstoned rows) to a whole number of segment waves.
+            seg_cap = round_up(cap, spec.segment_rows)
+            if seg_cap > cap:
+                database = jnp.pad(database, ((0, seg_cap - cap), (0, 0)))
+                cap = seg_cap
 
         live = jnp.zeros((cap,), bool).at[:n].set(True)
         index = cls(
@@ -290,6 +308,7 @@ class Index:
         backend: Optional[str] = None,
         device: Optional[str] = None,
         pin_from: Optional[planlib.Plan] = None,
+        db_shards: Optional[int] = None,
     ) -> planlib.Plan:
         """One re-planning entry point for growth/shard/explain.
 
@@ -317,6 +336,11 @@ class Index:
             reduction_input_size_override=spec.reduction_input_size_override,
             storage=spec.storage, rescore=spec.rescore_enabled,
             cluster=spec.cluster,
+            db_shards=(
+                self._num_db_shards() if db_shards is None else db_shards
+            ),
+            residency=spec.residency,
+            segment_rows=spec.segment_rows,
             **tiles,
         )
 
@@ -387,6 +411,35 @@ class Index:
                 "k_scan": plan.k_scan or plan.k,
             },
         }
+        if self.spec.residency == "host":
+            seg = self.spec.segment_rows or plan.segment_rows
+            waves = self.capacity // seg if seg else 0
+            sbytes = quant.storage_bytes(self.spec.storage)
+            # The segment schedule a search will actually run: fixed-shape
+            # waves streamed through device HBM, double-buffered one ahead.
+            report["residency"] = {
+                "tier": "host",
+                "segment_rows": seg,
+                "num_segments": waves,
+                "segment_hbm_bytes": seg * self.dim * sbytes,
+                "hbm_budget_bytes": plan.hbm_budget_bytes,
+                "schedule": [
+                    {"wave": i, "rows": [i * seg, (i + 1) * seg]}
+                    for i in range(waves)
+                ],
+            }
+        if self._mesh is not None:
+            # The §7 distributed-traffic picture: per-shard scan sizing
+            # plus the one collective — the O(k_scan)-per-shard (value,
+            # global id) all-gather — priced against the ICI bandwidth.
+            report["sharding"] = {
+                "db_axes": list(self._db_axes()),
+                "batch_axis": self._batch_axis,
+                "db_shards": plan.db_shards,
+                "per_shard_n": plan.n // max(plan.db_shards, 1),
+                "ici_gather_bytes": plan.ici_bytes,
+                "ici_s": plan.ici_s,
+            }
         cp = self._cluster_plan_in_effect()
         report["cluster"] = {"mode": self.spec.cluster,
                              "enabled": cp is not None}
@@ -525,6 +578,11 @@ class Index:
 
     def _resolve_backend(self) -> str:
         b = self.spec.backend
+        if self.spec.residency == "host":
+            # The cold tier scans xla-layout segment waves; "auto" never
+            # resolves to pallas/sharded here (spec validation already
+            # rejects them explicitly).
+            return "xla"
         if b == "auto":
             return backends.default_backend(self._mesh)
         if b == "sharded" and self._mesh is None:
@@ -533,6 +591,16 @@ class Index:
                 ".shard(mesh, db_axis=...) first"
             )
         return b
+
+    def _db_axes(self) -> tuple:
+        """Database mesh axes as a tuple (1-D: one name; 2-D: several)."""
+        return backends.normalize_db_axes(self._db_axis)
+
+    def _num_db_shards(self) -> int:
+        """Database shard count — the product of the db-axis extents."""
+        if self._mesh is None:
+            return 1
+        return backends.db_shard_count(self._mesh, self._db_axis)
 
     def pack(self) -> packedlib.PackedState:
         """The device-resident packed operands for the resolved backend.
@@ -552,8 +620,24 @@ class Index:
         return self._packed
 
     def _place_packed(self):
-        """Pin packed operands to the mesh layout (no-op unmeshed)."""
-        if self._mesh is None or self._packed is None:
+        """Pin packed operands to their residency: host RAM for the cold
+        tier, the mesh layout when sharded (no-op for plain hbm)."""
+        if self._packed is None:
+            return
+        if self.spec.residency == "host":
+            # The packed arrays live on the host CPU between searches;
+            # HostTierSearcher streams segment slices to the hot device.
+            cpu = jax.local_devices(backend="cpu")[0]
+            pk = self._packed
+            pk.db = jax.device_put(pk.db, cpu)
+            pk.bias = jax.device_put(pk.bias, cpu)
+            if pk.scale is not None:
+                pk.scale = jax.device_put(pk.scale, cpu)
+            if pk.rescore_db is not None:
+                pk.rescore_db = jax.device_put(pk.rescore_db, cpu)
+                pk.rescore_bias = jax.device_put(pk.rescore_bias, cpu)
+            return
+        if self._mesh is None:
             return
         rows = NamedSharding(self._mesh, P(self._db_axis, None))
         per_row = NamedSharding(self._mesh, P(self._db_axis))
@@ -610,7 +694,10 @@ class Index:
             queries = queries.astype(jnp.dtype(self.spec.dtype))
         if queries.shape[0] <= self.spec.query_block:
             return SearchResult(*self._search_block(queries))
-        if self.spec.stream:
+        if self.spec.stream and self.spec.residency != "host":
+            # The host tier's wave driver stages segments from Python, so
+            # multi-block batches run the (bit-identical) per-block loop —
+            # each block still re-streams the database once.
             return self._search_stream(queries)
         return self._search_loop(queries)
 
@@ -624,6 +711,12 @@ class Index:
     def _search_block(self, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         backend = self._resolve_backend()
         pk = self.pack()
+        if self.spec.residency == "host":
+            key = ("host", q.shape, str(q.dtype), self.capacity, self.spec)
+            fn = self._cache.get(key, self._build_host_searcher)
+            # Dispatch accounting (one per segment wave) lives inside the
+            # wave driver.
+            return fn(q, pk)
         key = ("block", backend, q.shape, str(q.dtype), self.capacity, self.spec)
         batch_axis = None
         if backend == "sharded":
@@ -634,6 +727,15 @@ class Index:
         )
         backends.DISPATCH_COUNTS[backend] += 1
         return fn(q, *pk.operands())
+
+    def _build_host_searcher(self) -> hosttierlib.HostTierSearcher:
+        pk = self._packed
+        return hosttierlib.HostTierSearcher(
+            self.spec,
+            k_scan=packedlib.scan_k_for(self.spec, pk.n),
+            segment_rows=self.spec.segment_rows
+            or self.kernel_plan.segment_rows,
+        )
 
     def _search_loop(self, queries: jnp.ndarray) -> SearchResult:
         """Per-block Python loop: one dispatch per tile.
@@ -893,7 +995,11 @@ class Index:
             # search, so over-allocation costs FLOPs, not just memory.
             block = self._capacity_block
             if self._mesh is not None:
-                block = math.lcm(block, self._mesh.shape[self._db_axis])
+                block = math.lcm(block, self._num_db_shards())
+            if self.spec.residency == "host" and self.spec.segment_rows:
+                # Capacity stays a whole number of segment waves, so the
+                # compiled wave program's shape never changes under growth.
+                block = math.lcm(block, self.spec.segment_rows)
             new_cap = round_up(required, block)
             grow = new_cap - self.capacity
             self._db = jnp.pad(self._db, ((0, grow), (0, 0)))
@@ -1031,6 +1137,7 @@ class Index:
             capacity_block=int(meta["capacity_block"]),
         )
         index._packed = packedlib.restore_state(arrays, meta["packed"], spec)
+        index._place_packed()  # host-resident specs re-pin to host RAM
         return index
 
     # -- sharding ------------------------------------------------------------
@@ -1039,18 +1146,29 @@ class Index:
         self,
         mesh: Mesh,
         *,
-        db_axis: str = "model",
+        db_axis="model",
         batch_axis: Optional[str] = None,
     ) -> "Index":
         """Return a mesh-sharded copy: rows P(db_axis, None), queries
         optionally sharded over ``batch_axis``.
 
-        Capacity is padded (with tombstoned rows) to a multiple of the shard
-        count; recall accounting against the global N is handled by the
-        sharded backend internally.  The packed layout — including the
-        metric precompute — is carried over (``relayout``), not rebuilt.
+        ``db_axis`` may be one mesh axis name or a *tuple* of names — the
+        tuple form folds a pod-shaped (multi-host-shaped) mesh into one
+        logical database split over the product of those axes; pairing it
+        (or a single db axis) with ``batch_axis`` gives 2-D query x
+        database sharding.  Capacity is padded (with tombstoned rows) to
+        a multiple of the shard count; recall accounting against the
+        global N is handled by the sharded backend internally.  The
+        packed layout — including the metric precompute — is carried over
+        (``relayout``), not rebuilt.
         """
-        n_shards = mesh.shape[db_axis]
+        if self.spec.residency != "hbm":
+            raise ValueError(
+                "host-resident indexes cannot be sharded — the cold tier "
+                "streams segments through a single device's HBM; rebuild "
+                "with residency='hbm' first"
+            )
+        n_shards = backends.db_shard_count(mesh, db_axis)
         cap = round_up(self.capacity, n_shards)
         db, live = self._db, self._live
         if cap > self.capacity:
@@ -1063,7 +1181,7 @@ class Index:
             p = self._kernel_plan
             sharded_plan = dataclasses.replace(
                 self._replan(n=cap, m=p.m or None, backend="sharded",
-                             pin_from=p),
+                             pin_from=p, db_shards=n_shards),
                 source=p.source,
             )
         out = Index(

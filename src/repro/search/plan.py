@@ -68,6 +68,8 @@ __all__ = [
     "plan_search",
     "plan_buckets",
     "plan_clusters",
+    "plan_segments",
+    "SEGMENT_ALIGN",
     "tune_plan",
     "detect_device",
     "hlo_check",
@@ -96,6 +98,11 @@ SCORE_TILE_BUDGET = 64 * 2**20
 # tile of query rows, so a lone 1-row request is not padded to a full
 # query_block.
 MIN_SERVE_BUCKET = 8
+
+# Host-tier segment rows round up to this multiple so capacity growth
+# (Index.add) lands on whole waves — the compiled wave program's shapes
+# never change, keeping the zero-retrace steady state.
+SEGMENT_ALIGN = 1024
 
 # Cluster-pruning cost model (repro.search.cluster).  A gathered candidate
 # row costs more than a streamed one — the pruned scan trades the fused
@@ -247,6 +254,25 @@ class Plan:
     # (collision term over the scanned slots x the cluster-miss term) and
     # the roofline numbers model the gathered pruned program.
     cluster: Optional[clusterlib.ClusterPlan] = None
+    # database shard count for backend="sharded" (1 = unsharded/1-device):
+    # the scan cost above is then priced per shard — O(min(M, N/shards)),
+    # the §7 traffic contract — and the all-gather below is the only
+    # cross-device term.
+    db_shards: int = 1
+    # bytes crossing the ICI per dispatch (each shard contributes its
+    # O(k_scan) (f32 value, int32 global id) winners to the all-gather)
+    # and the resulting collective wall time at the profile's
+    # ici_bandwidth; both 0 when db_shards == 1.
+    ici_bytes: float = 0.0
+    ici_s: float = 0.0
+    # host-RAM cold tier (spec.residency="host"): the segment-wave
+    # schedule — fixed segment_rows per wave, num_segments waves per
+    # search, two segments HBM-resident at once (scan + double-buffered
+    # prefetch) inside hbm_budget_bytes.  All 0 for residency="hbm".
+    residency: str = "hbm"
+    segment_rows: int = 0
+    num_segments: int = 0
+    hbm_budget_bytes: float = 0.0
 
     @property
     def bin_size(self) -> int:
@@ -291,6 +317,7 @@ class Plan:
             # the f32 tier, which SearchSpec accepts — pass it verbatim so
             # an explicit rescore=False footprint plan stays rescore-off.
             rescore=self.rescore,
+            residency=self.residency,
         )
         return dataclasses.replace(
             base,
@@ -299,6 +326,7 @@ class Plan:
             query_block=base.query_block or self.query_block,
             serve_buckets=base.serve_buckets
             or plan_buckets(base.query_block or self.query_block),
+            segment_rows=base.segment_rows or (self.segment_rows or None),
         )
 
     def summary(self) -> dict:
@@ -588,6 +616,55 @@ def _plan_query_block(n: int, backend: str) -> int:
     return min(qb, DEFAULT_QUERY_BLOCK)
 
 
+def plan_segments(
+    *,
+    n: int,
+    d: int,
+    db_bytes: int,
+    hbm_budget_bytes: float,
+    rescore: bool = False,
+    segment_rows: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Host-tier segment schedule: ``(segment_rows, num_segments)``.
+
+    Two segments are HBM-resident at once — the wave being scanned and
+    the double-buffered prefetch of the next — so one segment's bytes
+    must fit in *half* of ``hbm_budget_bytes``.  A segment row costs its
+    stored width plus the per-row bias/scale vectors, plus the f32
+    rescore tail when the quantized two-pass runs.  Rows round up to
+    ``SEGMENT_ALIGN`` (whole waves survive capacity growth without a
+    shape change), and the returned schedule always covers ``n``:
+    ``segment_rows * num_segments >= n`` — ``Index.build`` pads capacity
+    up to that product so every wave is the same compiled shape.
+
+    An explicit ``segment_rows`` pins the wave shape (the budget check is
+    skipped — the caller owns the consequences), mirroring the tile-field
+    contract everywhere else in this module.
+
+    >>> plan_segments(n=4096, d=128, db_bytes=4, hbm_budget_bytes=2**20)
+    (1024, 4)
+    """
+    if n <= 0:
+        raise ValueError(f"need positive n, got {n}")
+    per_row = float(d * db_bytes) + 8.0            # stored row + bias/scale
+    if rescore:
+        per_row += 4.0 * d + 4.0                   # f32 rescore tail + bias
+    if segment_rows is None:
+        if hbm_budget_bytes <= 0:
+            raise ValueError(
+                f"hbm_budget_bytes must be positive, got {hbm_budget_bytes}"
+            )
+        fit = int(hbm_budget_bytes / 2.0 / per_row)
+        # Align DOWN so the two resident segments stay inside the budget;
+        # one SEGMENT_ALIGN wave is the floor regardless (a sub-1024-row
+        # wave would thrash the dispatch pipeline for no memory win).
+        segment_rows = max(
+            SEGMENT_ALIGN, (fit // SEGMENT_ALIGN) * SEGMENT_ALIGN
+        )
+    num_segments = -(-n // segment_rows)
+    return segment_rows, num_segments
+
+
 def plan_search(
     *,
     n: int,
@@ -606,6 +683,10 @@ def plan_search(
     storage: str = "f32",
     rescore: Optional[bool] = None,
     cluster: str = "off",
+    db_shards: int = 1,
+    residency: str = "hbm",
+    segment_rows: Optional[int] = None,
+    hbm_budget_bytes: Optional[float] = None,
 ) -> Plan:
     """Derive every kernel parameter analytically (Eq. 4–10 + Eq. 13–14).
 
@@ -667,10 +748,29 @@ def plan_search(
     ks = quant.scan_k(storage, k, n=n) if rescore_on else k
     if cluster not in ("auto", "off"):
         raise ValueError(f'cluster must be "auto" or "off", got {cluster!r}')
+    if residency not in ("hbm", "host"):
+        raise ValueError(
+            f'residency must be "hbm" or "host", got {residency!r}'
+        )
+    if residency == "host" and backend in ("pallas", "sharded"):
+        raise ValueError(
+            f'residency="host" requires the xla backend, got {backend!r}'
+        )
+    if db_shards < 1:
+        raise ValueError(f"db_shards must be >= 1, got {db_shards}")
     cplan = (
         plan_clusters(n=n, k_scan=ks, recall_target=recall_target)
-        if cluster == "auto" else None
+        # Host residency never evaluates pruning: the pruned program
+        # gathers arbitrary rows, which needs the whole database resident.
+        if cluster == "auto" and residency != "host" else None
     )
+    seg_rows, num_segs, budget = 0, 0, 0.0
+    if residency == "host":
+        budget = float(hbm_budget_bytes or hw.hbm_bytes)
+        seg_rows, num_segs = plan_segments(
+            n=n, d=d, db_bytes=sbytes, hbm_budget_bytes=budget,
+            rescore=rescore_on, segment_rows=segment_rows,
+        )
 
     bins = plan_bins(
         n, ks, recall_target,
@@ -681,7 +781,11 @@ def plan_search(
         n, d_pad, bins.bin_size, m, dbytes, hw,
         block_m=block_m, max_block_n=max_block_n, db_bytes=sbytes,
     )
-    qb = query_block or _plan_query_block(n, backend)
+    # Host residency materializes a (qb, segment_rows) score tile per
+    # wave, not (qb, N) — size the query block against the wave shape.
+    qb = query_block or _plan_query_block(
+        seg_rows if residency == "host" else n, backend
+    )
 
     m_eff = m if m else qb
     flags = dict(
@@ -711,7 +815,17 @@ def plan_search(
     else:
         # The dense xla path (and each sharded shard) runs the *unpadded*
         # operands unfused — model the program that actually executes.
-        cost = _dense_cost(m_eff, n, d, bins.num_bins, dbytes, sbytes)
+        # With db_shards > 1 the shards run concurrently, so the wall is
+        # ONE shard's scan over N/shards rows (bins laid against the
+        # global N, §7) plus the ICI all-gather priced below.
+        n_scan, scan_bins = n, bins.num_bins
+        if backend == "sharded" and db_shards > 1:
+            n_scan = -(-n // db_shards)
+            scan_bins = plan_bins(
+                n_scan, min(ks, n_scan), recall_target,
+                reduction_input_size_override=n,
+            ).num_bins
+        cost = _dense_cost(m_eff, n_scan, d, scan_bins, dbytes, sbytes)
     expected = bins.expected_recall
     if cplan is not None and cplan.enabled:
         # The pruned gathered program replaces the scan cost wholesale,
@@ -729,6 +843,19 @@ def plan_search(
         )
     att = attainable_flops(cost, hw)
     predicted_s = cost.flops / att
+    ici_bytes = ici_s = 0.0
+    if backend == "sharded" and db_shards > 1:
+        # The §7 collective: every shard all-gathers its O(k_scan) (f32
+        # value, int32 global id) winners to every other shard — 8 bytes
+        # per candidate, shards x candidates rows total.  This is the
+        # ONLY cross-device traffic of a search, which is the whole
+        # traffic-contract argument.
+        # Rescore cuts each shard's contribution to k_scan rows; the
+        # plain dense path all-gathers its L bin winners.
+        cand = ks if rescore_on else scan_bins
+        ici_bytes = 8.0 * m_eff * cand * db_shards
+        ici_s = ici_bytes / hw.ici_bandwidth
+        predicted_s = predicted_s + ici_s
     pinned = all(v is not None for v in (block_m, max_block_n, query_block))
     return Plan(
         m=m or 0, n=n, d=d, k=k, metric=metric, dtype=dtype_name,
@@ -744,6 +871,9 @@ def plan_search(
         source="user" if pinned else "model",
         reduction_input_size_override=reduction_input_size_override,
         storage=storage, rescore=rescore_on, k_scan=ks, cluster=cplan,
+        db_shards=db_shards, ici_bytes=ici_bytes, ici_s=ici_s,
+        residency=residency, segment_rows=seg_rows, num_segments=num_segs,
+        hbm_budget_bytes=budget,
     )
 
 
@@ -786,6 +916,9 @@ def _with_measured_tiles(plan: Plan, bm: int, bn: int, qb: int) -> Plan:
         block_m=bm, max_block_n=bn, query_block=qb,
         storage=plan.storage, rescore=plan.rescore,
         cluster="auto" if plan.cluster is not None else "off",
+        db_shards=plan.db_shards, residency=plan.residency,
+        segment_rows=plan.segment_rows or None,
+        hbm_budget_bytes=plan.hbm_budget_bytes or None,
     )
     return dataclasses.replace(refreshed, source="measure")
 
@@ -824,6 +957,11 @@ class PlanCache:
             # The pruned gathered program times nothing like the full
             # scan; keep its measurements in their own bucket.
             base += "/cl"
+        if plan.db_shards > 1:
+            base += f"/sh{plan.db_shards}"
+        if plan.residency != "hbm":
+            # Segment waves time nothing like a resident scan.
+            base += f"/host{plan.segment_rows}"
         if spec is not None and not (
             spec.block_m is None
             and spec.max_block_n is None

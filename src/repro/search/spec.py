@@ -82,6 +82,19 @@ class SearchSpec:
         power-of-two ladder up to ``query_block``
         (``repro.search.plan.plan_buckets``) — same contract as the tile
         fields.  Lists are coerced to tuples so the spec stays hashable.
+      residency: where the packed database lives between searches —
+        ``"hbm"`` (default: device-resident) or ``"host"`` (the cold
+        tier: packed operands stay in host RAM and ``search`` streams
+        fixed-shape row segments through device HBM, double-buffered one
+        wave ahead, so N is bounded by host memory instead of one
+        device's HBM).  Host residency runs on the xla backend only
+        (``backend="pallas"``/``"sharded"`` are rejected) and disables
+        cluster pruning — the pruned gather needs the whole database
+        resident.
+      segment_rows: rows per host-tier segment wave.  ``None`` defers to
+        the planner, which sizes segments against the device HBM budget
+        (``repro.search.plan.plan_segments``) — same contract as the
+        tile fields.  Unused for ``residency="hbm"``.
 
     A freshly-constructed spec defers tiling to the planner; the spec held
     by a built ``Index`` is always fully resolved:
@@ -109,8 +122,30 @@ class SearchSpec:
     use_bitonic: bool = False
     reduction_input_size_override: int = -1
     serve_buckets: Optional[Tuple[int, ...]] = None
+    residency: str = "hbm"
+    segment_rows: Optional[int] = None
 
     def __post_init__(self):
+        if self.residency not in ("hbm", "host"):
+            raise ValueError(
+                f'residency must be "hbm" or "host", got {self.residency!r}'
+            )
+        if self.residency == "host" and self.backend in ("pallas", "sharded"):
+            raise ValueError(
+                f'residency="host" streams database segments through a '
+                f"single device and requires the xla backend; got "
+                f"backend={self.backend!r}"
+            )
+        if self.segment_rows is not None and self.segment_rows <= 0:
+            raise ValueError(
+                f"segment_rows must be positive, got {self.segment_rows}"
+            )
+        if self.residency == "host" and not self.aggregate_to_topk:
+            raise ValueError(
+                'residency="host" merges per-segment top-k carries and '
+                "needs aggregate_to_topk=True: the raw bin winners of one "
+                "segment wave are not comparable across waves"
+            )
         if self.k <= 0:
             raise ValueError(f"k must be positive, got {self.k}")
         if not 0.0 < self.recall_target < 1.0:

@@ -1,17 +1,9 @@
 """Distributed KNN (paper §7) on 8 fake devices.
 
-Runs in a subprocess so the main pytest process keeps a single CPU device
-(the brief forbids setting xla_force_host_platform_device_count globally).
+Runs via the ``fake_devices`` subprocess harness (tests/conftest.py) so
+the main pytest process keeps a single CPU device.
 """
-import os
-import subprocess
-import sys
-
-import pytest
-
 _SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.distributed import sharded_mips, sharded_l2nns
@@ -64,16 +56,10 @@ sharded.delete(np.asarray(ei)[:, 0])
 _, si2 = sharded.search(q)
 assert not set(np.asarray(si2).ravel().tolist()) & set(
     np.asarray(ei)[:, 0].tolist())
-print("DISTRIBUTED_OK")
+publish({"mips_recall": r, "l2_recall": r2})
 """
 
 
-def test_distributed_knn_8_devices():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
-        text=True, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
-    )
-    assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr
+def test_distributed_knn_8_devices(fake_devices):
+    res = fake_devices(_SCRIPT, n=8)
+    assert res["mips_recall"] >= 0.9 and res["l2_recall"] >= 0.9

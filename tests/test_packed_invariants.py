@@ -487,3 +487,107 @@ def test_restore_parity_sharded_single_device(tmp_path):
     index = Index.build(db, metric="mips", k=8).shard(mesh, db_axis="model")
     q = jax.random.normal(jax.random.PRNGKey(15), (8, D))
     _restore_parity(index, q, tmp_path, mesh_axis="model")
+
+
+def test_restore_parity_sharded_2d(tmp_path):
+    """A 2-D (query x database) sharded index snapshots its full logical
+    arrays; restore lands unmeshed and re-sharding onto a 2-D mesh brings
+    back bit-identical results with no re-pack."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    db = _db(16, 512)
+    index = Index.build(db, metric="l2", k=8).shard(
+        mesh, db_axis=("data", "model")
+    )
+    q = jax.random.normal(jax.random.PRNGKey(17), (8, D))
+    direct = index.search(q)
+    path = os.path.join(tmp_path, "snap2d")
+    index.save(path)
+    reset_pack_events()
+    restored = Index.restore(path).shard(
+        jax.make_mesh((1, 1), ("data", "model")),
+        db_axis=("data", "model"), batch_axis=None,
+    )
+    got = restored.search(q)
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(direct.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.values), np.asarray(direct.values)
+    )
+    assert PACK_EVENTS["restore"] == 1
+    assert PACK_EVENTS["full_pack"] == 0, dict(PACK_EVENTS)
+
+
+@pytest.mark.parametrize("storage", ["f32", "int8"])
+def test_restore_parity_host_tier(storage, tmp_path):
+    """A host-resident index restores bit-identically — residency and the
+    planned segment schedule ride in the snapshot spec, so the restored
+    replica streams the same waves without re-packing."""
+    db = _db(18, 2048)
+    index = Index.build(db, metric="l2", k=8, storage=storage,
+                        residency="host", segment_rows=1024)
+    q = jax.random.normal(jax.random.PRNGKey(19), (8, D))
+    restored = _restore_parity(index, q, tmp_path)
+    assert restored.spec.residency == "host"
+    assert restored.spec.segment_rows == 1024
+    assert restored.explain()["residency"]["num_segments"] == 2
+
+
+# --- stage composition == the compiled search (PR 8) -------------------------
+#
+# The backends are assemblies of ``repro.search.stages`` primitives; the
+# property below re-assembles the dense pipeline *eagerly* (no jit) from
+# the live packed operands and demands bit-parity with ``Index.search``
+# after arbitrary add/delete interleavings — i.e. stage composition
+# commutes with the incremental-update machinery.
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    metric=st.sampled_from(METRICS),
+    storage=st.sampled_from(("f32", "int8")),
+    seed=st.integers(min_value=0, max_value=2**16),
+    n_ops=st.integers(min_value=1, max_value=10),
+)
+def test_stage_composition_matches_search_under_interleaving(
+    metric, storage, seed, n_ops
+):
+    from repro.search import stages
+    from repro.search.packed import scan_k_for
+
+    rng = np.random.default_rng(seed)
+    pool = _db(seed, 160)
+    n0 = int(rng.integers(8, 48))
+    index = Index.build(
+        pool[:n0], metric=metric, k=4, backend="xla", storage=storage,
+        capacity_block=32, cluster="off",
+    )
+    _apply_random_ops(index, pool, rng, n_ops)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 2), (6, D))
+    want = index.search(q)
+
+    pk = index.pack()
+    spec = index.spec
+    m = get_metric(metric)
+    qp = m.prepare_queries(q)
+    scores = stages.score_rows(qp, pk.db, pk.bias, pk.scale)
+    if pk.rescore_db is not None:
+        k_scan = scan_k_for(spec, pk.n)
+        vals, idxs = stages.scan_candidates(
+            scores, k_scan, recall_target=spec.recall_target,
+            reduction_input_size_override=spec.reduction_input_size_override,
+            aggregate_to_topk=False,
+        )
+        vals, idxs = stages.rescore_candidates(
+            qp, vals, idxs, pk.rescore_db, pk.rescore_bias, spec.k, k_scan,
+            spec.use_bitonic,
+        )
+    else:
+        vals, idxs = stages.scan_candidates(
+            scores, spec.k, recall_target=spec.recall_target,
+            reduction_input_size_override=spec.reduction_input_size_override,
+            aggregate_to_topk=True, use_bitonic=spec.use_bitonic,
+        )
+    vals = stages.finalize_values(vals, m.negate_output)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(want.values))

@@ -278,6 +278,52 @@ def test_recall_guarantee_sharded_global_accounting():
     assert samples.mean() >= expected - eps
 
 
+def test_recall_guarantee_sharded_2d_global_accounting():
+    """Eq. 13–14 under 2-D (query x database) sharding: per-shard bins are
+    laid out against the GLOBAL N (`reduction_input_size_override`), so
+    the ((L-1)/L)^(K-1) bound composes across the db axes exactly as in
+    the 1-D §7 argument — the measured recall must clear both the target
+    and the planner's analytic expectation, and the plan must price the
+    per-shard scan (not the global one) plus the ICI gather."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    samples = []
+    expected = None
+    root = jax.random.PRNGKey(21)
+    for t in range(3):
+        kd, kq = jax.random.split(jax.random.fold_in(root, t))
+        db = jax.random.normal(kd, (N, D))
+        q = jax.random.normal(kq, (128, D))
+        index = Index.build(db, metric="mips", k=10, recall_target=0.9).shard(
+            mesh, db_axis=("data", "model"), batch_axis=None
+        )
+        assert index.expected_recall >= 0.9
+        expected = index.expected_recall
+        report = index.explain()
+        assert report["sharding"]["db_axes"] == ["data", "model"]
+        assert report["sharding"]["per_shard_n"] * \
+            report["sharding"]["db_shards"] >= N
+        # one shard on the (1,1) test mesh => nothing crosses the ICI;
+        # the planner prices the O(k) gather once shards exist
+        assert report["sharding"]["ici_gather_bytes"] == 0.0
+        from repro.search import plan as planlib
+
+        pod = planlib.plan_search(n=N, d=D, k=10, metric="mips",
+                                  recall_target=0.9, backend="sharded",
+                                  db_shards=8)
+        assert pod.db_shards == 8 and pod.ici_bytes > 0 and pod.ici_s > 0
+        _, idxs = index.search(q)
+        _, exact = exact_search(q, db, 10, metric="mips")
+        approx, truth = np.asarray(idxs), np.asarray(exact)
+        samples.extend(
+            len(set(a.tolist()) & set(b.tolist())) / 10
+            for a, b in zip(approx, truth)
+        )
+    samples = np.asarray(samples)
+    eps = _hoeffding_eps(len(samples))
+    assert samples.mean() >= 0.9 - eps
+    assert samples.mean() >= expected - eps
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("metric", ["mips", "l2", "cosine"])
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
