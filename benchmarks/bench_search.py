@@ -189,7 +189,7 @@ def bench_quant(backend, metric, m, n, d, query_block, repeats, emit):
         "backend": backend, "metric": metric,
         "m": m, "n": n, "d": d, "query_block": query_block, "tiers": {},
     }
-    for storage in ("f32", "bf16", "int8"):
+    for storage in ("f32", "bf16", "int8", "int4"):
         index = Index.build(
             db,
             spec=SearchSpec(metric=metric, k=10, backend=backend,
@@ -229,10 +229,97 @@ def bench_quant(backend, metric, m, n, d, query_block, repeats, emit):
             f"pred-HBM {plan.hbm_bytes / 1e6:.2f}MB"
         )
     f32_bytes = row["tiers"]["f32"]["predicted_hbm_bytes"]
-    for storage in ("bf16", "int8"):
+    for storage in ("bf16", "int8", "int4"):
         row["tiers"][storage]["hbm_drop_vs_f32"] = (
             f32_bytes / row["tiers"][storage]["predicted_hbm_bytes"]
         )
+    return row
+
+
+def bench_fused(metric, m, n, d, query_block, repeats, emit):
+    """Single-pass fused scan→select vs the two-pass oracle (pallas).
+
+    The fused kernel's win is an HBM-traffic property (Eq. 20: the
+    database streamed once plus O(M·k_scan) winners, no score-tile round
+    trip), so the hard contracts live on the deterministic cost model at
+    the TPU roofline.  Measured wall-clock on this host runs the kernel in
+    interpret mode — where the in-kernel merge is Python-priced and the
+    sign of the win is not meaningful — so it is reported, and only a
+    gross regression fails.  Bit-parity fused vs two-pass is asserted
+    unconditionally: the fusion may change traffic, never results.
+    """
+    from repro.core import roofline
+
+    key = jax.random.PRNGKey(0)
+    kq, kd = jax.random.split(key)
+    db = jax.random.normal(kd, (n, d))
+    queries = jax.random.normal(kq, (m, d))
+    row = {"metric": metric, "m": m, "n": n, "d": d,
+           "query_block": query_block, "storage": "int4", "modes": {}}
+    outs = {}
+    for mode, fused in (("fused", True), ("two_pass", False)):
+        index = Index.build(
+            db,
+            spec=SearchSpec(metric=metric, k=10, backend="pallas",
+                            query_block=query_block, storage="int4",
+                            fused_select=fused),
+        )
+        outs[mode] = index.search(queries)  # warmup + parity sample
+        backends.reset_trace_counts()
+        reset_pack_events()
+        wall, dispatches = _time_search(index, queries, repeats)
+        row["modes"][mode] = {
+            "wall_s_per_search": wall,
+            "qps": m / wall,
+            "dispatches_per_search": dispatches,
+            "steady_retraces": sum(backends.TRACE_COUNTS.values()),
+            "steady_pack_events": sum(PACK_EVENTS.values()),
+        }
+    assert (outs["fused"].values == outs["two_pass"].values).all() and (
+        outs["fused"].indices == outs["two_pass"].indices
+    ).all(), f"fused/two-pass divergence on {metric} M={m} N={n} D={d}"
+
+    # Eq. 20 traffic contract, priced at one query block (a one-pass
+    # shape: query_block <= block_m, sublane-aligned).  f32 with no
+    # rescore is EXACT: queries + db stream + 8-byte winners.  int4 adds
+    # the exact-rescore tail, which must stay O(M·k_scan·D) — bounded
+    # without any N term (the score-tile round trip the fusion deletes).
+    pf = planlib.plan_search(n=n, d=d, k=10, m=query_block, metric=metric,
+                             backend="pallas", device="tpu_v4")
+    pi = planlib.plan_search(n=n, d=d, k=10, m=query_block, metric=metric,
+                             backend="pallas", device="tpu_v4",
+                             storage="int4")
+    qb = query_block
+    row["f32_predicted_hbm_bytes"] = pf.hbm_bytes
+    row["f32_expected_hbm_bytes"] = (
+        4 * qb * pf.d_pad + 4.0 * pf.padded_n * pf.d_pad + 8 * qb * pf.k_scan
+    )
+    scan4 = (
+        4 * qb * pi.d_pad + 0.5 * pi.padded_n * pi.d_pad + 8 * qb * pi.k_scan
+    )
+    row["int4_predicted_hbm_bytes"] = pi.hbm_bytes
+    row["int4_scan_hbm_bytes"] = scan4
+    row["int4_rescore_tail_bound"] = 4.0 * qb * pi.k_scan * pi.d_pad
+    # Model-level "fused >= two-pass QPS": same FLOPs, strictly less HBM
+    # than the two-pass kernel (Eq. 10 re-reads its winner tiles), so the
+    # attainable-FLOP/s knee can only move up.
+    hw = roofline.HARDWARE["tpu_v4"]
+    two = roofline.partial_reduce_cost(
+        qb, pi.padded_n, pi.d_pad, pi.num_bins,
+        block_rows=pi.block_m, db_bytes=0.5,
+    )
+    row["two_pass_model_hbm_bytes"] = two.hbm_bytes
+    row["two_pass_model_attainable_flops"] = roofline.attainable_flops(
+        two, hw
+    )
+    row["fused_model_attainable_flops"] = pi.attainable_flops
+    emit(
+        f"fused,{metric},M={m},N={n},D={d},int4: "
+        f"fused {row['modes']['fused']['qps']:.0f} qps vs two-pass "
+        f"{row['modes']['two_pass']['qps']:.0f} qps (interpret mode); "
+        f"model HBM fused {pi.hbm_bytes / 1e3:.0f}KB vs two-pass "
+        f"{two.hbm_bytes / 1e3:.0f}KB"
+    )
     return row
 
 
@@ -462,6 +549,16 @@ def main() -> None:
             bench_quant(backend, mets[0], qm, qn, qd, qb, repeats, print)
         )
 
+    # Fused-vs-two-pass section: pallas-only by construction (the fusion
+    # is a Pallas kernel property), one shape — interpret mode on CPU
+    # makes the measured side expensive, and the hard contracts are on
+    # the cost model anyway.
+    fm, fn, fd = grid[0]
+    fused_results = [
+        bench_fused(mets[0], min(fm, 512), fn, fd, qb, min(repeats, 5),
+                    print)
+    ]
+
     cluster_results = []
     # One clustered config per backend: the cluster N is its own (large)
     # size — pruning only exists above the planner crossover, which every
@@ -490,6 +587,7 @@ def main() -> None:
         "results": results,
         "plan_results": plan_results,
         "quant_results": quant_results,
+        "fused_results": fused_results,
         "cluster_results": cluster_results,
         "shard_results": shard_results,
     }
@@ -530,12 +628,47 @@ def main() -> None:
                 f"{tiers['int8']['hbm_drop_vs_f32']:.2f}x below f32"
             )
             assert tiers["bf16"]["hbm_drop_vs_f32"] >= 1.5, tiers["bf16"]
-            for storage in ("bf16", "int8"):
+            assert tiers["int4"]["hbm_drop_vs_f32"] >= 3.0, (
+                f"int4 predicted HBM bytes only "
+                f"{tiers['int4']['hbm_drop_vs_f32']:.2f}x below f32"
+            )
+            for storage in ("bf16", "int8", "int4"):
                 t = tiers[storage]
                 assert t["dispatches_per_search"] == 1, (storage, t)
                 assert t["steady_retraces"] == 0, (storage, t)
                 assert t["steady_pack_events"] == 0, (storage, t)
-                assert t["recall_vs_f32"] >= 0.9, (storage, t)
+                # int4's wider codes get a laxer floor (T(int4)=2K
+                # over-fetch + exact rescore still lands ~0.98 here).
+                floor = 0.85 if storage == "int4" else 0.9
+                assert t["recall_vs_f32"] >= floor, (storage, t)
+        # Fused-kernel contracts (deterministic).  Bit-parity fused vs
+        # two-pass was asserted inside bench_fused; here: the Eq. 20
+        # traffic model is EXACTLY db-bytes + queries + O(M·k) winners
+        # (f32), the quantized tiers add only an O(M·k_scan·D) rescore
+        # tail (no N term), the TPU-roofline model puts fused at or above
+        # two-pass QPS, and the fused int4 steady state keeps the
+        # one-dispatch / zero-retrace / zero-repack contract.
+        for frow in fused_results:
+            assert (
+                frow["f32_predicted_hbm_bytes"]
+                == frow["f32_expected_hbm_bytes"]
+            ), frow
+            tail = (frow["int4_predicted_hbm_bytes"]
+                    - frow["int4_scan_hbm_bytes"])
+            assert 0 < tail <= frow["int4_rescore_tail_bound"], frow
+            assert (frow["int4_predicted_hbm_bytes"]
+                    < frow["two_pass_model_hbm_bytes"]), frow
+            assert (frow["fused_model_attainable_flops"]
+                    >= frow["two_pass_model_attainable_flops"]), frow
+            for mode in ("fused", "two_pass"):
+                fmode = frow["modes"][mode]
+                assert fmode["dispatches_per_search"] == 1, (mode, fmode)
+                assert fmode["steady_retraces"] == 0, (mode, fmode)
+                assert fmode["steady_pack_events"] == 0, (mode, fmode)
+            # interpret mode inverts the perf sign (the merge runs as
+            # Python per grid step) — only a gross regression fails.
+            assert (frow["modes"]["fused"]["qps"]
+                    > 0.2 * frow["modes"]["two_pass"]["qps"]), frow
         # Cluster-pruned front-end contracts: at the large-N config the
         # pruned scan must be a real speedup (>=1.5x, with headroom: the
         # config above measures >=2x locally) while HOLDING the recall

@@ -123,6 +123,53 @@ def partial_reduce_cost(
     return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
 
 
+def partial_reduce_fused_cost(
+    m: int,
+    n: int,
+    d: int,
+    k_scan: int,
+    *,
+    cops_per_dot: float = 3.0,
+    block_rows: int = 512,
+    dtype_bytes: int = 4,
+    db_bytes: float = None,
+    block_n: int = 1024,
+    bins_per_block: int = 64,
+) -> KernelCost:
+    """Cost model of the single-pass fused scan→select kernel (Eq. 20).
+
+    FLOPs  = 2MND (the einsum, unchanged)
+    bytes  = dtype(MD) + db_bytes * ceil(M/ib) * ND + 8 M k_scan
+    COPs   = C*M*N + M * (N/block_n) * k_scan * (k_scan + bins_per_block)
+
+    Versus :func:`partial_reduce_cost`, the ``2ML`` bin-winner HBM term
+    (the (M, N/bin_size) score-tile round trip the two-pass select pays)
+    collapses to the O(M·k_scan) final result — the carry buffer lives in
+    VMEM across the database stream.  The database term uses the *integer*
+    pass count ``ceil(M/ib)``: each query-block grid row streams the whole
+    database once, so a fractional M/ib would under-price small batches.
+    The extra COP term prices the in-VMEM merge (k_scan first-lane max
+    extractions over k_scan + bins_per_block lanes, once per database
+    tile); amortized over the tile's block_n rows it is a lower-order
+    term, priced so tile escalation cannot pretend the merge is free.
+    """
+    if db_bytes is None:
+        db_bytes = dtype_bytes
+    passes = max(1, -(-m // block_rows))  # ceil, floored at one stream
+    flops = 2.0 * m * n * d
+    hbm = (
+        dtype_bytes * m * d
+        + db_bytes * passes * n * d
+        + 8.0 * m * k_scan
+    )
+    tiles = max(1.0, n / max(1, block_n))
+    cops = (
+        cops_per_dot * m * n
+        + m * tiles * k_scan * (k_scan + bins_per_block)
+    )
+    return KernelCost(flops=flops, hbm_bytes=hbm, cops=cops)
+
+
 def cops_per_dot(
     *,
     base: int = 3,

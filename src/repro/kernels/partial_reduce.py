@@ -5,17 +5,37 @@ matrix on the MXU and immediately reduces it to the top-1 (value, index) of
 each bin of size 2**W — the O(M*N) score tile never leaves VMEM, which is
 the whole point of the paper (I_MEM ~ O(min(M, N)), Eq. 10).
 
+Two selection back-ends share that scan:
+
+  * **Two-pass** (``partial_reduce_packed``): every grid step writes its
+    (block_m, bins_per_block) bin-winner tile to HBM and the caller merges
+    the (M, N/bin_size) winners with ``lax.top_k``.  Simple, and the
+    parity oracle for the fused path.
+  * **Fused** (``partial_reduce_fused``): a (block_m, k_scan) candidate
+    buffer (values + global indices) lives in VMEM scratch and is carried
+    across the sequential j-loop; each grid step merges its tile's bin
+    winners into the carry, and only the final (M, k_scan) result is ever
+    written to HBM (Eq. 20: database bytes + O(k), no score-tile term).
+    Masked winners (tombstones, padded tail) carry the sentinel index -1
+    alongside their -inf value, so they can never collide with a live row
+    after the merge.
+
 COP accounting (Appendix A.5): the in-tile reduction uses exactly 3
 coefficient-wise ops per score (compare/select for the running max, the
 iota compare, and the index min) = the paper's C=3.  The bias row fuses both
 the non-power-of-2 masking COP and the L2 halved-norm COP into one add.
+The fused merge adds O((k_scan + bins_per_block) * k_scan) vector ops per
+tile — amortized over block_n database rows, a lower-order COP term.
 
-Tiling contract (enforced by ops.py):
-  * D is padded to a multiple of 128 (MXU lane width),
+Tiling contract (enforced by ops.py / repro.search.packed):
+  * D is padded to a multiple of 128 (MXU lane width; 256 for the packed
+    int4 tier so the two-codes-per-byte rows stay lane-aligned),
   * block_n is a multiple of the bin size 2**W,
   * N is padded to a multiple of block_n (bias = -inf on the padding),
   * block_m rows of queries are resident in VMEM across the j-loop
-    (temporal locality of Alg. 2 line 1).
+    (temporal locality of Alg. 2 line 1).  block_m is clamped to the
+    sublane-rounded M, so an M=1 serving dispatch no longer pays a full
+    block of wasted MXU rows.
 """
 from __future__ import annotations
 
@@ -25,22 +45,45 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.binning import round_up
 
-__all__ = ["partial_reduce_packed", "partial_reduce_pallas"]
+__all__ = [
+    "partial_reduce_fused",
+    "partial_reduce_fused_pallas",
+    "partial_reduce_packed",
+    "partial_reduce_pallas",
+]
+
+# Same sentinel the search stages use (stages.MASK_VALUE); redeclared here
+# so the kernel layer stays import-free of repro.search.
+_MASK = float(jnp.finfo(jnp.float32).min)
+
+
+def _effective_block_m(m: int, block_m: int, dtype) -> int:
+    """Clamp the query tile to the sublane-rounded batch size.
+
+    The planner's block_m targets throughput batches; a small serving
+    batch (M=1) padded all the way to it would compute block_m rows of
+    wasted MXU work per tile.  The sublane floor (8 f32 / 16 bf16 rows)
+    is the hardware minimum.
+    """
+    sublane = 16 if jnp.dtype(dtype) == jnp.bfloat16 else 8
+    return min(block_m, round_up(max(m, 1), sublane))
 
 
 def partial_reduce_packed(
     queries: jnp.ndarray,   # (m, d) — any m, d <= database's lane-padded d
     database: jnp.ndarray,  # (n_pad, d_pad) pre-packed to the tiling contract
     bias: jnp.ndarray,      # (1, n_pad) f32, tail already masked
-    scale: jnp.ndarray = None,  # (1, n_pad) f32 per-row scale (int8 tier)
+    scale: jnp.ndarray = None,  # (1, n_pad) f32 per-row scale (int8/int4)
     *,
     bin_size: int,
     block_m: int = 256,
     block_n: int = 1024,
     interpret: bool = False,
+    int4_packed: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Query-side front half of the tiling contract over packed operands.
 
@@ -49,38 +92,96 @@ def partial_reduce_packed(
     ``repro.search.packed``.  Only the (m, d) query block is padded here,
     so repeated searches against the same database perform zero
     database-sized copies.  ``database`` may be stored in a reduced-
-    precision tier (bf16/int8 — dequantized tile-locally in VMEM, so HBM
-    streams the reduced bytes); ``scale`` carries the int8 per-row scale.
+    precision tier (bf16/int8/int4 — dequantized tile-locally in VMEM, so
+    HBM streams the reduced bytes); ``scale`` carries the per-row scale,
+    and ``int4_packed`` marks a two-codes-per-byte database whose logical
+    width is twice its stored width.
     Returns (values, indices) with the query padding already stripped:
     both (m, n_pad // bin_size).
     """
     m, d = queries.shape
-    d_pad = database.shape[1]
+    d_pad = database.shape[1] * (2 if int4_packed else 1)
     if d > d_pad:
         raise ValueError(f"query dim {d} exceeds packed dim {d_pad}")
-    m_pad = round_up(max(m, block_m), block_m)
+    bm = _effective_block_m(m, block_m, queries.dtype)
+    m_pad = round_up(m, bm)
     q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
     vals, idxs = partial_reduce_pallas(
         q, database, bias, scale,
-        bin_size=bin_size, block_m=block_m, block_n=block_n,
-        interpret=interpret,
+        bin_size=bin_size, block_m=bm, block_n=block_n,
+        interpret=interpret, int4_packed=int4_packed,
     )
     return vals[:m], idxs[:m]
 
 
-def _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
-                 *, block_n: int, bin_size: int):
+def partial_reduce_fused(
+    queries: jnp.ndarray,
+    database: jnp.ndarray,
+    bias: jnp.ndarray,
+    scale: jnp.ndarray = None,
+    *,
+    k_scan: int,
+    bin_size: int,
+    block_m: int = 256,
+    block_n: int = 1024,
+    interpret: bool = False,
+    int4_packed: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-pass scan→select over packed operands (Eq. 20 fused path).
+
+    Same operand contract as :func:`partial_reduce_packed`, but selection
+    is fused into the scan: the per-query top-``k_scan`` candidate buffer
+    is carried in VMEM across the database stream and only the final
+    (m, k_scan) result touches HBM.  Returns (values, indices), values
+    sorted descending per row; masked entries (fewer than k_scan live
+    candidates) hold ``-inf`` values and the sentinel index ``-1``.
+    """
+    m, d = queries.shape
+    d_pad = database.shape[1] * (2 if int4_packed else 1)
+    if d > d_pad:
+        raise ValueError(f"query dim {d} exceeds packed dim {d_pad}")
+    bm = _effective_block_m(m, block_m, queries.dtype)
+    m_pad = round_up(m, bm)
+    q = jnp.pad(queries, ((0, m_pad - m), (0, d_pad - d)))
+    vals, idxs = partial_reduce_fused_pallas(
+        q, database, bias, scale,
+        k_scan=k_scan, bin_size=bin_size, block_m=bm, block_n=block_n,
+        interpret=interpret, int4_packed=int4_packed,
+    )
+    return vals[:m], idxs[:m]
+
+
+def _load_db_tile(x_ref, q_dtype, int4_packed: bool):
+    """VMEM view of one database tile in the compute dtype.
+
+    For the packed int4 tier the HBM stream carried two two's-complement
+    nibbles per byte; unpack them here (arithmetic shifts sign-extend) so
+    only the halved byte count ever crossed the memory wall.  Byte j holds
+    logical column 2j in its low nibble and 2j+1 in its high nibble —
+    matching ``quant.pack_int4_rows``.
+    """
+    x = x_ref[...]
+    if int4_packed:
+        xb = x.astype(jnp.int32)
+        lo = (xb << 28) >> 28
+        hi = xb >> 4
+        x = jnp.stack([lo, hi], axis=-1).reshape(x.shape[0], -1)
+    if x.dtype != q_dtype:
+        # Reduced-precision storage tier: dequantize the tile in VMEM
+        # before it hits the MXU (per-row scales apply to the scores).
+        x = x.astype(q_dtype)
+    return x
+
+
+def _tile_winners(q_ref, x_ref, scale_ref, bias_ref,
+                  *, block_n: int, bin_size: int, int4_packed: bool):
+    """One grid step's bin-wise top-1: (values, global indices)."""
     block_m = q_ref.shape[0]
     bins_per_block = block_n // bin_size
     j = pl.program_id(1)
 
     q = q_ref[...]
-    x = x_ref[...]
-    if x.dtype != q.dtype:
-        # Reduced-precision storage tier: the HBM stream carried the
-        # narrow dtype; dequantize the tile in VMEM before it hits the
-        # MXU (per-row int8 scales apply to the scores below).
-        x = x.astype(q.dtype)
+    x = _load_db_tile(x_ref, q.dtype, int4_packed)
     # MXU: one (block_m, d) x (d, block_n) matmul, f32 accumulation.
     scores = jax.lax.dot_general(
         q,
@@ -89,7 +190,7 @@ def _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
         preferred_element_type=jnp.float32,
     )
     if scale_ref is not None:
-        scores = scores * scale_ref[...]  # int8 per-row dequant scale
+        scores = scores * scale_ref[...]  # per-row dequant scale
     scores = scores + bias_ref[...]  # fused mask / halved-norm (1 COP)
 
     # Bin-wise top-1: reshape puts each bin in the minor (lane) dimension.
@@ -102,8 +203,83 @@ def _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
     base = j * block_n + jax.lax.broadcasted_iota(
         jnp.int32, (block_m, bins_per_block), 1
     ) * bin_size
+    return vmax, base + amax
+
+
+def _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                 *, block_n: int, bin_size: int, int4_packed: bool = False):
+    vmax, idx = _tile_winners(
+        q_ref, x_ref, scale_ref, bias_ref,
+        block_n=block_n, bin_size=bin_size, int4_packed=int4_packed,
+    )
     v_ref[...] = vmax
-    a_ref[...] = base + amax
+    a_ref[...] = idx
+
+
+def _merge_topk_carry(cv, ci, tv, ti, k_scan: int):
+    """Merge a tile's bin winners into the running top-k_scan carry.
+
+    Iterative first-lane max extraction over the concatenated
+    (k_scan + bins_per_block) lanes: ties resolve to the lowest lane, and
+    because the carry (earlier database tiles, itself extraction-ordered)
+    precedes the tile winners (bin-ordered), tie order matches what
+    ``lax.top_k`` over the full two-pass winner row would produce.  No
+    ``lax.top_k``/gather inside the kernel — Mosaic only needs max, iota
+    compares and masked sums.
+    """
+    v = jnp.concatenate([cv, tv], axis=1)
+    i = jnp.concatenate([ci, ti], axis=1)
+    lanes = v.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    out_v, out_i = [], []
+    for _ in range(k_scan):
+        best = jnp.max(v, axis=1, keepdims=True)
+        hit = jnp.where(v == best, lane, lanes)
+        pos = jnp.min(hit, axis=1, keepdims=True)
+        sel = lane == pos
+        out_v.append(best)
+        out_i.append(jnp.sum(jnp.where(sel, i, 0), axis=1, keepdims=True))
+        # Retire BOTH halves of the extracted lane.  Masking only the value
+        # would let the lane win a later -inf tie with its stale index — on
+        # an all-tombstoned tile the first winner's index would then leak
+        # into every masked output slot (the phantom-duplicate bug this
+        # kernel exists to fix, resurfacing in VMEM).
+        v = jnp.where(sel, _MASK, v)
+        i = jnp.where(sel, -1, i)
+    return (
+        jnp.concatenate(out_v, axis=1),
+        jnp.concatenate(out_i, axis=1),
+    )
+
+
+def _fused_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                cv_ref, ci_ref,
+                *, block_n: int, bin_size: int, k_scan: int,
+                int4_packed: bool):
+    block_m = q_ref.shape[0]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        # Fresh carry per query block: -inf values, sentinel indices.
+        cv_ref[...] = jnp.full((block_m, k_scan), _MASK, jnp.float32)
+        ci_ref[...] = jnp.full((block_m, k_scan), -1, jnp.int32)
+
+    vmax, idx = _tile_winners(
+        q_ref, x_ref, scale_ref, bias_ref,
+        block_n=block_n, bin_size=bin_size, int4_packed=int4_packed,
+    )
+    # A fully-masked bin's winner is meaningless — pair its -inf value
+    # with the sentinel index in-kernel so it can never alias a live row.
+    idx = jnp.where(vmax > _MASK * 0.5, idx, -1)
+    cv, ci = _merge_topk_carry(cv_ref[...], ci_ref[...], vmax, idx, k_scan)
+    cv_ref[...] = cv
+    ci_ref[...] = ci
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        v_ref[...] = cv_ref[...]
+        a_ref[...] = ci_ref[...]
 
 
 def _partial_reduce_kernel(
@@ -115,14 +291,15 @@ def _partial_reduce_kernel(
     *,
     block_n: int,
     bin_size: int,
+    int4_packed: bool,
 ):
     _reduce_tile(q_ref, x_ref, None, bias_ref, v_ref, a_ref,
-                 block_n=block_n, bin_size=bin_size)
+                 block_n=block_n, bin_size=bin_size, int4_packed=int4_packed)
 
 
 def _partial_reduce_kernel_scaled(
     q_ref,      # (block_m, d)      VMEM
-    x_ref,      # (block_n, d)      VMEM int8
+    x_ref,      # (block_n, d) VMEM int8 (or packed int4 nibbles)
     scale_ref,  # (1, block_n)      VMEM f32 per-row scale
     bias_ref,   # (1, block_n)      VMEM
     v_ref,
@@ -130,15 +307,46 @@ def _partial_reduce_kernel_scaled(
     *,
     block_n: int,
     bin_size: int,
+    int4_packed: bool,
 ):
     _reduce_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
-                 block_n=block_n, bin_size=bin_size)
+                 block_n=block_n, bin_size=bin_size, int4_packed=int4_packed)
+
+
+def _fused_kernel(q_ref, x_ref, bias_ref, v_ref, a_ref, cv_ref, ci_ref,
+                  *, block_n, bin_size, k_scan, int4_packed):
+    _fused_tile(q_ref, x_ref, None, bias_ref, v_ref, a_ref, cv_ref, ci_ref,
+                block_n=block_n, bin_size=bin_size, k_scan=k_scan,
+                int4_packed=int4_packed)
+
+
+def _fused_kernel_scaled(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                         cv_ref, ci_ref,
+                         *, block_n, bin_size, k_scan, int4_packed):
+    _fused_tile(q_ref, x_ref, scale_ref, bias_ref, v_ref, a_ref,
+                cv_ref, ci_ref,
+                block_n=block_n, bin_size=bin_size, k_scan=k_scan,
+                int4_packed=int4_packed)
+
+
+def _validate_tiling(queries, database, *, block_m, block_n, bin_size,
+                     int4_packed):
+    m, d = queries.shape
+    n, w = database.shape
+    d_db = 2 * w if int4_packed else w
+    if d != d_db:
+        raise ValueError(f"dim mismatch: {d} vs {d_db}")
+    if d % 128 or m % block_m or n % block_n or block_n % bin_size:
+        raise ValueError(
+            f"tiling contract violated: m={m} d={d} n={n} "
+            f"block_m={block_m} block_n={block_n} bin_size={bin_size}"
+        )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bin_size", "block_m", "block_n", "interpret",
+        "bin_size", "block_m", "block_n", "interpret", "int4_packed",
     ),
 )
 def partial_reduce_pallas(
@@ -151,42 +359,35 @@ def partial_reduce_pallas(
     block_m: int = 256,
     block_n: int = 1024,
     interpret: bool = False,
+    int4_packed: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused score+reduce. Returns (values, indices), both (m, n // bin_size).
 
     Shapes must already satisfy the tiling contract — use
     ``repro.kernels.ops`` for the padding/planning front-end.  ``database``
-    may be a reduced-precision storage tier (bf16/int8); ``scale`` is the
-    int8 tier's per-row dequantization scale, applied to the score tile
-    in VMEM.
+    may be a reduced-precision storage tier (bf16/int8/int4); ``scale`` is
+    the scaled tiers' per-row dequantization scale, applied to the score
+    tile in VMEM.
     """
+    _validate_tiling(queries, database, block_m=block_m, block_n=block_n,
+                     bin_size=bin_size, int4_packed=int4_packed)
     m, d = queries.shape
-    n, d2 = database.shape
-    if d != d2:
-        raise ValueError(f"dim mismatch: {d} vs {d2}")
-    if d % 128 or m % block_m or n % block_n or block_n % bin_size:
-        raise ValueError(
-            f"tiling contract violated: m={m} d={d} n={n} "
-            f"block_m={block_m} block_n={block_n} bin_size={bin_size}"
-        )
+    n, w = database.shape
     num_bins = n // bin_size
     bins_per_block = block_n // bin_size
     grid = (m // block_m, n // block_n)
 
     in_specs = [
         pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
-        pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
         pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
     ]
+    kw = dict(block_n=block_n, bin_size=bin_size, int4_packed=int4_packed)
     if scale is None:
-        kernel = functools.partial(
-            _partial_reduce_kernel, block_n=block_n, bin_size=bin_size
-        )
+        kernel = functools.partial(_partial_reduce_kernel, **kw)
         operands = (queries, database, bias)
     else:
-        kernel = functools.partial(
-            _partial_reduce_kernel_scaled, block_n=block_n, bin_size=bin_size
-        )
+        kernel = functools.partial(_partial_reduce_kernel_scaled, **kw)
         # scale rides the same (1, block_n) tiling as the bias row.
         in_specs.insert(2, pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
         operands = (queries, database, scale, bias)
@@ -201,6 +402,76 @@ def partial_reduce_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((m, num_bins), jnp.float32),
             jax.ShapeDtypeStruct((m, num_bins), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k_scan", "bin_size", "block_m", "block_n", "interpret",
+        "int4_packed",
+    ),
+)
+def partial_reduce_fused_pallas(
+    queries: jnp.ndarray,   # (m, d)  m % block_m == 0, d % 128 == 0
+    database: jnp.ndarray,  # (n, d)  n % block_n == 0
+    bias: jnp.ndarray,      # (1, n)  f32
+    scale: jnp.ndarray = None,  # (1, n) f32 per-row scale, or None
+    *,
+    k_scan: int,
+    bin_size: int,
+    block_m: int = 256,
+    block_n: int = 1024,
+    interpret: bool = False,
+    int4_packed: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-pass scan→select: (values, indices), both (m, k_scan).
+
+    The top-k_scan carry lives in VMEM scratch across the sequential
+    j-loop (TPU grids iterate the last axis innermost), so per search the
+    only HBM traffic is the query block, the database stream and the
+    final (m, k_scan) result — the paper's Eq. 20 contract.  Values come
+    out sorted descending; masked entries hold (-inf, -1).
+    """
+    _validate_tiling(queries, database, block_m=block_m, block_n=block_n,
+                     bin_size=bin_size, int4_packed=int4_packed)
+    if k_scan <= 0:
+        raise ValueError(f"k_scan must be positive, got {k_scan}")
+    m, d = queries.shape
+    n, w = database.shape
+    grid = (m // block_m, n // block_n)
+
+    in_specs = [
+        pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+    ]
+    kw = dict(block_n=block_n, bin_size=bin_size, k_scan=k_scan,
+              int4_packed=int4_packed)
+    if scale is None:
+        kernel = functools.partial(_fused_kernel, **kw)
+        operands = (queries, database, bias)
+    else:
+        kernel = functools.partial(_fused_kernel_scaled, **kw)
+        in_specs.insert(2, pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+        operands = (queries, database, scale, bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_m, k_scan), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k_scan), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k_scan), jnp.float32),
+            jax.ShapeDtypeStruct((m, k_scan), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, k_scan), jnp.float32),
+            pltpu.VMEM((block_m, k_scan), jnp.int32),
         ],
         interpret=interpret,
     )(*operands)

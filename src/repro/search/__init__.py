@@ -187,10 +187,12 @@ from repro.search.quant import (
     STORAGE_TIERS,
     QuantizedRows,
     dequantize_rows,
+    pack_int4_rows,
     quantize_rows,
     scan_k,
     storage_bytes,
     storage_dtype,
+    unpack_int4_rows,
     validate_restored,
 )
 from repro.search.plan import (
@@ -269,6 +271,8 @@ __all__ = [
     "QuantizedRows",
     "quantize_rows",
     "dequantize_rows",
+    "pack_int4_rows",
+    "unpack_int4_rows",
     "storage_bytes",
     "storage_dtype",
     "scan_k",

@@ -36,7 +36,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.binning import plan_bins, round_up
 from repro.core.partial_reduce import partial_reduce_with_plan
-from repro.kernels.partial_reduce import partial_reduce_packed, partial_reduce_pallas
+from repro.kernels.partial_reduce import (
+    partial_reduce_fused,
+    partial_reduce_packed,
+    partial_reduce_pallas,
+)
 from repro.parallel.sharding import shard_map_compat
 from repro.search.metrics import get_metric
 from repro.search.stages import (
@@ -49,6 +53,7 @@ from repro.search.stages import (
     scan_candidates,
     score_gathered,
     score_rows,
+    sentinelize_masked,
 )
 
 __all__ = [
@@ -462,7 +467,10 @@ def _pallas_search_jit(
         q, db, bias, bin_size=bin_size,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
-    vals, idxs = vals[:m], jnp.minimum(idxs[:m], n - 1)
+    # Masked winners (padded tail) pair -inf with the sentinel index -1:
+    # clamping them into [0, n) would let them alias row n-1 and surface
+    # as phantom duplicates after merge_topk ties at -inf.
+    vals, idxs = vals[:m], sentinelize_masked(vals[:m], idxs[:m], n)
     if aggregate_to_topk:
         vals, idxs = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
     return finalize_values(vals, m_obj.negate_output), idxs
@@ -472,7 +480,7 @@ def _pallas_search_jit(
     jax.jit,
     static_argnames=(
         "metric", "k", "n", "bin_size", "block_m", "block_n", "interpret",
-        "aggregate_to_topk", "use_bitonic",
+        "aggregate_to_topk", "use_bitonic", "fused_select",
     ),
 )
 def pallas_search_packed(
@@ -489,6 +497,7 @@ def pallas_search_packed(
     interpret: bool,
     aggregate_to_topk: bool = True,
     use_bitonic: bool = False,
+    fused_select: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused-kernel search over pre-packed operands (steady-state path).
 
@@ -498,16 +507,32 @@ def pallas_search_packed(
     is prepared and padded here, so the per-dispatch memory traffic
     matches the paper's model (I_MEM ~ O(min(M, N)), Eq. 10).  ``n`` is
     the logical row space (packed padding excluded).
+
+    ``fused_select=True`` runs the single-pass scan→select kernel (the
+    top-k merge happens in VMEM during the scan; Eq. 20 traffic — only
+    the (M, k) result touches HBM).  Requires ``aggregate_to_topk``;
+    ``False`` keeps the two-pass bin-winner path, the parity oracle.
+    Masked result entries pair -inf values with the sentinel index -1 on
+    both paths.
     """
     m_obj = get_metric(metric)
     TRACE_COUNTS["pallas"] += 1
     q = m_obj.prepare_queries(queries)
+    if fused_select and aggregate_to_topk:
+        vals, idxs = partial_reduce_fused(
+            q, database, row_bias,
+            k_scan=k, bin_size=bin_size, block_m=block_m, block_n=block_n,
+            interpret=interpret,
+        )
+        return finalize_values(vals, m_obj.negate_output), idxs
     vals, idxs = partial_reduce_packed(
         q, database, row_bias,
         bin_size=bin_size, block_m=block_m, block_n=block_n,
         interpret=interpret,
     )
-    idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
+    # Masked winners keep -inf paired with sentinel index -1 through the
+    # merge (clamping to n-1 here minted phantom duplicate neighbours).
+    idxs = sentinelize_masked(vals, idxs, n)
     if aggregate_to_topk:
         vals, idxs = merge_topk(vals, idxs, k, use_bitonic=use_bitonic)
     return finalize_values(vals, m_obj.negate_output), idxs
@@ -517,7 +542,8 @@ def pallas_search_packed(
     jax.jit,
     static_argnames=(
         "metric", "k", "k_scan", "n", "bin_size", "block_m", "block_n",
-        "interpret", "aggregate_to_topk", "use_bitonic",
+        "interpret", "aggregate_to_topk", "use_bitonic", "fused_select",
+        "int4_packed",
     ),
 )
 def pallas_search_packed_quant(
@@ -538,27 +564,50 @@ def pallas_search_packed_quant(
     interpret: bool,
     aggregate_to_topk: bool = True,
     use_bitonic: bool = False,
+    fused_select: bool = False,
+    int4_packed: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused-kernel two-pass search over a quantized packed tier.
 
     Same packed-operand contract as ``pallas_search_packed`` — the kernel
-    streams the (n_pad, d_pad) *stored* rows (bf16/int8 HBM bytes,
-    dequantized tile-locally in VMEM; ``scale`` is the int8 per-row scale
-    in the bias row's (1, n_pad) layout).  The over-fetched bin winners
-    (the packed layout's bins are planned for ``quant.scan_k``) are then
-    exactly re-scored against the full-precision gather tail
-    ``rescore_db``/``rescore_bias`` — O(M·L·D) second-pass work, inside
-    Eq. 10's O(min(M, N)) budget.
+    streams the (n_pad, d_pad) *stored* rows (bf16/int8/int4 HBM bytes,
+    dequantized tile-locally in VMEM; ``scale`` is the per-row scale in
+    the bias row's (1, n_pad) layout, and ``int4_packed`` marks a
+    two-nibbles-per-byte database of stored width d_pad/2).  The
+    over-fetched bin winners (the packed layout's bins are planned for
+    ``quant.scan_k``) are then exactly re-scored against the
+    full-precision gather tail ``rescore_db``/``rescore_bias`` — O(M·L·D)
+    second-pass work, inside Eq. 10's O(min(M, N)) budget.
+
+    ``fused_select=True`` replaces the dispatch-level scan→cut with the
+    single-pass kernel: the top-``k_scan`` carry is selected in VMEM, so
+    the rescore consumes the kernel output directly and the (M, L)
+    bin-winner tile never exists in HBM.
     """
     m_obj = get_metric(metric)
     TRACE_COUNTS["pallas"] += 1
     q = m_obj.prepare_queries(queries)
+    if fused_select and (rescore_db is not None or aggregate_to_topk):
+        vals, idxs = partial_reduce_fused(
+            q, database, row_bias, scale,
+            k_scan=k_scan if rescore_db is not None else k,
+            bin_size=bin_size, block_m=block_m, block_n=block_n,
+            interpret=interpret, int4_packed=int4_packed,
+        )
+        if rescore_db is not None:
+            vals, idxs = rescore_candidates(
+                q, vals, idxs, rescore_db, rescore_bias, k, k_scan,
+                use_bitonic,
+            )
+        return finalize_values(vals, m_obj.negate_output), idxs
     vals, idxs = partial_reduce_packed(
         q, database, row_bias, scale,
         bin_size=bin_size, block_m=block_m, block_n=block_n,
-        interpret=interpret,
+        interpret=interpret, int4_packed=int4_packed,
     )
-    idxs = jnp.minimum(idxs, n - 1)  # masked tail winners clamp into range
+    # Masked winners keep -inf paired with sentinel index -1 through the
+    # merge (clamping to n-1 here minted phantom duplicate neighbours).
+    idxs = sentinelize_masked(vals, idxs, n)
     if rescore_db is not None:
         vals, idxs = rescore_candidates(
             q, vals, idxs, rescore_db, rescore_bias, k, k_scan, use_bitonic

@@ -409,6 +409,11 @@ class Index:
                 * quant.storage_bytes(self.spec.storage),
                 "rescore": self.spec.rescore_enabled,
                 "k_scan": plan.k_scan or plan.k,
+                # Eq. 20 traffic for one dispatch at this tier: on the
+                # fused Pallas path this is db-bytes + O(M·k_scan) with no
+                # score-tile round trip — what the bench smoke asserts.
+                "predicted_hbm_bytes": plan.hbm_bytes,
+                "fused_select": self.spec.fused_select_enabled,
             },
         }
         if self.spec.residency == "host":
@@ -545,7 +550,9 @@ class Index:
                         q, pk.db, pk.bias, pk.scale,
                         pk.rescore_db, pk.rescore_bias,
                         metric=self.spec.metric, k=self.spec.k,
-                        k_scan=packedlib.scan_k_for(self.spec, pk.n),
+                        k_scan=packedlib.scan_k_for(
+                            self.spec, pk.n, live=self.size
+                        ),
                         recall_target=self.spec.recall_target,
                         reduction_input_size_override=
                             self.spec.reduction_input_size_override,
@@ -732,7 +739,7 @@ class Index:
         pk = self._packed
         return hosttierlib.HostTierSearcher(
             self.spec,
-            k_scan=packedlib.scan_k_for(self.spec, pk.n),
+            k_scan=packedlib.scan_k_for(self.spec, pk.n, live=self.size),
             segment_rows=self.spec.segment_rows
             or self.kernel_plan.segment_rows,
         )
@@ -823,7 +830,7 @@ class Index:
                         use_bitonic=spec.use_bitonic, trace_as=trace_as,
                     )
                 return fn
-            k_scan = packedlib.scan_k_for(spec, pk.n)
+            k_scan = packedlib.scan_k_for(spec, pk.n, live=self.size)
             def fn(q, db, bias, scale, rs_db, rs_bias, ce, cb, cr, sr):
                 return backends.cluster_search_quant(
                     q, db, bias, scale, rs_db, rs_bias, ce, cb, cr, sr,
@@ -846,7 +853,7 @@ class Index:
                         use_bitonic=spec.use_bitonic,
                     )
                 return fn
-            k_scan = packedlib.scan_k_for(spec, pk.n)
+            k_scan = packedlib.scan_k_for(spec, pk.n, live=self.size)
             def fn(q, db, bias, scale, rs_db, rs_bias):
                 return backends.dense_search_quant(
                     q, db, bias, scale, rs_db, rs_bias,
@@ -863,6 +870,8 @@ class Index:
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
             n, bin_size, block_n = pk.n, pk.bin_size, pk.block_n
+            fused = spec.fused_select_enabled
+            int4_packed = spec.storage == "int4"
             if not quantized:
                 def fn(q, db, bias):
                     return backends.pallas_search_packed(
@@ -872,9 +881,10 @@ class Index:
                         block_n=block_n, interpret=interpret,
                         aggregate_to_topk=spec.aggregate_to_topk,
                         use_bitonic=spec.use_bitonic,
+                        fused_select=fused,
                     )
                 return fn
-            k_scan = packedlib.scan_k_for(spec, pk.n)
+            k_scan = packedlib.scan_k_for(spec, pk.n, live=self.size)
             def fn(q, db, bias, scale, rs_db, rs_bias):
                 return backends.pallas_search_packed_quant(
                     q, db, bias, scale, rs_db, rs_bias,
@@ -883,6 +893,7 @@ class Index:
                     block_n=block_n, interpret=interpret,
                     aggregate_to_topk=spec.aggregate_to_topk,
                     use_bitonic=spec.use_bitonic,
+                    fused_select=fused, int4_packed=int4_packed,
                 )
             return fn
         if backend == "sharded":
@@ -892,8 +903,8 @@ class Index:
                 recall_target=spec.recall_target,
                 db_axis=db_axis, batch_axis=batch_axis,
                 use_bitonic=spec.use_bitonic,
-                k_scan=packedlib.scan_k_for(spec, pk.n) if quantized
-                else None,
+                k_scan=packedlib.scan_k_for(spec, pk.n, live=self.size)
+                if quantized else None,
                 cluster_probes=probes if clustered else None,
                 cluster_target_scan=target_scan if clustered else None,
             )
@@ -930,7 +941,7 @@ class Index:
                 recall_target=spec.recall_target,
                 db_axis=self._db_axis, batch_axis=batch_axis,
                 use_bitonic=spec.use_bitonic,
-                k_scan=packedlib.scan_k_for(spec, pk.n)
+                k_scan=packedlib.scan_k_for(spec, pk.n, live=self.size)
                 if spec.storage != "f32" else None,
                 cluster_probes=cplan.probes if clustered else None,
                 cluster_target_scan=cplan.target_scan

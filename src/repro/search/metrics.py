@@ -126,7 +126,10 @@ class Metric:
     # -- quantize-aware packing (the repro.search.quant storage tiers) ------
 
     def storage_bias(
-        self, stored: Array, scale: Optional[Array]
+        self,
+        stored: Array,
+        scale: Optional[Array],
+        storage: Optional[str] = None,
     ) -> Optional[Array]:
         """Metric bias of the values a quantized tier actually stores.
 
@@ -138,8 +141,15 @@ class Metric:
         the dequantized rows and keeping only the bias; a custom metric
         for which that recipe is wrong should exclude the quantized tiers
         via ``storage_tiers``.
+
+        ``storage`` names the tier explicitly (int8 and int4 are
+        indistinguishable from the arrays alone — both carry int8 codes
+        plus a scale); ``None`` falls back to the legacy scale-based
+        inference for pre-int4 callers.
         """
-        quant.check_metric_storage(self, "bf16" if scale is None else "int8")
+        if storage is None:
+            storage = "bf16" if scale is None else "int8"
+        quant.check_metric_storage(self, storage)
         _, bias = self.prepare_database(quant.dequantize_rows(stored, scale))
         return bias
 
@@ -160,7 +170,11 @@ class Metric:
             return quant.QuantizedRows(prepped, None, bias, prepped, bias)
         stored, scale = quant.quantize_rows(prepped, storage)
         return quant.QuantizedRows(
-            stored, scale, self.storage_bias(stored, scale), prepped, bias
+            stored,
+            scale,
+            self.storage_bias(stored, scale, storage),
+            prepped,
+            bias,
         )
 
     def prepare_update_storage(

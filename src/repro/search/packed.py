@@ -120,9 +120,12 @@ class PackedState:
         (``repro.search.quant.scan_k``), not the user's k.
       bin_size / block_n: pallas kernel tile parameters (block_n == 0 for
         non-pallas layouts).
-      storage: the ``repro.search.quant`` tier ``db`` is stored in.
-      scale: per-row int8 dequantization scale — (n,) f32, or (1, n_pad)
-        for the pallas layout; None for non-int8 tiers.
+      storage: the ``repro.search.quant`` tier ``db`` is stored in.  For
+        ``"int4"`` the pallas layout stores two codes per byte (db shape
+        (n_pad, d_pad/2) int8); other backends keep the canonical one
+        code per byte.
+      scale: per-row dequantization scale (int8/int4 tiers) — (n,) f32,
+        or (1, n_pad) for the pallas layout; None for unscaled tiers.
       rescore_db: full-precision metric-prepared rows (n, d) — the exact
         rescore tail the two-pass search gathers candidates from; None
         when rescoring is disabled or storage is "f32".
@@ -161,7 +164,15 @@ class PackedState:
     # -- logical views --------------------------------------------------------
 
     def rows(self) -> jnp.ndarray:
-        """The prepared rows without layout padding: (n, d)."""
+        """The prepared rows without layout padding: (n, d).
+
+        Always the *canonical* stored form — for the pallas int4 layout
+        (two codes per byte on device) the nibbles are unpacked back to
+        one int8 code per element, so relayout/snapshot consumers never
+        see the packed width.
+        """
+        if self.storage == "int4" and self.backend == "pallas":
+            return quant.unpack_int4_rows(self.db[: self.n])[:, : self.d]
         return self.db[: self.n, : self.d]
 
     def bias_row(self) -> jnp.ndarray:
@@ -251,7 +262,17 @@ class PackedState:
         exact_slice = (
             prepped if self.storage == "f32" else qr.exact_rows
         )
-        if prepped.shape[1] < self.db.shape[1]:  # pallas lane padding
+        if self.storage == "int4" and self.backend == "pallas":
+            # Canonical codes -> the on-device nibble-packed width: pad
+            # lanes to the logical d_pad (2x the stored byte width), then
+            # pack two codes per byte.  Same order as the full pack.
+            prepped = quant.pack_int4_rows(
+                jnp.pad(
+                    prepped,
+                    ((0, 0), (0, 2 * self.db.shape[1] - prepped.shape[1])),
+                )
+            )
+        elif prepped.shape[1] < self.db.shape[1]:  # pallas lane padding
             prepped = jnp.pad(
                 prepped, ((0, 0), (0, self.db.shape[1] - prepped.shape[1]))
             )
@@ -331,15 +352,28 @@ class PackedState:
         return out
 
 
-def scan_k_for(spec: SearchSpec, n: int) -> int:
+def scan_k_for(
+    spec: SearchSpec, n: int, live: Optional[int] = None
+) -> int:
     """The k the scan's bin layout is planned for.
 
     Quantized tiers with rescoring over-fetch (``quant.scan_k``) so the
     exact second pass can restore the Eq. 13–14 guarantee; everything else
     plans for the user's k exactly as before.
+
+    ``live`` caps the over-fetch at the current live-row count (floored at
+    ``spec.k`` — the rescore still needs k outputs): after heavy deletes
+    an uncapped ``k_scan > live_n`` made the rescore gather read rows that
+    could only be tombstones.  The cap binds when the search program is
+    built; later deletes are handled by the sentinel/mask propagation
+    (masked candidates carry index -1 and can never surface), so no
+    retrace is ever needed.
     """
     if spec.rescore_enabled:
-        return quant.scan_k(spec.storage, spec.k, n=n)
+        ks = quant.scan_k(spec.storage, spec.k, n=n)
+        if live is not None:
+            ks = max(spec.k, min(ks, max(int(live), 0)))
+        return ks
     return spec.k
 
 
@@ -376,8 +410,18 @@ def _layout(
         max_bn = spec.max_block_n or DEFAULT_BLOCK_N
         block_n = bin_size * max(1, max_bn // bin_size)
         n_pad = round_up(max(n, block_n), block_n)
-        d_pad = round_up(d, 128)
-        rows = jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
+        if spec.storage == "int4":
+            # Two codes per byte on device: pad the logical lanes to a
+            # 256-multiple so the packed byte width stays a 128-lane
+            # multiple, then nibble-pack (zero pad codes dequantize to 0,
+            # exact for dot products like zero lanes).
+            d_pad = round_up(d, 256)
+            rows = quant.pack_int4_rows(
+                jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
+            )
+        else:
+            d_pad = round_up(d, 128)
+            rows = jnp.pad(rows, ((0, n_pad - n), (0, d_pad - d)))
         full = jnp.full((n_pad,), MASK_VALUE, jnp.float32).at[:n].set(bias)
         if scale is not None:
             # Padded-tail scale is 0: tail scores become 0*dot + MASK.

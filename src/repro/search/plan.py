@@ -57,6 +57,7 @@ from repro.core.roofline import (
     bottleneck,
     cops_per_dot,
     partial_reduce_cost,
+    partial_reduce_fused_cost,
 )
 from repro.search import cluster as clusterlib
 from repro.search import quant
@@ -124,8 +125,10 @@ _DTYPE_BYTES = {
 }
 
 # Minimum second-to-last-dim tile (sublane count) per dtype on TPU; the last
-# dim is always 128 lanes (see the Pallas tiling contract).
-_SUBLANE = {4: 8, 2: 16, 1: 32, 8: 8}
+# dim is always 128 lanes (see the Pallas tiling contract).  The 0.5 entry is
+# the int4 tier: its Pallas layout packs two nibbles per int8 byte, so the
+# stored tile is int8-shaped and tiles at 32 sublanes.
+_SUBLANE = {4: 8, 2: 16, 1: 32, 8: 8, 0.5: 32}
 
 
 def _dtype_bytes(dtype: Optional[str]) -> int:
@@ -344,11 +347,16 @@ def _vmem_budget(hw: Hardware) -> float:
 
 
 def _vmem_need(block_m: int, block_n: int, d_pad: int, dtype_bytes: int,
-               bin_size: int, db_bytes: Optional[int] = None) -> float:
+               bin_size: int, db_bytes: Optional[float] = None,
+               k_scan: int = 0) -> float:
     """On-chip bytes one (block_m, block_n) grid step holds.
 
     ``db_bytes`` is the stored database tile's bytes/element (quantized
-    tiers stream and hold narrower rows); default: ``dtype_bytes``.
+    tiers stream and hold narrower rows; int4 holds 0.5 — two nibbles per
+    stored byte); default: ``dtype_bytes``.  ``k_scan`` charges the fused
+    kernel's top-k carry — a persistent (block_m, k_scan) f32-value +
+    int32-index scratch pair that lives in VMEM across the whole database
+    stream, so it is budgeted alongside the per-step tiles.
     """
     if db_bytes is None:
         db_bytes = dtype_bytes
@@ -356,6 +364,7 @@ def _vmem_need(block_m: int, block_n: int, d_pad: int, dtype_bytes: int,
         d_pad * (block_m * dtype_bytes + block_n * db_bytes)  # operand tiles
         + block_m * block_n * 4                     # score tile (f32)
         + 2 * block_m * max(1, block_n // bin_size) * 4  # winners (val+idx)
+        + 2 * block_m * k_scan * 4                  # fused top-k carry
     )
 
 
@@ -369,7 +378,8 @@ def _plan_tiles(
     *,
     block_m: Optional[int] = None,
     max_block_n: Optional[int] = None,
-    db_bytes: Optional[int] = None,
+    db_bytes: Optional[float] = None,
+    k_scan: int = 0,
 ) -> Tuple[int, int]:
     """Initial kernel tile sizes from the on-chip memory model.
 
@@ -407,7 +417,7 @@ def _plan_tiles(
     g_anchor = max(1, DEFAULT_BLOCK_N // unit)
     g = min(g_data, g_anchor)
     while g > 1 and _vmem_need(
-        block_m, g * unit, d_pad, dtype_bytes, bin_size, db_bytes
+        block_m, g * unit, d_pad, dtype_bytes, bin_size, db_bytes, k_scan
     ) > budget:
         g -= 1
     return block_m, g * unit
@@ -424,24 +434,30 @@ def _escalate_block_m(
     dtype_bytes: int,
     bin_size: int,
     hw: Hardware,
-    db_bytes: Optional[int] = None,
+    db_bytes: Optional[float] = None,
+    k_scan: int = 0,
 ) -> int:
     """Grow the query tile until the memory wall clears the other walls.
 
     The kernel grid streams the full database once per ``block_m`` query
     rows (Eq. 20's ``ib``), so a too-small query tile makes the kernel
     memory-bound regardless of N.  The model doubles ``block_m`` — within
-    the VMEM budget, the query batch, and a 1024-row cap — until the
-    attainable FLOP/s stop being memory-limited.  This is the planner
-    reproducing the paper's Fig. 2 reasoning as a *decision* instead of a
-    figure.
+    the VMEM budget (which charges the fused carry at each candidate
+    size), the query batch, and a 1024-row cap — until the attainable
+    FLOP/s stop being memory-limited.  This is the planner reproducing
+    the paper's Fig. 2 reasoning as a *decision* instead of a figure.
+    Costs come from the fused single-pass model (the kernel this tile
+    actually feeds); ``num_bins`` stays in the signature for the legacy
+    two-pass callers in older tests.
     """
+    ks = max(1, k_scan)
     cap = min(1024, max(block_m, round_up(m_eff, 8)))
     while block_m < cap:
-        cost = partial_reduce_cost(
-            m_eff, padded_n, d_pad, num_bins,
+        cost = partial_reduce_fused_cost(
+            m_eff, padded_n, d_pad, ks,
             cops_per_dot=c, block_rows=block_m, dtype_bytes=dtype_bytes,
-            db_bytes=db_bytes,
+            db_bytes=db_bytes, block_n=block_n,
+            bins_per_block=max(1, block_n // bin_size),
         )
         memory_wall = hw.hbm_bandwidth * cost.i_mem
         other_walls = min(hw.peak_flops, hw.peak_cops * cost.i_cop)
@@ -449,7 +465,7 @@ def _escalate_block_m(
             break
         bigger = min(cap, block_m * 2)
         if _vmem_need(bigger, block_n, d_pad, dtype_bytes, bin_size,
-                      db_bytes) > _vmem_budget(hw):
+                      db_bytes, ks) > _vmem_budget(hw):
             break
         block_m = bigger
     return block_m
@@ -739,10 +755,15 @@ def plan_search(
     # to spec.dtype before preparing), so its rows stream at dbytes; the
     # quantized tiers stream their own narrower width.
     sbytes = dbytes if storage == "f32" else quant.storage_bytes(storage)
+    if storage == "int4" and backend != "pallas":
+        # Only the Pallas packed layout stores two nibbles per byte; every
+        # other backend scores the canonical int8-held codes, so its
+        # database streams (and host segments hold) one byte per element.
+        sbytes = 1.0
     if rescore and storage == "f32":
         raise ValueError(
-            'rescore=True requires a quantized storage tier ("bf16" or '
-            '"int8"); storage="f32" is already exact'
+            'rescore=True requires a quantized storage tier ("bf16", '
+            '"int8" or "int4"); storage="f32" is already exact'
         )
     rescore_on = (storage != "f32") if rescore is None else rescore
     ks = quant.scan_k(storage, k, n=n) if rescore_on else k
@@ -780,6 +801,7 @@ def plan_search(
     bm, bn = _plan_tiles(
         n, d_pad, bins.bin_size, m, dbytes, hw,
         block_m=block_m, max_block_n=max_block_n, db_bytes=sbytes,
+        k_scan=ks,
     )
     # Host residency materializes a (qb, segment_rows) score tile per
     # wave, not (qb, N) — size the query block against the wave shape.
@@ -805,12 +827,22 @@ def plan_search(
         if block_m is None:
             bm = _escalate_block_m(
                 bm, bn, m_eff, bins.padded_n, d_pad, bins.num_bins, c,
-                dbytes, bins.bin_size, hw, db_bytes=sbytes,
+                dbytes, bins.bin_size, hw, db_bytes=sbytes, k_scan=ks,
             )
-        cost = partial_reduce_cost(
-            m_eff, bins.padded_n, d_pad, bins.num_bins,
-            cops_per_dot=c, block_rows=bm, dtype_bytes=dbytes,
-            db_bytes=sbytes,
+        # The kernel clamps its query tile to the sublane-rounded batch
+        # (kernels.partial_reduce._effective_block_m), so a 1-row search
+        # pads to 8 MXU rows, not a full block_m — model the padded shape
+        # the kernel actually runs, then price the fused single-pass
+        # program: the database streamed once per query block plus the
+        # O(M·k_scan) result, with no score-tile HBM round trip.
+        sublane_q = _SUBLANE.get(dbytes, 8)
+        bm_eff = min(bm, max(sublane_q, round_up(max(m_eff, 1), sublane_q)))
+        m_pad = round_up(max(m_eff, 1), bm_eff)
+        cost = partial_reduce_fused_cost(
+            m_pad, bins.padded_n, d_pad, ks,
+            cops_per_dot=c, block_rows=bm_eff, dtype_bytes=dbytes,
+            db_bytes=sbytes, block_n=bn,
+            bins_per_block=max(1, bn // bins.bin_size),
         )
     else:
         # The dense xla path (and each sharded shard) runs the *unpadded*

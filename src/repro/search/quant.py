@@ -12,6 +12,14 @@ directly sets where the roofline knee lands.  This module owns the
     directly (f32 accumulation), halving database HBM traffic.
   * ``"int8"`` — 1 byte/element with a per-row symmetric scale
     (``row ≈ scale * int8``), quartering database HBM traffic.
+  * ``"int4"`` — 0.5 bytes/element with a per-row symmetric scale
+    (``row ≈ scale * int4``, codes in [-7, 7]).  The *canonical* stored
+    form everywhere above the kernel is one int8 code per element (so the
+    XLA reference paths, cluster gathers and snapshots stay byte-wise and
+    backend-agnostic); the Pallas layout packs two codes per byte
+    (:func:`pack_int4_rows`) and the scan kernel unpacks the nibbles in
+    VMEM, so the 8x HBM-traffic drop is realized where the memory wall
+    actually is.
 
 Quantized tiers run a **two-pass search** mirroring the paper's
 score/rescore split: PartialReduce scans the quantized database over all N
@@ -38,14 +46,16 @@ so planning the bins for an **effective K' = K + T at the original recall
 target** (and rescoring the L winners exactly) preserves the guarantee in
 expectation.  The per-tier confusion budgets
 
-    T(bf16) = ceil(K/2)        T(int8) = K
+    T(bf16) = ceil(K/2)        T(int8) = K        T(int4) = 2K
 
 follow from the tiers' relative score-error bounds (bf16 keeps an 8-bit
 mantissa, relative error ~2^-8; per-row symmetric int8 bounds the per-entry
 error at ``scale/2`` with ``scale = max|row|/127``, a ~0.4 % relative score
-error for well-conditioned rows) under a bounded near-tie density — they
-are deliberately conservative, and ``tests/test_recall_guarantee.py``
-validates the end-to-end recall empirically with a Hoeffding margin.
+error for well-conditioned rows; int4's ``scale = max|row|/7`` widens the
+band 16x to a ~7 % relative error, so its in-band rival budget doubles
+again) under a bounded near-tie density — they are deliberately
+conservative, and ``tests/test_recall_guarantee.py`` validates the
+end-to-end recall empirically with a Hoeffding margin.
 
 Nothing here imports the rest of ``repro.search`` — the metric registry,
 packed state, planner and backends all build *on* these primitives.
@@ -64,24 +74,38 @@ __all__ = [
     "check_metric_storage",
     "dequantize_rows",
     "is_quantized",
+    "pack_int4_rows",
     "quantize_rows",
     "scan_k",
     "storage_bytes",
     "storage_dtype",
+    "unpack_int4_rows",
     "validate_restored",
 ]
 
 # The legal ``SearchSpec.storage`` values, in decreasing bytes/element.
-STORAGE_TIERS: Tuple[str, ...] = ("f32", "bf16", "int8")
+STORAGE_TIERS: Tuple[str, ...] = ("f32", "bf16", "int8", "int4")
 
-_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
-_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+_BYTES = {"f32": 4, "bf16": 2, "int8": 1, "int4": 0.5}
+# Stored container dtype per tier.  int4 codes live in an int8 container:
+# unpacked (one code per byte, values in [-7, 7]) in the canonical form,
+# two codes per byte in the Pallas layout (pack_int4_rows).
+_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "int4": jnp.int8,
+}
 
 # Smallest representable per-row scale: keeps all-zero rows quantizing to
 # zeros instead of dividing by zero.
 _SCALE_FLOOR = 1e-30
 
 _INT8_MAX = 127.0
+_INT4_MAX = 7.0
+
+# Tiers that carry a per-row scale table alongside the stored rows.
+_SCALED_TIERS = ("int8", "int4")
 
 
 def is_quantized(storage: str) -> bool:
@@ -89,11 +113,15 @@ def is_quantized(storage: str) -> bool:
     return storage_bytes(storage) < 4
 
 
-def storage_bytes(storage: str) -> int:
+def storage_bytes(storage: str) -> float:
     """Bytes per stored database element for a tier.
 
+    Integral for the byte-wise tiers; ``0.5`` for int4, where the Pallas
+    layout packs two codes per byte (the XLA reference paths keep one code
+    per byte — see :func:`pack_int4_rows`).
+
     >>> [storage_bytes(s) for s in STORAGE_TIERS]
-    [4, 2, 1]
+    [4, 2, 1, 0.5]
     """
     try:
         return _BYTES[storage]
@@ -116,25 +144,32 @@ def quantize_rows(
     """Quantize metric-prepared f32 rows into a tier's stored form.
 
     Returns ``(stored, scale)`` where ``scale`` is the per-row symmetric
-    scale for int8 (``rows ≈ stored * scale[:, None]``) and ``None`` for
-    the other tiers.  Pure per-row math — the property ``Index.add``
-    exploits to quantize only the appended slice.
+    scale for the scaled tiers (``rows ≈ stored * scale[:, None]``) and
+    ``None`` for the others.  Pure per-row math — the property
+    ``Index.add`` exploits to quantize only the appended slice.  int4
+    returns *unpacked* codes (one int8 per element, values in [-7, 7]) —
+    the canonical form; nibble-packing is a Pallas layout concern
+    (:func:`pack_int4_rows`).
 
     >>> import jax.numpy as jnp
     >>> q, s = quantize_rows(jnp.ones((2, 3)), "int8")
     >>> (q.dtype.name, s.shape)
     ('int8', (2,))
+    >>> q4, s4 = quantize_rows(jnp.ones((2, 3)), "int4")
+    >>> (q4.dtype.name, int(q4.max()), s4.shape)
+    ('int8', 7, (2,))
     """
     rows = rows.astype(jnp.float32)
     if storage == "f32":
         return rows, None
     if storage == "bf16":
         return rows.astype(jnp.bfloat16), None
-    if storage == "int8":
+    if storage in _SCALED_TIERS:
+        qmax = _INT8_MAX if storage == "int8" else _INT4_MAX
         amax = jnp.max(jnp.abs(rows), axis=-1)
-        scale = jnp.maximum(amax / _INT8_MAX, _SCALE_FLOOR)
+        scale = jnp.maximum(amax / qmax, _SCALE_FLOOR)
         q = jnp.clip(
-            jnp.round(rows / scale[:, None]), -_INT8_MAX, _INT8_MAX
+            jnp.round(rows / scale[:, None]), -qmax, qmax
         ).astype(jnp.int8)
         return q, scale.astype(jnp.float32)
     raise ValueError(
@@ -153,6 +188,44 @@ def dequantize_rows(
     return rows
 
 
+def pack_int4_rows(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack canonical int4 codes (one int8 per element) two-per-byte.
+
+    Column ``2j`` lands in byte ``j``'s low nibble, column ``2j+1`` in its
+    high nibble; an odd trailing column is padded with a zero code.  This
+    is the on-device layout the Pallas scan kernel streams — half the HBM
+    bytes of the canonical form — and :func:`unpack_int4_rows` inverts it
+    exactly.
+
+    >>> import jax.numpy as jnp
+    >>> codes = jnp.asarray([[-7, 3, 5, -1]], dtype=jnp.int8)
+    >>> packed = pack_int4_rows(codes)
+    >>> packed.shape
+    (1, 2)
+    >>> bool((unpack_int4_rows(packed) == codes).all())
+    True
+    """
+    if codes.shape[-1] % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pad)
+    lo = codes[..., 0::2].astype(jnp.int32)
+    hi = codes[..., 1::2].astype(jnp.int32)
+    return ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+
+
+def unpack_int4_rows(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4_rows`: bytes back to int8 codes.
+
+    The output's trailing dimension is ``2 *`` the packed one; callers
+    slice off the odd-``d`` pad column if they need the logical width.
+    """
+    b = packed.astype(jnp.int32)
+    lo = (b << 28) >> 28  # arithmetic shifts sign-extend the low nibble
+    hi = b >> 4
+    interleaved = jnp.stack([lo, hi], axis=-1)
+    return interleaved.reshape(*packed.shape[:-1], -1).astype(jnp.int8)
+
+
 def scan_k(storage: str, k: int, *, n: Optional[int] = None) -> int:
     """Effective neighbour count the quantized scan plans its bins for.
 
@@ -162,6 +235,8 @@ def scan_k(storage: str, k: int, *, n: Optional[int] = None) -> int:
 
     >>> scan_k("f32", 10), scan_k("bf16", 10), scan_k("int8", 10)
     (10, 15, 20)
+    >>> scan_k("int4", 10)
+    30
     """
     if k <= 0:
         raise ValueError(f"k must be positive, got {k}")
@@ -169,6 +244,8 @@ def scan_k(storage: str, k: int, *, n: Optional[int] = None) -> int:
         k = k + math.ceil(k / 2)
     elif storage == "int8":
         k = 2 * k
+    elif storage == "int4":
+        k = 3 * k
     else:
         storage_bytes(storage)  # validate the tier name
     if n is not None:
@@ -219,11 +296,12 @@ def validate_restored(storage: str, db_dtype, has_scale: bool) -> None:
             f"{jnp.dtype(expected).name}) — corrupt or version-skewed "
             "snapshot; rebuild the index"
         )
-    if (storage == "int8") != has_scale:
+    if (storage in _SCALED_TIERS) != has_scale:
         raise ValueError(
             f"snapshot storage={storage!r} "
             + ("is missing its per-row scale table"
-               if storage == "int8" else "carries an unexpected scale table")
+               if storage in _SCALED_TIERS
+               else "carries an unexpected scale table")
             + " — corrupt or version-skewed snapshot; rebuild the index"
         )
 
@@ -233,8 +311,9 @@ class QuantizedRows:
     """One metric-prepared, tier-quantized row slice (build or ``add``).
 
     Attributes:
-      rows: stored-dtype rows (what the scan matmul consumes).
-      scale: per-row f32 scale (int8 tier) or None.
+      rows: stored-dtype rows (what the scan matmul consumes; canonical
+        unpacked codes for int4).
+      scale: per-row f32 scale (int8/int4 tiers) or None.
       bias: metric bias *of the stored values* (the metric-bias correction
         folded into the fused bias row, so quantized scan scores are
         internally consistent), or None.

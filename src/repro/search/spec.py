@@ -31,14 +31,15 @@ class SearchSpec:
         else xla), or an explicit "xla" | "pallas" | "sharded".
       dtype: optional compute dtype name (e.g. "bfloat16") the operands are
         cast to before the distance matmul; None inherits the input dtype.
-      storage: database storage tier — "f32" (exact, the default), "bf16"
-        or "int8" (``repro.search.quant``).  Quantized tiers store the
-        metric-prepared database at 2 or 1 bytes/element (per-row scale for
-        int8), scan it over all N rows, and exactly rescore an over-fetched
-        candidate set against a full-precision tail, so the Eq. 13–14
-        recall guarantee holds in expectation while database HBM traffic
-        drops 2–4x (Eq. 10/20).  ``"f32"`` is bit-identical to the
-        pre-quantization path.
+      storage: database storage tier — "f32" (exact, the default),
+        "bf16", "int8" or "int4" (``repro.search.quant``).  Quantized
+        tiers store the metric-prepared database at 2, 1 or 0.5
+        bytes/element (per-row scale for int8/int4; int4 packs two codes
+        per byte in the Pallas layout), scan it over all N rows, and
+        exactly rescore an over-fetched candidate set against a
+        full-precision tail, so the Eq. 13–14 recall guarantee holds in
+        expectation while database HBM traffic drops 2–8x (Eq. 10/20).
+        ``"f32"`` is bit-identical to the pre-quantization path.
       cluster: cluster-pruned scan front-end (``repro.search.cluster``).
         ``"auto"`` (the default) lets the planner decide: above the cost
         crossover the index builds a k-means coarse quantizer and each
@@ -73,6 +74,15 @@ class SearchSpec:
         of ``lax.top_k``.  Off by default: compiling the bitonic network
         inside jit is pathologically slow on CPU XLA (minutes at L=256),
         and ``lax.top_k`` over the L candidates is exact either way.
+      fused_select: run the Pallas backend's single-pass scan→select
+        kernel (the top-k carry merges in VMEM during the scan — Eq. 20
+        traffic: database bytes + O(k), no (M, N/bin_size) score-tile
+        round trip).  ``None`` (default) resolves to True on the pallas
+        backend whenever selection happens (``aggregate_to_topk`` or an
+        enabled rescore); False pins the two-pass scan→merge path, the
+        bit-identical parity oracle.  Ignored off the pallas backend and
+        by the cluster-pruned front-end (its gathered scan has no
+        streaming j-loop to carry state across).
       reduction_input_size_override: recall-accounting N for sharded inputs
         (paper §7); -1 means "use the operand's own N".
       serve_buckets: ascending micro-batch row counts the concurrent
@@ -120,6 +130,7 @@ class SearchSpec:
     stream: bool = True
     aggregate_to_topk: bool = True
     use_bitonic: bool = False
+    fused_select: Optional[bool] = None
     reduction_input_size_override: int = -1
     serve_buckets: Optional[Tuple[int, ...]] = None
     residency: str = "hbm"
@@ -165,7 +176,15 @@ class SearchSpec:
         if self.rescore and self.storage == "f32":
             raise ValueError(
                 "rescore=True requires a quantized storage tier "
-                '("bf16" or "int8"); storage="f32" is already exact'
+                '("bf16", "int8" or "int4"); storage="f32" is already '
+                "exact"
+            )
+        if self.fused_select and not self.aggregate_to_topk:
+            raise ValueError(
+                "fused_select=True needs aggregate_to_topk=True: the "
+                "fused kernel's VMEM carry *is* the top-k selection, so "
+                "there are no raw bin winners to return.  Use "
+                "fused_select=False (or None) for the two-pass scan."
             )
         if self.rescore and not self.aggregate_to_topk:
             raise ValueError(
@@ -215,6 +234,24 @@ class SearchSpec:
         if self.storage == "f32" or not self.aggregate_to_topk:
             return False
         return True if self.rescore is None else self.rescore
+
+    @property
+    def fused_select_enabled(self) -> bool:
+        """Resolved ``fused_select`` (the pallas backend consults this).
+
+        >>> SearchSpec().fused_select_enabled
+        True
+        >>> SearchSpec(aggregate_to_topk=False).fused_select_enabled
+        False
+        >>> SearchSpec(fused_select=False).fused_select_enabled
+        False
+        """
+        if self.fused_select is not None:
+            return self.fused_select
+        # The fused kernel produces the selected top-k directly, so it
+        # needs a selection stage to subsume; raw bin winners
+        # (aggregate_to_topk=False) keep the two-pass scan.
+        return self.aggregate_to_topk
 
     @property
     def resolved(self) -> bool:

@@ -24,6 +24,14 @@ metric-prepared operands in the *internal max convention* (maximize
 replaces the streamed scan's candidate set with gathered slots, and
 :func:`finalize_values` applies the metric's single sign flip.
 
+On the Pallas backend the fused kernel
+(``repro.kernels.partial_reduce.partial_reduce_fused``) subsumes the
+scan → ``merge_topk`` pair: the top-``k_scan`` carry is merged in VMEM
+during the scan, so the composed pipeline degenerates to
+score+scan+select (one dispatch, Eq. 20 traffic) followed by the same
+rescore/finalize stages.  The two-pass composition remains the parity
+oracle (``SearchSpec(fused_select=False)``).
+
 These functions are deliberately *pure shape-in/shape-out jax* — no jit,
 no counters, no layout knowledge.  ``repro.search.backends`` composes
 them into the entry points ``Index`` dispatches (where tracing/dispatch
@@ -56,6 +64,7 @@ __all__ = [
     "merge_topk",
     "finalize_values",
     "pad_queries_to",
+    "sentinelize_masked",
 ]
 
 # Finite -inf surrogate (float32 min): keeps the MXU/VPU paths free of NaN
@@ -63,6 +72,22 @@ __all__ = [
 MASK_VALUE = float(np.finfo(np.float32).min)
 
 Array = jnp.ndarray
+
+
+def sentinelize_masked(vals: Array, idxs: Array, n: int) -> Array:
+    """Pair masked candidates with the sentinel index ``-1``.
+
+    A masked winner (fully tombstoned bin, padded tail) carries a
+    meaningless index; clamping it into ``[0, n)`` — the historical
+    behaviour — let it alias row ``n-1`` and surface as a phantom
+    duplicate neighbour once ``merge_topk`` tied at ``-inf``.  Keeping the
+    ``-inf`` value paired with ``-1`` through the merge makes masked
+    entries collision-free; live winners are clamped into range here (the
+    only clamp the pipeline applies, at finalize order).  The fused Pallas
+    kernel applies the identical rule in VMEM, so fused and two-pass
+    outputs agree bitwise.
+    """
+    return jnp.where(vals > MASK_VALUE * 0.5, jnp.minimum(idxs, n - 1), -1)
 
 
 def pad_queries_to(q: Array, width: int) -> Array:

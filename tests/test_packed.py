@@ -79,7 +79,7 @@ def test_packed_pallas_program_never_pads_database(data):
     )
 
 
-@pytest.mark.parametrize("storage", ["bf16", "int8"])
+@pytest.mark.parametrize("storage", ["bf16", "int8", "int4"])
 def test_quantized_pallas_program_never_pads_database(data, storage):
     """The PR-2 traffic contract extends to quantized tiers: the compiled
     two-pass program pads only query-sized arrays — the quantized scan
@@ -111,6 +111,116 @@ def test_legacy_oneshot_path_does_pad_database(data):
         )(q, db).jaxpr
     )
     assert any(int(np.prod(s)) >= db.shape[0] * 128 for s in pads)
+
+
+# --- fused scan→select vs the two-pass parity oracle -------------------------
+
+
+@pytest.mark.parametrize("metric", ["mips", "l2", "cosine"])
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8", "int4"])
+def test_fused_select_matches_two_pass_oracle(data, metric, storage):
+    """The single-pass fused kernel (VMEM top-k carry) must be BIT-identical
+    to the two-pass scan→merge_topk composition on every metric × storage
+    tier — the acceptance grid of the fused-select tentpole."""
+    q, db = data
+    fused = Index.build(
+        db, metric=metric, k=K, backend="pallas", storage=storage
+    ).search(q)
+    oracle = Index.build(
+        db,
+        spec=SearchSpec(metric=metric, k=K, backend="pallas",
+                        storage=storage, fused_select=False),
+    ).search(q)
+    np.testing.assert_array_equal(
+        np.asarray(fused.indices), np.asarray(oracle.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fused.values), np.asarray(oracle.values)
+    )
+
+
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("storage", ["f32", "int8", "int4"])
+def test_masked_winners_are_sentinels_not_phantom_duplicates(fused, storage):
+    """Regression (masked-winner clamp bug): with fewer live rows than k,
+    the masked tail of each result row used to be clamped into [0, n) and
+    surfaced as duplicate phantom copies of row n-1 after the -inf merge
+    tie.  Masked entries must now carry the sentinel index -1, and the
+    live prefix must be duplicate-free."""
+    from repro.search.backends import MASK_VALUE
+
+    db = jax.random.normal(jax.random.PRNGKey(21), (64, 32))
+    index = Index.build(
+        db,
+        spec=SearchSpec(metric="mips", k=K, backend="pallas",
+                        storage=storage, fused_select=fused),
+    )
+    index.delete(list(range(6, 64)))  # 6 live rows < k=10
+    q = jax.random.normal(jax.random.PRNGKey(22), (5, 32))
+    vals, idxs = index.search(q)
+    vals, idxs = np.asarray(vals), np.asarray(idxs)
+    for row_v, row_i in zip(vals, idxs):
+        live = row_i[row_v > MASK_VALUE * 0.5]
+        masked = row_i[row_v <= MASK_VALUE * 0.5]
+        assert len(set(live.tolist())) == len(live), (
+            f"duplicate live winners: {row_i}"
+        )
+        assert (live >= 0).all() and (live < 6).all()
+        assert masked.size and (masked == -1).all(), (
+            f"masked winners must be -1 sentinels, got {masked}"
+        )
+
+
+def test_single_query_clamps_block_m(data):
+    """Regression (query-pad bug): an M=1 dispatch used to be padded to a
+    full block_m=256 query tile, wasting 256x the MXU work.  The kernel
+    now clamps the query tile to the sublane-rounded batch — the compiled
+    program pads queries to 8 rows, and the plan prices 8 rows of FLOPs."""
+    _, db = data
+    index = Index.build(db, metric="mips", k=K, backend="pallas")
+    pk = index.pack()
+    fn = index._build_block_fn("pallas", pk)
+    q1 = jax.random.normal(jax.random.PRNGKey(23), (1, 32))
+    pads = _pad_shapes(jax.make_jaxpr(fn)(q1, pk.db, pk.bias).jaxpr)
+    assert all(s[0] != 256 for s in pads if len(s) == 2), (
+        f"M=1 still padded to a full 256-row query tile: {pads}"
+    )
+    assert any(s[0] == 8 for s in pads if len(s) == 2), (
+        f"expected an 8-row (one sublane tile) query pad, got {pads}"
+    )
+    # And the planner models the same clamped shape: 8 padded query rows.
+    e = index.explain(m=1)
+    plan = e["plan"]
+    assert e["predicted"]["flops"] == (
+        2.0 * 8 * plan["padded_n"] * plan["d_pad"]
+    )
+
+
+def test_scan_k_capped_at_live_count_after_mass_delete(data):
+    """Regression (stale over-fetch bug): ``scan_k`` was derived from
+    capacity and never revalidated against the live count, so a
+    delete-heavy index over-fetched tombstones into the exact rescore
+    gather.  The program built after the deletes caps k_scan at the live
+    count, and the results match the exact answer over the survivors."""
+    from repro.search import exact_search
+    from repro.search.packed import scan_k_for
+
+    q, db = data
+    spec = SearchSpec(metric="mips", k=K, backend="pallas", storage="int8")
+    # unit: the cap binds at program-build time, never below k
+    assert scan_k_for(spec, 4096) == 2 * K
+    assert scan_k_for(spec, 4096, live=12) == 12
+    assert scan_k_for(spec, 4096, live=3) == K
+    index = Index.build(db, metric="mips", k=K, backend="pallas",
+                        storage="int8")
+    survivors = list(range(0, 4096, 341))  # 13 live rows > k
+    index.delete([i for i in range(4096) if i not in survivors])
+    assert index.size == len(survivors) == 13
+    vals, idxs = index.search(q)  # first compile: sees the live count
+    _, exact_idx = exact_search(q, db[jnp.asarray(survivors)], K)
+    got = np.asarray(idxs)
+    want = np.asarray(survivors)[np.asarray(exact_idx)]
+    assert (np.sort(got, axis=1) == np.sort(want, axis=1)).all()
 
 
 # --- steady state: zero packs, zero retraces --------------------------------

@@ -348,6 +348,55 @@ def test_rescore_tail_never_leaks_tombstoned_rows(seed, n, k, n_delete):
     )
 
 
+# --- result indices: unique, live, sentinel-masked (PR 9) --------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    backend=st.sampled_from(("xla", "pallas")),
+    storage=st.sampled_from(("f32", "bf16", "int8", "int4")),
+    seed=st.integers(min_value=0, max_value=2**16),
+    density_pct=st.integers(min_value=0, max_value=90),
+)
+def test_result_indices_unique_and_live(backend, storage, seed, density_pct):
+    """Across backend × storage (int4 included) × add/delete interleavings
+    × tombstone densities up to 90 %: every returned index with a real
+    (non-masked) score is unique within its row, in range, and live; on
+    the pallas path a masked entry carries the sentinel index -1 (never a
+    phantom alias of a real row — the masked-winner clamp bug)."""
+    from repro.search.backends import MASK_VALUE
+
+    rng = np.random.default_rng(seed)
+    pool = _db(seed, 160)
+    n0 = int(rng.integers(40, 96))
+    index = Index.build(
+        pool[:n0], metric="mips", k=8, backend=backend, storage=storage,
+        capacity_block=32,
+    )
+    _, ref_live = _apply_random_ops(index, pool, rng, int(rng.integers(1, 6)))
+    n_written = ref_live.shape[0]
+    target_dead = (n_written * density_pct) // 100
+    extra = [i for i in range(n_written) if ref_live[i]][: target_dead]
+    if extra:
+        index.delete(extra)
+        ref_live[np.asarray(extra)] = False
+    live_ids = set(np.flatnonzero(ref_live).tolist())
+    q = jax.random.normal(jax.random.PRNGKey(seed + 3), (6, D))
+    vals, idxs = index.search(q)
+    vals, idxs = np.asarray(vals), np.asarray(idxs)
+    for row_v, row_i in zip(vals, idxs):
+        real = row_i[np.abs(row_v) < -MASK_VALUE * 0.5]
+        assert len(set(real.tolist())) == len(real), f"duplicates: {row_i}"
+        assert all(int(i) in live_ids for i in real), (
+            f"dead/padded row surfaced: {row_i}"
+        )
+        masked = row_i[np.abs(row_v) >= -MASK_VALUE * 0.5]
+        if backend == "pallas":
+            assert (masked == -1).all(), (
+                f"pallas masked winners must be -1, got {masked}"
+            )
+
+
 def test_quantized_mass_delete_returns_only_sentinels():
     db = _db(11, 40)
     index = Index.build(db, metric="l2", k=4, backend="xla", storage="int8")
@@ -447,7 +496,7 @@ def _restore_parity(index, queries, tmp_path, *, mesh_axis=None):
     return restored
 
 
-@pytest.mark.parametrize("storage", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8", "int4"])
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 def test_restore_parity_backend_x_storage(backend, storage, tmp_path):
     db = _db(11, 512)

@@ -87,9 +87,37 @@ def test_scan_k_overfetch():
     assert quant.scan_k("f32", 10) == 10
     assert quant.scan_k("bf16", 10) == 15
     assert quant.scan_k("int8", 10) == 20
+    assert quant.scan_k("int4", 10) == 30  # T(int4) = 2K extra candidates
     assert quant.scan_k("int8", 10, n=12) == 12  # clamped to the database
     with pytest.raises(ValueError, match="storage tier"):
         quant.scan_k("fp4", 10)
+
+
+def test_int4_per_row_error_bound():
+    rows = jax.random.normal(jax.random.PRNGKey(5), (32, 64)) * jnp.arange(
+        1, 33
+    )[:, None]
+    stored, scale = quant.quantize_rows(rows, "int4")
+    codes = np.asarray(stored)
+    # canonical form: int8 container, one code per element, codes in [-7, 7]
+    assert stored.dtype == jnp.int8 and codes.shape == rows.shape
+    assert codes.min() >= -7 and codes.max() <= 7
+    np.testing.assert_allclose(
+        np.asarray(scale), np.abs(np.asarray(rows)).max(axis=-1) / 7.0,
+        rtol=1e-6,
+    )
+    err = np.abs(np.asarray(quant.dequantize_rows(stored, scale) - rows))
+    assert (err <= np.asarray(scale)[:, None] * 0.5 + 1e-6).all()
+
+
+@pytest.mark.parametrize("d", [8, 64, 7])  # odd d exercises the zero-pad
+def test_int4_pack_roundtrip(d):
+    rows = jax.random.normal(jax.random.PRNGKey(7), (16, d)) * 3.0
+    codes, _ = quant.quantize_rows(rows, "int4")
+    packed = quant.pack_int4_rows(codes)
+    assert packed.dtype == jnp.int8 and packed.shape == (16, (d + 1) // 2)
+    unpacked = np.asarray(quant.unpack_int4_rows(packed))[:, :d]
+    np.testing.assert_array_equal(unpacked, np.asarray(codes))
 
 
 def test_storage_bias_is_computed_from_stored_values(data):
@@ -151,7 +179,7 @@ def test_f32_storage_is_bit_identical_sharded(data):
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
-@pytest.mark.parametrize("storage", ["bf16", "int8"])
+@pytest.mark.parametrize("storage", ["bf16", "int8", "int4"])
 @pytest.mark.parametrize("metric", ["mips", "l2", "cosine"])
 def test_quantized_search_recall_floor(data, backend, storage, metric):
     q, db = data
@@ -232,7 +260,7 @@ def test_quantized_tombstones_never_return(data):
 # --- incremental mutations match a from-scratch pack -------------------------
 
 
-@pytest.mark.parametrize("storage", ["bf16", "int8"])
+@pytest.mark.parametrize("storage", ["bf16", "int8", "int4"])
 def test_incremental_add_matches_full_pack_quantized(data, storage):
     _, db = data
     inc = Index.build(db[:1024], metric="l2", k=K, backend="xla",
@@ -243,7 +271,7 @@ def test_incremental_add_matches_full_pack_quantized(data, storage):
     a, b = inc.pack(), full.pack()
     np.testing.assert_array_equal(np.asarray(a.db), np.asarray(b.db))
     np.testing.assert_array_equal(np.asarray(a.bias), np.asarray(b.bias))
-    if storage == "int8":
+    if storage in ("int8", "int4"):
         np.testing.assert_array_equal(
             np.asarray(a.scale), np.asarray(b.scale)
         )
@@ -289,6 +317,27 @@ def test_explain_reports_storage_traffic(data):
         == f32["storage"]["db_resident_bytes"] / 4
     )
     assert i8["plan"]["storage"] == "int8"
+
+
+def test_explain_reports_int4_storage_traffic(data):
+    """int4 is priced at two codes per byte on the Pallas path (the only
+    backend that streams the packed nibbles; dense backends keep the
+    canonical 1-byte codes and the planner floors them at int8 cost)."""
+    _, db = data
+    f32 = Index.build(db, k=K, backend="pallas").explain()
+    i4 = Index.build(db, k=K, backend="pallas", storage="int4").explain()
+    assert i4["storage"]["tier"] == "int4"
+    assert i4["storage"]["db_bytes_per_element"] == 0.5
+    assert (
+        i4["storage"]["db_resident_bytes"]
+        == f32["storage"]["db_resident_bytes"] / 8
+    )
+    assert i4["storage"]["rescore"] and i4["storage"]["k_scan"] == 3 * K
+    assert i4["plan"]["storage"] == "int4"
+    # the fused-select scan is the default, and its predicted traffic is
+    # what the bench smoke compares against measured db bytes
+    assert i4["storage"]["fused_select"]
+    assert i4["storage"]["predicted_hbm_bytes"] == i4["plan"]["hbm_bytes"]
 
 
 def test_planner_traffic_drops_on_fused_kernel():

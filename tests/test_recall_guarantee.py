@@ -155,6 +155,10 @@ QUANT_CORNERS = [
     ("cosine", "xla", "int8", 4, 0.99, 4, 256),
     ("l2", "pallas", "bf16", 16, 0.90, 2, 128),
     ("mips", "pallas", "int8", 8, 0.90, 2, 128),
+    # int4: half-byte rows, T(int4)=2K over-fetch (quant.scan_k) — the
+    # widest-error tier the two-pass guarantee must still absorb.
+    ("l2", "xla", "int4", 10, 0.90, 4, 256),
+    ("mips", "pallas", "int4", 8, 0.90, 2, 128),
 ]
 
 
