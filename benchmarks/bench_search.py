@@ -44,8 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.search import Index, SearchSpec, backends, exact_search
+from repro.search import telemetry
 from repro.search import plan as planlib
-from repro.search.packed import PACK_EVENTS, reset_pack_events
+from repro.search.packed import PACK_EVENTS
 
 # The pre-planner hard-coded tile configuration (PR-2 and earlier): the
 # baseline the model-planned path must match or beat.
@@ -196,8 +197,7 @@ def bench_quant(backend, metric, m, n, d, query_block, repeats, emit):
                             query_block=query_block, storage=storage),
         )
         index.search(queries)  # warmup: trace + compile + pack
-        backends.reset_trace_counts()
-        reset_pack_events()
+        telemetry.reset_all()  # one reset for every counter surface
         wall, dispatches = _time_search(index, queries, repeats)
         retraces = sum(backends.TRACE_COUNTS.values())
         packs = sum(PACK_EVENTS.values())
@@ -265,8 +265,7 @@ def bench_fused(metric, m, n, d, query_block, repeats, emit):
                             fused_select=fused),
         )
         outs[mode] = index.search(queries)  # warmup + parity sample
-        backends.reset_trace_counts()
-        reset_pack_events()
+        telemetry.reset_all()  # one reset for every counter surface
         wall, dispatches = _time_search(index, queries, repeats)
         row["modes"][mode] = {
             "wall_s_per_search": wall,
@@ -372,8 +371,7 @@ def bench_cluster(backend, metric, m, n, d, query_block, repeats, emit):
             len(set(r.tolist()) & s) / 10
             for r, s in zip(jax.device_get(idxs), exact_sets)
         ) / m
-        backends.reset_trace_counts()
-        reset_pack_events()
+        telemetry.reset_all()  # one reset for every counter surface
         wall, dispatches = _time_search(index, queries, repeats)
         cplan = index.pack().cluster.plan if mode == "auto" \
             and index.pack().cluster is not None else None
@@ -584,6 +582,7 @@ def main() -> None:
             "repeats": repeats,
             "smoke": args.smoke,
         },
+        "telemetry": telemetry.export_json(),
         "results": results,
         "plan_results": plan_results,
         "quant_results": quant_results,

@@ -21,6 +21,11 @@ served at coalesced-batch efficiency instead of one dispatch each:
   * **snapshot**: ``Index.save`` / ``Index.restore`` wall time for the
     benchmark index (``time_to_restore_s`` is the cold-replica recovery
     story), with bit-parity asserted against the live index.
+  * **telemetry**: a C=8 closed loop against a fresh metrics registry —
+    Prometheus series count, trace-span coverage of measured latency,
+    exported-histogram vs bench-measured p50/p99 agreement, roofline
+    drift at fault rate 0, and the tracing-on vs tracing-off overhead
+    (interleaved min-wall, same idiom as coalesce-vs-direct).
 
 Writes ``BENCH_serve.json`` (commit full runs; CI smoke runs write to an
 untracked path, exactly like ``bench_search.py``).
@@ -50,6 +55,7 @@ import jax
 import numpy as np
 
 from repro.search import Index, SearchSpec, SearchServer, ServeConfig, backends
+from repro.search import telemetry
 from repro.search.faults import FaultInjector, InjectedFault
 from repro.search.serve import VirtualClock
 
@@ -406,6 +412,123 @@ def bench_snapshot(index, emit, repeats=3):
     return row
 
 
+def _drive_closed_loop(server, clients, requests_per_client, seed=500):
+    """Thread-per-client closed loop against a live server; returns
+    ``(wall_s, latencies)``."""
+    queries = [
+        np.asarray(jax.random.normal(jax.random.PRNGKey(seed + c),
+                                     (REQUEST_ROWS, D)))
+        for c in range(clients)
+    ]
+    latencies, errors = [], []
+
+    def client(cid):
+        try:
+            mine = []
+            for _ in range(requests_per_client):
+                t = server.submit(queries[cid])
+                t.result(timeout=120)
+                mine.append(t.latency_s)
+            latencies.extend(mine)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return wall, latencies
+
+
+def bench_telemetry(index, emit, clients=8, requests_per_client=10,
+                    repeats=3):
+    """Telemetry contract under a C=8 closed loop, plus tracing overhead.
+
+    One traced run against a fresh registry answers the acceptance
+    questions directly: how many Prometheus series a serving workload
+    exports, what fraction of each request's measured latency its trace
+    spans cover, whether the exported latency histogram agrees with the
+    bench's own percentiles (they observe the very same ``latency_s``
+    values), and whether the roofline-drift monitor sits inside its band
+    at fault rate 0.  Tracing overhead is then measured the same way
+    ``bench_coalesce_vs_direct`` measures serving overhead: interleaved
+    best-of-N min-wall passes with ``trace_buffer`` at its default vs 0
+    (tracing disabled).
+    """
+    total = clients * requests_per_client
+    telemetry.reset_all()
+    server = SearchServer(
+        index, ServeConfig(max_batch=MAX_BATCH, max_delay_s=0.001,
+                           trace_buffer=max(256, total)),
+        warmup=True,
+    )
+    wall, latencies = _drive_closed_loop(server, clients, requests_per_client)
+    health = server.health()
+    traces = server.traces()
+    coverage = telemetry.trace_coverage(traces)
+    chrome = telemetry.chrome_trace(traces)
+    index.telemetry()  # fold the index gauges into the export
+    prom = telemetry.export_prometheus()
+    series = [ln for ln in prom.splitlines() if ln and not ln.startswith("#")]
+    snap = telemetry.registry().histogram_snapshot(
+        "repro_serve_request_latency_seconds"
+    )
+    server.close()
+
+    measured = _percentiles(latencies)
+    row = {
+        "mode": "telemetry",
+        "clients": clients,
+        "requests": total,
+        "request_rows": REQUEST_ROWS,
+        "wall_s": wall,
+        "qps": total * REQUEST_ROWS / wall,
+        "prom_series": len(series),
+        "traced_requests": len(traces),
+        "trace_events": len(chrome["traceEvents"]),
+        "trace_coverage": coverage,
+        "hist_count": snap["count"] if snap else 0,
+        "hist_p50_ms": snap["p50"] * 1e3 if snap else None,
+        "hist_p99_ms": snap["p99"] * 1e3 if snap else None,
+        "drift": health["drift"]["value"],
+        "drift_in_band": health["drift"]["in_band"],
+        "expected_recall_live": health["expected_recall_live"],
+        **measured,
+    }
+
+    # Tracing overhead: interleaved min-wall, default tracing vs off.
+    wall_on = wall_off = float("inf")
+    for _ in range(repeats):
+        for buf in (256, 0):
+            s = SearchServer(
+                index, ServeConfig(max_batch=MAX_BATCH, max_delay_s=0.001,
+                                   trace_buffer=buf),
+                warmup=True,
+            )
+            w, _ = _drive_closed_loop(s, clients, requests_per_client)
+            s.close()
+            if buf:
+                wall_on = min(wall_on, w)
+            else:
+                wall_off = min(wall_off, w)
+    row["tracing_overhead"] = wall_on / wall_off - 1.0
+    emit(
+        f"telemetry C={clients}: {row['prom_series']} prom series, "
+        f"span coverage {coverage:.1%} over {len(traces)} traces, "
+        f"hist p50 {row['hist_p50_ms']:.2f}ms vs measured "
+        f"{measured['p50_ms']:.2f}ms, drift {row['drift']:.2f} "
+        f"({'in' if row['drift_in_band'] else 'OUT of'} band), "
+        f"tracing overhead {row['tracing_overhead']:+.1%}"
+    )
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
@@ -440,6 +563,9 @@ def main() -> None:
         ]
         results.extend(fault_rows)
         results.append(bench_snapshot(index, emit=print))
+        telem = bench_telemetry(index, emit=print, clients=8,
+                                requests_per_client=25)
+        results.append(telem)
     else:
         results.append(
             bench_closed_loop(index, clients=4, requests_per_client=10,
@@ -453,6 +579,9 @@ def main() -> None:
         results.extend(fault_rows)
         snapshot_row = bench_snapshot(index, emit=print, repeats=1)
         results.append(snapshot_row)
+        telem = bench_telemetry(index, emit=print, clients=8,
+                                requests_per_client=10)
+        results.append(telem)
 
     report = {
         "meta": {
@@ -478,6 +607,24 @@ def main() -> None:
         assert parity["server_over_direct"] > 0.8, (
             f"coalesced serving is {parity['server_over_direct']:.2f}x a "
             "pre-formed batch — serving overhead regression"
+        )
+        # Telemetry contracts (ISSUE 10 acceptance): a closed-loop run
+        # exports a real Prometheus surface, the trace spans tile the
+        # measured request latency, the exported histogram agrees with
+        # the bench's own percentiles over the same latency samples, the
+        # roofline-drift monitor is in band at fault rate 0, and tracing
+        # is within the <5% overhead budget at C=8.
+        assert telem["prom_series"] >= 20, telem["prom_series"]
+        assert telem["trace_coverage"] >= 0.95, telem["trace_coverage"]
+        assert telem["traced_requests"] == telem["requests"], telem
+        assert telem["drift_in_band"], telem
+        assert telem["hist_count"] == telem["requests"], telem
+        for q in ("p50", "p99"):
+            got, want = telem[f"hist_{q}_ms"], telem[f"{q}_ms"]
+            assert abs(got - want) <= 0.05 * want + 0.05, (q, got, want)
+        assert telem["tracing_overhead"] < 0.05, (
+            f"tracing adds {telem['tracing_overhead']:+.1%} at C=8 "
+            "closed-loop — over the 5% budget"
         )
         assert parity["server_over_per_request"] > 1.0, (
             f"coalesced serving is {parity['server_over_per_request']:.2f}x "

@@ -34,7 +34,7 @@ else
     # they never clobber the committed full-grid BENCH_search.json /
     # BENCH_serve.json seeds)
     python -m pytest -x -q tests/test_packed.py tests/test_serve.py \
-        tests/test_cluster.py
+        tests/test_cluster.py tests/test_telemetry.py
     python -m pytest -x -q -m "not slow" tests/test_faults.py
     # Layout-parity grid under 8 fake devices (subprocess harness in
     # tests/conftest.py); the 16/48-device grids are @slow / full tier.
@@ -46,5 +46,5 @@ else
     exec python -m pytest -x -q -m "not slow" \
         --ignore=tests/test_packed.py --ignore=tests/test_serve.py \
         --ignore=tests/test_cluster.py --ignore=tests/test_faults.py \
-        --ignore=tests/test_sharded2d.py
+        --ignore=tests/test_sharded2d.py --ignore=tests/test_telemetry.py
 fi

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Dump the unified telemetry surface after a tiny serving workload.
+
+Runs a small closed-loop workload through ``SearchServer`` (so every
+layer — dispatch counters, pack events, serve events, latency
+histograms, traces, the roofline-drift monitor — has something to
+report) and writes the three export formats the telemetry layer speaks:
+
+  * ``--format prom``   Prometheus text exposition (default; what a
+    scrape endpoint would serve — pipe to a file and point promtool
+    at it),
+  * ``--format json``   the structured registry snapshot
+    (``telemetry.export_json()``),
+  * ``--format chrome`` Chrome ``traceEvents`` JSON of the per-request
+    traces — open in ``chrome://tracing`` or Perfetto for the
+    submit → queue → coalesce → stage → dispatch → scatter flame graph.
+
+``--out PATH`` writes to a file instead of stdout.  Use ``--requests`` /
+``--clients`` to scale the workload; shapes stay small so the dump runs
+in seconds on CPU.
+
+    PYTHONPATH=src python scripts/telemetry_dump.py
+    PYTHONPATH=src python scripts/telemetry_dump.py --format chrome \
+        --out trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+
+import jax
+import numpy as np
+
+from repro.search import (
+    Index,
+    SearchServer,
+    ServeConfig,
+    telemetry,
+)
+
+N, D, K = 2048, 64, 10
+REQUEST_ROWS = 4
+
+
+def run_workload(clients: int, requests_per_client: int) -> SearchServer:
+    """Drive a closed loop and return the still-open server (caller
+    reads traces/health, then closes)."""
+    db = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    index = Index.build(db, metric="mips", k=K)
+    server = SearchServer(
+        index,
+        ServeConfig(max_batch=32, max_delay_s=0.001,
+                    trace_buffer=max(256, clients * requests_per_client)),
+        warmup=True,
+    )
+    queries = [
+        np.asarray(jax.random.normal(jax.random.PRNGKey(1 + c),
+                                     (REQUEST_ROWS, D)))
+        for c in range(clients)
+    ]
+
+    def client(cid):
+        for _ in range(requests_per_client):
+            server.submit(queries[cid]).result(timeout=120)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    server.health()       # refresh uptime / drift / recall gauges
+    index.telemetry()     # fold the index gauges into the export
+    return server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--format", choices=("prom", "json", "chrome"),
+                    default="prom")
+    ap.add_argument("--out", default=None,
+                    help="write here instead of stdout")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per client")
+    args = ap.parse_args()
+
+    telemetry.reset_all()
+    server = run_workload(args.clients, args.requests)
+    try:
+        if args.format == "prom":
+            text = telemetry.export_prometheus()
+        elif args.format == "json":
+            text = json.dumps(telemetry.export_json(), indent=2)
+        else:
+            text = json.dumps(telemetry.chrome_trace(server.traces()),
+                              indent=2)
+    finally:
+        server.close()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text if text.endswith("\n") else text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

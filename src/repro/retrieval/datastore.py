@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.search import Index
+from repro.search import telemetry
+from repro.search.backends import DISPATCH_COUNTS
+from repro.search.packed import PACK_EVENTS
 from repro.search.serve import SearchServer, ServeConfig
 
 __all__ = ["KNNDatastore", "knn_lm_logits"]
@@ -150,10 +153,23 @@ class KNNDatastore:
         return self
 
     def stats(self) -> dict:
-        """Compile-cache and packing observability for serving dashboards."""
+        """Compile-cache and packing observability for serving dashboards.
+
+        ``telemetry`` carries the global dispatch/trace counter series
+        (``repro.search.telemetry`` snapshot of the adopted legacy
+        dicts); the full registry export is ``self.index.telemetry()``.
+        """
         info = dict(self.index.cache_info())
         info["capacity"] = self.index.capacity
         info["appended"] = self.index.num_appended
+        reg = telemetry.registry()
+        info["telemetry"] = {
+            "dispatches": dict(DISPATCH_COUNTS),
+            "pack_events": dict(PACK_EVENTS),
+            "latency": reg.histogram_snapshot(
+                "repro_serve_request_latency_seconds"
+            ),
+        }
         if self.server is not None:
             info["server"] = self.server.stats()
         return info

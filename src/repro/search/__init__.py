@@ -96,6 +96,18 @@ shedding (``Overloaded`` with a ``retry_after_s`` estimate), and
 seeded ``FaultInjector`` (``TransientFault`` / ``FatalFault`` /
 ``WorkerDeath`` at the named ``INJECTION_POINTS``).
 
+Unified telemetry (``repro.search.telemetry``): one process-global
+metrics registry (counters / gauges / windowed p50-p99 histograms,
+labeled by backend/storage/cluster/bucket) absorbs the four legacy
+counter dicts and exports Prometheus text or a JSON snapshot
+(``export_prometheus`` / ``export_json``, ``Index.telemetry()``,
+``scripts/telemetry_dump.py``); every served request carries a
+ticket-scoped stage trace (``SearchServer.traces``, Chrome-trace JSON
+via ``chrome_trace``); and a per-bucket roofline-drift monitor checks
+each dispatch's measured wall against the plan's Eq. 10/20 prediction,
+degrading ``SearchServer.health()`` when the calibrated ratio leaves
+its band.  ``telemetry.reset_all()`` zeroes everything in one call.
+
 Crash-safe snapshots: ``Index.save(path)`` / ``Index.restore(path)``
 persist the packed state, cluster tables and quantization artifacts
 through ``repro.checkpoint``'s atomic-rename commit (``SNAPSHOT_FORMAT`` /
@@ -156,6 +168,7 @@ from repro.search.functional import (
 from repro.search.cluster import ClusterPlan, ClusterState, query_miss_rate
 from repro.search.faults import (
     INJECTION_POINTS,
+    DelayFault,
     FatalFault,
     FaultInjector,
     InjectedFault,
@@ -219,6 +232,19 @@ from repro.search.serve import (
     reset_serve_events,
 )
 from repro.search.spec import BACKENDS, SearchSpec
+from repro.search.telemetry import (
+    AtomicCounter,
+    DriftMonitor,
+    MetricsRegistry,
+    RequestTrace,
+    Span,
+    chrome_trace,
+    export_json,
+    export_prometheus,
+    registry,
+    reset_all,
+    trace_coverage,
+)
 
 __all__ = [
     # front door
@@ -308,6 +334,7 @@ __all__ = [
     "TransientFault",
     "FatalFault",
     "WorkerDeath",
+    "DelayFault",
     "INJECTION_POINTS",
     # crash-safe snapshots
     "SNAPSHOT_FORMAT",
@@ -316,7 +343,7 @@ __all__ = [
     "restore_state",
     "validate_restored",
     "query_miss_rate",
-    # observability
+    # observability (repro.search.telemetry is the unified layer)
     "TRACE_COUNTS",
     "DISPATCH_COUNTS",
     "PACK_EVENTS",
@@ -325,6 +352,17 @@ __all__ = [
     "reset_dispatch_counts",
     "reset_pack_events",
     "reset_serve_events",
+    "MetricsRegistry",
+    "AtomicCounter",
+    "DriftMonitor",
+    "RequestTrace",
+    "Span",
+    "registry",
+    "export_prometheus",
+    "export_json",
+    "chrome_trace",
+    "trace_coverage",
+    "reset_all",
     # planning / operator re-exports
     "BinPlan",
     "plan_bins",

@@ -43,6 +43,7 @@ from repro.kernels.partial_reduce import (
 )
 from repro.parallel.sharding import shard_map_compat
 from repro.search.metrics import get_metric
+from repro.search import telemetry
 from repro.search.stages import (
     MASK_VALUE,
     finalize_values,
@@ -80,21 +81,37 @@ __all__ = [
 # MASK_VALUE is defined in (and re-exported from) ``repro.search.stages``.
 
 # backend name -> number of jit traces (test observability hook).
-TRACE_COUNTS = collections.Counter()
+# AtomicCounter (repro.search.telemetry): increments are lock-protected
+# read-modify-writes, and the global registry adopts the dict so one
+# telemetry export / reset_all() covers it.
+TRACE_COUNTS = telemetry.AtomicCounter()
 
 # backend name -> number of compiled-callable invocations issued by Index
 # (one per device dispatch; the streaming executor issues exactly one for
 # an arbitrarily large query batch).
-DISPATCH_COUNTS = collections.Counter()
+DISPATCH_COUNTS = telemetry.AtomicCounter()
+
+telemetry.registry().register_counter_dict(
+    "repro_traces_total", TRACE_COUNTS, "backend",
+    "jit traces per backend (steady state: zero growth)",
+)
+telemetry.registry().register_counter_dict(
+    "repro_dispatches_total", DISPATCH_COUNTS, "backend",
+    "device dispatches per backend (one per coalesced batch)",
+)
 
 
 def reset_trace_counts() -> None:
-    """Zero ``TRACE_COUNTS`` (tests: reset, act, assert — no arithmetic)."""
+    """Zero ``TRACE_COUNTS`` (tests: reset, act, assert — no arithmetic).
+
+    Deprecated thin alias: ``repro.search.telemetry.reset_all()`` zeroes
+    this and every other global series in one call."""
     TRACE_COUNTS.clear()
 
 
 def reset_dispatch_counts() -> None:
-    """Zero ``DISPATCH_COUNTS``."""
+    """Zero ``DISPATCH_COUNTS`` (deprecated alias — prefer
+    ``repro.search.telemetry.reset_all()``)."""
     DISPATCH_COUNTS.clear()
 
 
@@ -170,7 +187,7 @@ def dense_search(
     cosine); ``row_bias`` carries the metric bias and/or tombstone mask.
     """
     m = get_metric(metric)
-    TRACE_COUNTS["xla"] += 1
+    TRACE_COUNTS.inc("xla")
     q = m.prepare_queries(queries)
     scores = score_rows(q, database, row_bias)
     vals, idxs = scan_candidates(
@@ -228,7 +245,7 @@ def dense_search_quant(
     it the quantized scan's own scores are returned (approximate values).
     """
     m = get_metric(metric)
-    TRACE_COUNTS["xla"] += 1
+    TRACE_COUNTS.inc("xla")
     q = m.prepare_queries(queries)
     scores = score_rows(q, database, row_bias, scale)
     if rescore_db is not None:
@@ -305,7 +322,7 @@ def cluster_search(
     fused bias row, so tombstones and masked slots can never surface.
     """
     m_obj = get_metric(metric)
-    TRACE_COUNTS[trace_as] += 1
+    TRACE_COUNTS.inc(trace_as)
     q = m_obj.prepare_queries(queries)
     idc, valid = prune_candidates(
         q, centroids, centroid_bias, cluster_rows, spill_rows, probes
@@ -361,7 +378,7 @@ def cluster_search_quant(
     unclustered one.
     """
     m_obj = get_metric(metric)
-    TRACE_COUNTS[trace_as] += 1
+    TRACE_COUNTS.inc(trace_as)
     q = m_obj.prepare_queries(queries)
     idc, valid = prune_candidates(
         q, centroids, centroid_bias, cluster_rows, spill_rows, probes
@@ -456,7 +473,7 @@ def _pallas_search_jit(
     reduction_input_size_override,
 ):
     m_obj = get_metric(metric)
-    TRACE_COUNTS["pallas"] += 1
+    TRACE_COUNTS.inc("pallas")
     q = m_obj.prepare_queries(queries)
     q, db, bias, plan, bin_size, block_n, (m, n) = prepare_pallas_inputs(
         q, database, k, recall_target,
@@ -516,7 +533,7 @@ def pallas_search_packed(
     both paths.
     """
     m_obj = get_metric(metric)
-    TRACE_COUNTS["pallas"] += 1
+    TRACE_COUNTS.inc("pallas")
     q = m_obj.prepare_queries(queries)
     if fused_select and aggregate_to_topk:
         vals, idxs = partial_reduce_fused(
@@ -585,7 +602,7 @@ def pallas_search_packed_quant(
     bin-winner tile never exists in HBM.
     """
     m_obj = get_metric(metric)
-    TRACE_COUNTS["pallas"] += 1
+    TRACE_COUNTS.inc("pallas")
     q = m_obj.prepare_queries(queries)
     if fused_select and (rescore_db is not None or aggregate_to_topk):
         vals, idxs = partial_reduce_fused(
@@ -760,7 +777,7 @@ def make_sharded_search_fn(
             raise ValueError(
                 f"database rows {global_n} not divisible by {n_shards} shards"
             )
-        TRACE_COUNTS["sharded"] += 1
+        TRACE_COUNTS.inc("sharded")
         q = m_obj.prepare_queries(queries)
         bias = (
             row_bias

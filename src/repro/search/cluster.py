@@ -295,6 +295,19 @@ class ClusterState:
             return None
         return self.served_miss_missed / self.served_miss_checked
 
+    def served_miss_report(self) -> dict:
+        """The served-query miss monitor block both ``Index.explain()``
+        and ``SearchServer.health()`` report: sampled pairs, the rate,
+        the warn threshold, and whether it is breached."""
+        rate = self.served_miss_rate
+        threshold = miss_check_threshold(self.plan.miss_budget)
+        return {
+            "sampled_pairs": self.served_miss_checked,
+            "miss_rate": rate,
+            "warn_threshold": threshold,
+            "warning": rate is not None and rate > threshold,
+        }
+
     @property
     def needs_recluster(self) -> bool:
         """Lazy-replan trigger: incremental assignment has GROWN the spill

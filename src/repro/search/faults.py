@@ -46,6 +46,12 @@ Exception taxonomy
   * :class:`WorkerDeath`    — simulates the worker thread dying.  The
     wall-clock watchdog (and the virtual-clock ``step()``) restarts the
     worker without dropping queued tickets.
+  * :class:`DelayFault`     — a *slowdown*, not an error: a hit of kind
+    ``"delay"`` sleeps ``FaultInjector.delay_s`` wall seconds and then
+    returns normally (nothing is raised).  This is the deterministic way
+    to drive the telemetry roofline-drift monitor out of band — the
+    dispatch succeeds, it is just slow.  The class itself is the
+    taxonomy marker; it is never raised.
 
 Usage::
 
@@ -77,6 +83,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import time
 import zlib
 from collections import Counter
 from typing import Dict, Iterable, Optional, Sequence, Tuple
@@ -84,6 +91,7 @@ from typing import Dict, Iterable, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
+    "DelayFault",
     "FatalFault",
     "FaultInjector",
     "INJECTION_POINTS",
@@ -134,10 +142,18 @@ class WorkerDeath(InjectedFault):
     """Simulated death of the serving worker (watchdog-recoverable)."""
 
 
+class DelayFault(InjectedFault):
+    """Taxonomy marker for the ``"delay"`` kind: a hit of this kind
+    *sleeps* ``FaultInjector.delay_s`` and returns — it is never raised.
+    Use it to inject a slow (but successful) dispatch, e.g. to drive the
+    ``SearchServer`` roofline-drift monitor out of its band."""
+
+
 _KINDS = {
     "transient": TransientFault,
     "fatal": FatalFault,
     "death": WorkerDeath,
+    "delay": DelayFault,
 }
 
 
@@ -162,6 +178,8 @@ class FaultInjector:
         "fatal" | "death").  Exact and rate-independent: the canonical way
         to script a reproducible chaos scenario.
       rate_kind: the exception kind rate-based fires raise.
+      delay_s: wall seconds a ``"delay"``-kind hit sleeps before
+        returning (delay fires succeed slowly instead of raising).
 
     >>> inj = FaultInjector(schedule=[("serve.dispatch", 2, "transient")])
     >>> inj.fire("serve.dispatch")   # hit 1: passes
@@ -178,8 +196,12 @@ class FaultInjector:
         rates: Optional[Dict[str, float]] = None,
         schedule: Optional[Iterable[Sequence]] = None,
         rate_kind: str = "transient",
+        delay_s: float = 0.05,
     ):
         self.seed = int(seed)
+        if delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {delay_s}")
+        self.delay_s = float(delay_s)
         self.rates: Dict[str, float] = {}
         for point, p in (rates or {}).items():
             _check_point(point)
@@ -237,6 +259,11 @@ class FaultInjector:
             if kind is None:
                 return
             self.fired[point] += 1
+        if kind == "delay":
+            # A slowdown, not an error: sleep OUTSIDE the lock (other
+            # points keep firing) and return without raising.
+            time.sleep(self.delay_s)
+            return
         raise _KINDS[kind](point, hit)
 
 

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.search import telemetry
 from repro.search.backends import DISPATCH_COUNTS, TRACE_COUNTS
 from repro.search.metrics import get_metric
 from repro.search.stages import (
@@ -90,7 +91,7 @@ def wave_program(
     last; MIPS traces once).
     """
     m_obj = get_metric(metric)
-    TRACE_COUNTS["host"] += 1
+    TRACE_COUNTS.inc("host")
     q = m_obj.prepare_queries(queries)
     scores = score_rows(q, seg_db, seg_bias, seg_scale)
     if rescore:
@@ -178,6 +179,9 @@ class HostTierSearcher:
         q = jax.device_put(queries, self.device)
         carry_vals = jnp.full((m, spec.k), MASK_VALUE, jnp.float32)
         carry_idxs = jnp.zeros((m, spec.k), jnp.int32)
+        telemetry.registry().set_gauge(
+            "repro_hosttier_segments", waves, segment_rows=seg
+        )
         nxt = self._stage(pk, 0)
         for i in range(waves):
             cur = nxt
@@ -185,7 +189,12 @@ class HostTierSearcher:
                 # Double buffer: the next wave's copy is in flight while
                 # this wave's program runs.
                 nxt = self._stage(pk, i + 1)
-            DISPATCH_COUNTS["host"] += 1
+            DISPATCH_COUNTS.inc("host")
+            # Per-wave host-tier series: the cold tier's wave cadence is
+            # its own roofline story (one dispatch per segment streamed).
+            telemetry.registry().inc(
+                "repro_hosttier_waves_total", segment_rows=seg
+            )
             carry_vals, carry_idxs = wave_program(
                 q, cur[0], cur[1], cur[2], cur[3], cur[4],
                 jnp.int32(i * seg), carry_vals, carry_idxs,

@@ -37,6 +37,7 @@ from repro.search import backends, packed as packedlib, plan as planlib
 from repro.search import cluster as clusterlib
 from repro.search import faults as faultslib
 from repro.search import hosttier as hosttierlib
+from repro.search import telemetry as telemetrylib
 from repro.search import quant
 from repro.search.metrics import Metric, get_metric
 from repro.search.spec import SearchSpec
@@ -284,6 +285,27 @@ class Index:
             return cp.recall_decomposition(k_scan)["expected_recall"]
         return self.plan.expected_recall
 
+    @property
+    def expected_recall_live(self) -> float:
+        """Live served-recall proxy: the analytic bin-collision term
+        (Eq. 13, over-fetch margin of the quantized tiers already folded
+        into ``scan_k``) times the *measured* served-query cluster-miss
+        survival rate when the ``SearchServer`` sampler has data —
+        falling back to the analytic miss term before any sample, and to
+        plain ``expected_recall`` on unclustered indexes.  This is the
+        one gauge that moves when real traffic drifts out of the
+        distribution the cluster tables were certified on."""
+        cp = self._cluster_plan_in_effect()
+        if cp is None:
+            return float(self.plan.expected_recall)
+        k_scan = packedlib.scan_k_for(self.spec, cp.scan_rows)
+        decomp = cp.recall_decomposition(k_scan)
+        cs = self._packed.cluster if self._packed is not None else None
+        rate = cs.served_miss_rate if cs is not None else None
+        if rate is None:
+            return float(decomp["expected_recall"])
+        return float(decomp["collision_term"] * (1.0 - rate))
+
     def _cluster_plan_in_effect(self):
         """The ClusterPlan the live search path actually prunes with.
 
@@ -490,14 +512,8 @@ class Index:
                 # the build-time check used db rows as query proxies; this
                 # is the live estimate over *real* traffic, the only signal
                 # for out-of-distribution query streams.
-                rate = cs.served_miss_rate
-                threshold = clusterlib.miss_check_threshold(cp.miss_budget)
-                report["cluster"]["served_miss"] = {
-                    "sampled_pairs": cs.served_miss_checked,
-                    "miss_rate": rate,
-                    "warn_threshold": threshold,
-                    "warning": rate is not None and rate > threshold,
-                }
+                report["cluster"]["served_miss"] = cs.served_miss_report()
+        report["expected_recall_live"] = self.expected_recall_live
         if self._packed is not None:
             report["packed"] = {
                 "n": self._packed.n,
@@ -572,6 +588,37 @@ class Index:
 
     def cache_info(self) -> dict:
         return self._cache.info()
+
+    def telemetry(self) -> dict:
+        """One JSON-serializable telemetry snapshot, index gauges included.
+
+        Refreshes this index's gauges in the process-global registry —
+        size/capacity and the recall pair (analytic ``expected_recall``
+        and live ``expected_recall_live``), labeled by
+        backend/storage/cluster — then returns
+        ``repro.search.telemetry.export_json()`` (so the dispatch/trace/
+        pack/serve counters and every histogram ride along).  For the
+        Prometheus text form, call ``telemetry.export_prometheus()``
+        after this.
+        """
+        reg = telemetrylib.registry()
+        labels = {
+            "backend": self._resolve_backend(),
+            "storage": self.spec.storage,
+            "cluster": (
+                "on" if self._cluster_plan_in_effect() is not None else "off"
+            ),
+        }
+        reg.set_gauge("repro_index_size", self.size, **labels)
+        reg.set_gauge("repro_index_capacity", self.capacity, **labels)
+        reg.set_gauge(
+            "repro_index_expected_recall", self.expected_recall, **labels
+        )
+        reg.set_gauge(
+            "repro_index_expected_recall_live", self.expected_recall_live,
+            **labels,
+        )
+        return telemetrylib.export_json()
 
     def __repr__(self) -> str:
         mesh = f", mesh={dict(self._mesh.shape)}" if self._mesh else ""
@@ -732,7 +779,7 @@ class Index:
         fn = self._cache.get(
             key, lambda: self._build_block_fn(backend, pk, batch_axis)
         )
-        backends.DISPATCH_COUNTS[backend] += 1
+        backends.DISPATCH_COUNTS.inc(backend)
         return fn(q, *pk.operands())
 
     def _build_host_searcher(self) -> hosttierlib.HostTierSearcher:
@@ -792,7 +839,7 @@ class Index:
         fn = self._cache.get(
             key, lambda: self._build_stream_fn(backend, pk, batch_axis)
         )
-        backends.DISPATCH_COUNTS[backend] += 1
+        backends.DISPATCH_COUNTS.inc(backend)
         vals, idxs = fn(blocks, *pk.operands())
         k = vals.shape[-1]
         return SearchResult(
@@ -1098,6 +1145,7 @@ class Index:
         from repro.checkpoint.checkpoint import save_snapshot
 
         faultslib.fire("index.save")
+        telemetrylib.registry().inc("repro_snapshot_saves_total")
         pk = self.pack()
         arrays, pk_meta = packedlib.snapshot_state(pk)
         arrays["db"] = self._db
@@ -1149,6 +1197,7 @@ class Index:
         )
         index._packed = packedlib.restore_state(arrays, meta["packed"], spec)
         index._place_packed()  # host-resident specs re-pin to host RAM
+        telemetrylib.registry().inc("repro_snapshot_restores_total")
         return index
 
     # -- sharding ------------------------------------------------------------

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 from repro.core.binning import BinPlan, plan_bins, round_up
 from repro.search import cluster as clusterlib
 from repro.search import quant
+from repro.search import telemetry
 from repro.search.backends import MASK_VALUE
 from repro.search.metrics import Metric
 from repro.search.spec import SearchSpec
@@ -72,12 +73,20 @@ __all__ = [
 ]
 
 # event name -> count of packing work performed (test observability hook;
-# see module docstring for the event taxonomy).
-PACK_EVENTS = collections.Counter()
+# see module docstring for the event taxonomy).  AtomicCounter + registry
+# adoption: see ``repro.search.telemetry``.
+PACK_EVENTS = telemetry.AtomicCounter()
+telemetry.registry().register_counter_dict(
+    "repro_pack_events_total", PACK_EVENTS, "event",
+    "packing/cluster/restore work performed (repro.search.packed)",
+)
 
 
 def reset_pack_events() -> None:
-    """Zero ``PACK_EVENTS`` (use in tests instead of counter arithmetic)."""
+    """Zero ``PACK_EVENTS`` (use in tests instead of counter arithmetic).
+
+    Deprecated thin alias: ``repro.search.telemetry.reset_all()`` zeroes
+    this and every other global series in one call."""
     PACK_EVENTS.clear()
 
 
@@ -293,8 +302,8 @@ class PackedState:
             # overflow); O(r·C) — no repack, no table reshape, so the
             # compiled pruned program stays valid.
             clusterlib.assign_rows(self.cluster, exact_slice, start)
-            PACK_EVENTS["cluster_assigned"] += 1
-        PACK_EVENTS["rows_updated"] += 1
+            PACK_EVENTS.inc("cluster_assigned")
+        PACK_EVENTS.inc("rows_updated")
 
     def delete_rows(self, ids: jnp.ndarray):
         """Tombstone rows: patch only the bias entries, O(|ids|).
@@ -309,7 +318,7 @@ class PackedState:
             self.bias = self.bias.at[ids].set(MASK_VALUE)
         if self.rescore_bias is not None:
             self.rescore_bias = self.rescore_bias.at[ids].set(MASK_VALUE)
-        PACK_EVENTS["bias_patched"] += 1
+        PACK_EVENTS.inc("bias_patched")
 
     # -- layout changes (copy, but never metric re-preparation) ---------------
 
@@ -338,7 +347,7 @@ class PackedState:
                 rescore_bias = jnp.pad(
                     rescore_bias, (0, grow), constant_values=MASK_VALUE
                 )
-        PACK_EVENTS["relayout"] += 1
+        PACK_EVENTS.inc("relayout")
         out = _layout(
             backend, rows, bias, new_n, self.d, spec,
             scale=scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
@@ -476,7 +485,7 @@ def pack_state(
     if spec.storage == "f32":
         db, metric_bias = metric.prepare_database(db)
         bias = fuse_bias(metric_bias, live, num_rows=n)
-        PACK_EVENTS["full_pack"] += 1
+        PACK_EVENTS.inc("full_pack")
         state = _layout(backend, db, bias, n, d, spec)
         _attach_cluster(state, db, bias, live, metric, cluster_plan, spec.k)
         return state
@@ -490,7 +499,7 @@ def pack_state(
     if spec.rescore_enabled:
         rescore_db = qr.exact_rows.astype(jnp.float32)
         rescore_bias = fuse_bias(qr.exact_bias, live, num_rows=n)
-    PACK_EVENTS["full_pack"] += 1
+    PACK_EVENTS.inc("full_pack")
     state = _layout(
         backend, qr.rows, bias, n, d, spec,
         scale=qr.scale, rescore_db=rescore_db, rescore_bias=rescore_bias,
@@ -539,10 +548,10 @@ def _attach_cluster(
     miss = clusterlib.sampled_miss_rate(cs, exact_rows, fused_bias, live, k)
     if miss > clusterlib.miss_check_threshold(cluster_plan.miss_budget):
         state.cluster_rejected_miss = miss
-        PACK_EVENTS["cluster_rejected"] += 1
+        PACK_EVENTS.inc("cluster_rejected")
         return
     state.cluster = cs
-    PACK_EVENTS["cluster_built"] += 1
+    PACK_EVENTS.inc("cluster_built")
 
 
 def rebuild_cluster(
@@ -573,7 +582,7 @@ def rebuild_cluster(
     state.cluster = clusterlib.build_tables(
         rows, live, cluster_plan, metric.prepare_database
     )
-    PACK_EVENTS["recluster"] += 1
+    PACK_EVENTS.inc("recluster")
 
 
 # -- crash-safe snapshots (Index.save / Index.restore) ------------------------
@@ -659,5 +668,5 @@ def restore_state(arrays: dict, meta: dict, spec: SearchSpec) -> PackedState:
     )
     if meta.get("cluster") is not None:
         state.cluster = clusterlib.restore_tables(arrays, meta["cluster"])
-    PACK_EVENTS["restore"] += 1
+    PACK_EVENTS.inc("restore")
     return state

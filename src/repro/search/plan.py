@@ -61,6 +61,7 @@ from repro.core.roofline import (
 )
 from repro.search import cluster as clusterlib
 from repro.search import quant
+from repro.search import telemetry
 from repro.search.spec import SearchSpec
 
 __all__ = [
@@ -929,6 +930,12 @@ def time_search(index, queries, *, repeats: int = 3, passes: int = 2
             out = index.search(queries)
         out.values.block_until_ready()
         best = min(best, (time.perf_counter() - t0) / repeats)
+    # The plan="measure" signal is telemetry too: explain(measure=True) /
+    # tune_plan refinements land next to the serve-path drift series.
+    telemetry.registry().observe(
+        "repro_plan_measured_wall_seconds", best,
+        rows=queries.shape[0],
+    )
     return best
 
 

@@ -78,6 +78,17 @@ oversize batches — plus the failure taxonomy: "deadline_expired",
 ``DISPATCH_COUNTS`` / ``PACK_EVENTS``); ``SearchServer.stats()`` reports
 the per-server view.  ``docs/operations.md`` is the runbook mapping each
 counter to its failure mode and operator action.
+
+Telemetry (``repro.search.telemetry``): the global metrics registry
+carries these counters plus queue-depth / occupancy gauges and latency
+histograms; every submitted request gets a ticket-scoped trace of stage
+spans (``queue -> coalesce -> stage -> dispatch -> scatter``) retained
+in a bounded ring buffer (``SearchServer.traces(n)``, Chrome-trace
+export via ``telemetry.chrome_trace``); and a roofline-drift monitor
+compares each dispatch's measured wall against the plan's Eq. 10/20
+prediction, degrading ``health()`` when the calibrated ratio leaves
+``ServeConfig.drift_band``.  Span timings follow the server's clock, so
+virtual-clock servers produce deterministic traces.
 """
 from __future__ import annotations
 
@@ -94,8 +105,14 @@ import numpy as np
 
 from repro.search import cluster as clusterlib
 from repro.search import faults as faultslib
+from repro.search import telemetry as telemetrylib
 from repro.search.index import Index, SearchResult
 from repro.search.plan import plan_buckets
+
+try:  # dispatch-path profiler hook; absent on stripped-down jax builds
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:  # pragma: no cover - depends on the jax build
+    _TraceAnnotation = None
 
 __all__ = [
     "DeadlineExceeded",
@@ -113,11 +130,18 @@ __all__ = [
 # reset-act-assert style as backends.DISPATCH_COUNTS / packed.PACK_EVENTS):
 # "batches", "coalesced_requests", "padded_rows", "oversize_batches", plus
 # the failure taxonomy listed in the module docstring.
-SERVE_EVENTS = collections.Counter()
+SERVE_EVENTS = telemetrylib.AtomicCounter()
+telemetrylib.registry().register_counter_dict(
+    "repro_serve_events_total", SERVE_EVENTS, "event",
+    "SearchServer lifecycle and failure events (docs/operations.md)",
+)
 
 
 def reset_serve_events() -> None:
-    """Zero ``SERVE_EVENTS`` (tests: reset, act, assert — no arithmetic)."""
+    """Zero ``SERVE_EVENTS`` (tests: reset, act, assert — no arithmetic).
+
+    Deprecated thin alias: ``repro.search.telemetry.reset_all()`` zeroes
+    this and every other global series in one call."""
     SERVE_EVENTS.clear()
 
 
@@ -222,6 +246,16 @@ class ServeConfig:
         monitor).
       miss_sample_rows: query rows scored per sample (clipped to the
         batch's live rows).
+      trace_buffer: how many completed request traces the ring buffer
+        keeps (``SearchServer.traces(n)``); 0 disables per-request
+        tracing entirely (no trace objects are allocated).
+      drift_band: (lo, hi) band for the roofline-drift monitor's
+        normalized measured/predicted ratio; outside it ``health()``
+        degrades.  The ratio is baseline-calibrated, so ~1.0 is "on
+        model" on any platform.
+      drift_warmup: dispatches per bucket used to fix the drift
+        baseline (the median of their measured/predicted ratios).
+      drift_alpha: EWMA weight of the newest dispatch's ratio.
     """
 
     max_batch: Optional[int] = None
@@ -235,6 +269,10 @@ class ServeConfig:
     overload_grace_s: float = 0.25
     miss_sample_every: int = 32
     miss_sample_rows: int = 8
+    trace_buffer: int = 256
+    drift_band: Tuple[float, float] = (0.25, 4.0)
+    drift_warmup: int = 3
+    drift_alpha: float = 0.25
 
     def __post_init__(self):
         if self.max_batch is not None and self.max_batch <= 0:
@@ -256,6 +294,22 @@ class ServeConfig:
             raise ValueError(
                 "miss_sample_every must be >= 0 and miss_sample_rows > 0"
             )
+        if self.trace_buffer < 0:
+            raise ValueError(
+                f"trace_buffer must be >= 0, got {self.trace_buffer}"
+            )
+        lo, hi = self.drift_band
+        if not 0.0 < lo < hi:
+            raise ValueError(f"drift_band must be 0 < lo < hi, got "
+                             f"{self.drift_band}")
+        if self.drift_warmup < 1:
+            raise ValueError(
+                f"drift_warmup must be >= 1, got {self.drift_warmup}"
+            )
+        if not 0.0 < self.drift_alpha <= 1.0:
+            raise ValueError(
+                f"drift_alpha must be in (0, 1], got {self.drift_alpha}"
+            )
         if self.buckets is not None:
             object.__setattr__(
                 self, "buckets", tuple(int(b) for b in self.buckets)
@@ -273,7 +327,7 @@ class SearchTicket:
     """
 
     __slots__ = (
-        "rows", "k", "deadline", "submitted_at", "completed_at",
+        "rows", "k", "deadline", "submitted_at", "completed_at", "trace",
         "_queries", "_offset", "_server", "_done", "_event", "_result",
         "_error",
     )
@@ -288,6 +342,8 @@ class SearchTicket:
         self.deadline = deadline
         self.submitted_at = server._now()
         self.completed_at: Optional[float] = None
+        # Ticket-scoped stage trace (None when ServeConfig.trace_buffer=0).
+        self.trace: Optional[telemetrylib.RequestTrace] = None
         self._offset = 0
         self._done = False
         # Allocated lazily (under the server lock) only when a thread
@@ -340,6 +396,10 @@ class SearchTicket:
         self.completed_at = now
         self._queries = None  # staging copy done; free the host rows
         self._done = True
+        if self.trace is not None:
+            self.trace.status = "done"
+            self.trace.completed_at = now
+            self._server._store_trace(self.trace)
         if self._event is not None:
             self._event.set()
 
@@ -349,6 +409,13 @@ class SearchTicket:
         self.completed_at = now
         self._queries = None
         self._done = True
+        tr = self.trace
+        if tr is not None:
+            tr.status = "failed"
+            tr.completed_at = now
+            last = max((sp.end for sp in tr.spans), default=self.submitted_at)
+            tr.span("failed", last, now)
+            self._server._store_trace(tr)
         if self._event is not None:
             self._event.set()
 
@@ -407,13 +474,16 @@ class SearchServer:
         self._queue: collections.deque = collections.deque()
         self._pending_rows = 0
         self._closed = False
-        # (result, batch, bucket, live_rows): dispatched, not yet scattered.
+        # (result, batch, bucket, t_disp0): dispatched, not yet scattered
+        # (t_disp0 = perf_counter at dispatch; closes the drift window).
         self._inflight: Optional[tuple] = None
         # Serializes index.search dispatches against out-of-band Index
         # mutations (see ``mutation()``) — Index is not thread-safe.
         self._dispatch_gate = threading.Lock()
         self._staging: Dict[int, list] = {}
-        self._stats = collections.Counter()
+        # AtomicCounter: the worker thread increments while operator
+        # threads read stats()/health()/exports — see repro.search.telemetry.
+        self._stats = telemetrylib.AtomicCounter()
         self._latency_sum = 0.0
         self._worker: Optional[threading.Thread] = None
         # Overload tracking: when the admission queue first went (and
@@ -423,6 +493,22 @@ class SearchServer:
         # retry-after estimate's drain rate.
         self._service_ema = 0.0
         self._miss_sample_countdown = self.config.miss_sample_every
+        self._started_at = self._now()
+        # Completed-trace ring buffer (bounded; None = tracing disabled).
+        self._traces: Optional[collections.deque] = (
+            collections.deque(maxlen=self.config.trace_buffer)
+            if self.config.trace_buffer > 0 else None
+        )
+        self._trace_seq = 0
+        # Roofline-drift monitor: measured dispatch wall vs the plan's
+        # Eq. 10/20 prediction per bucket (health()["drift"]).
+        self._drift = telemetrylib.DriftMonitor(
+            band=self.config.drift_band,
+            warmup=self.config.drift_warmup,
+            alpha=self.config.drift_alpha,
+        )
+        self._predicted_cache: Dict[int, Optional[float]] = {}
+        self._last_fault: Optional[dict] = None
 
         if warmup:
             self.precompile()
@@ -545,10 +631,20 @@ class SearchServer:
                 None if deadline_s is None else self._now() + deadline_s
             )
             ticket = SearchTicket(self, q, k, deadline)
+            if self._traces is not None:
+                self._trace_seq += 1
+                tr = telemetrylib.RequestTrace(
+                    self._trace_seq, rows, k, ticket.submitted_at
+                )
+                tr.span("submit", ticket.submitted_at, ticket.submitted_at)
+                ticket.trace = tr
             self._queue.append(ticket)
             self._pending_rows += rows
             self._stats["peak_pending_rows"] = max(
                 self._stats["peak_pending_rows"], self._pending_rows
+            )
+            telemetrylib.registry().set_gauge(
+                "repro_serve_pending_rows", self._pending_rows
             )
             self._work.notify()
         return ticket
@@ -574,15 +670,15 @@ class SearchServer:
         per_batch = max(
             self._service_ema, self.config.max_delay_s, 1e-3
         )
-        self._stats["load_shed"] += 1
-        SERVE_EVENTS["load_shed"] += 1
+        self._stats.inc("load_shed")
+        SERVE_EVENTS.inc("load_shed")
         raise Overloaded(self._pending_rows, batches * per_batch)
 
     def _fail_expired_locked(self, t: SearchTicket, now: float) -> None:
         """Fail one deadline-expired ticket (caller must hold the lock)."""
         t._fail(DeadlineExceeded(t.rows, t.deadline, now), now)
-        self._stats["deadline_expired"] += 1
-        SERVE_EVENTS["deadline_expired"] += 1
+        self._stats.inc("deadline_expired")
+        SERVE_EVENTS.inc("deadline_expired")
 
     def _take_batch_locked(self, now: float) -> Optional[List[SearchTicket]]:
         """Pop the next FIFO micro-batch: whole requests only, up to
@@ -608,6 +704,9 @@ class SearchServer:
         self._pending_rows -= total
         if self._pending_rows < self.config.max_pending_rows:
             self._full_since = None
+        telemetrylib.registry().set_gauge(
+            "repro_serve_pending_rows", self._pending_rows
+        )
         return batch or None
 
     def _expire_batch(
@@ -629,11 +728,17 @@ class SearchServer:
                     error: BaseException) -> None:
         """Fail every ticket of a batch with one typed error."""
         now = self._now()
+        self._last_fault = {
+            "error": type(error).__name__,
+            "point": getattr(error, "point", None),
+            "detail": str(error),
+            "at": now,
+        }
         with self._lock:
             for t in batch:
                 t._fail(error, now)
-        self._stats["failed_batches"] += 1
-        SERVE_EVENTS["failed_batches"] += 1
+        self._stats.inc("failed_batches")
+        SERVE_EVENTS.inc("failed_batches")
 
     def _requeue(self, batch: List[SearchTicket]) -> None:
         """Put a popped-but-undispatched batch back at the queue front
@@ -642,8 +747,8 @@ class SearchServer:
             for t in reversed(batch):
                 self._queue.appendleft(t)
                 self._pending_rows += t.rows
-        self._stats["requeued_tickets"] += len(batch)
-        SERVE_EVENTS["requeued_tickets"] += len(batch)
+        self._stats.inc("requeued_tickets", len(batch))
+        SERVE_EVENTS.inc("requeued_tickets", len(batch))
 
     def _bucket_for(self, rows: int) -> int:
         """Smallest pre-compiled shape holding ``rows``; oversize requests
@@ -653,8 +758,8 @@ class SearchServer:
         bucket = self.max_batch
         while bucket < rows:
             bucket *= 2
-        self._stats["oversize_batches"] += 1
-        SERVE_EVENTS["oversize_batches"] += 1
+        self._stats.inc("oversize_batches")
+        SERVE_EVENTS.inc("oversize_batches")
         return bucket
 
     def _stage(self, bucket: int, batch: List[SearchTicket]) -> np.ndarray:
@@ -680,7 +785,7 @@ class SearchServer:
                 ]
             buf = pair[pair[2]]
             pair[2] ^= 1
-            self._stats["staging_swaps"] += 1
+            self._stats.inc("staging_swaps")
         offset = 0
         for t in batch:
             buf[offset : offset + t.rows] = t._queries
@@ -715,6 +820,7 @@ class SearchServer:
         if batch is None:
             self._finalize(self._pop_inflight())
             return False
+        t_pop = self._now()
         attempt = 0
         while True:
             try:
@@ -722,17 +828,23 @@ class SearchServer:
                 # on a huge oversize request must fail its tickets, not kill
                 # the worker thread with the popped batch stranded.
                 self._fire("serve.staging_alloc")
+                t_coalesced = self._now()
                 rows = sum(t.rows for t in batch)
                 bucket = self._bucket_for(rows)
                 buf = self._stage(bucket, batch)
                 self._fire("serve.transfer")
                 q = jnp.asarray(buf)
+                t_staged = self._now()
+                # perf_counter BEFORE the injection point: an injected
+                # delay lands inside the drift monitor's measured window.
+                t_disp0 = time.perf_counter()
                 # Fired OUTSIDE the gate: a death injected here while the
                 # main thread holds ``mutation()`` must not deadlock the
                 # restarted worker on a gate its dead self never took.
                 self._fire("serve.dispatch")
                 with self._dispatch_gate:
-                    result = self.index.search(q)  # ONE dispatch
+                    with self._profile_span(f"serve.dispatch[{bucket}]"):
+                        result = self.index.search(q)  # ONE dispatch
                 break
             except faultslib.WorkerDeath:
                 # This thread is about to die; nothing was dispatched for
@@ -740,14 +852,20 @@ class SearchServer:
                 self._requeue(batch)
                 raise
             except cfg.retryable as e:
-                self._stats["transient_faults"] += 1
-                SERVE_EVENTS["transient_faults"] += 1
+                self._stats.inc("transient_faults")
+                SERVE_EVENTS.inc("transient_faults")
+                self._last_fault = {
+                    "error": type(e).__name__,
+                    "point": getattr(e, "point", None),
+                    "detail": str(e),
+                    "at": self._now(),
+                }
                 if attempt >= cfg.max_dispatch_retries:
                     self._fail_batch(batch, e)
                     return True
                 attempt += 1
-                self._stats["dispatch_retries"] += 1
-                SERVE_EVENTS["dispatch_retries"] += 1
+                self._stats.inc("dispatch_retries")
+                SERVE_EVENTS.inc("dispatch_retries")
                 self._backoff(cfg.retry_backoff_s * (2 ** (attempt - 1)))
                 # Deadlines keep ticking through backoff: drop expired
                 # tickets rather than dispatch dead work on the retry.
@@ -757,15 +875,36 @@ class SearchServer:
             except Exception as e:  # scatter the failure, keep serving
                 self._fail_batch(batch, e)
                 return True
-        self._stats["batches"] += 1
-        self._stats["coalesced_requests"] += len(batch)
-        self._stats["dispatched_rows"] += rows
-        self._stats["padded_rows"] += bucket - rows
-        SERVE_EVENTS["batches"] += 1
-        SERVE_EVENTS["coalesced_requests"] += len(batch)
-        SERVE_EVENTS["padded_rows"] += bucket - rows
+        t_dispatched = self._now()
+        for t in batch:
+            tr = t.trace
+            if tr is not None:
+                # Contiguous stage spans on the server clock: together
+                # with "scatter" (closed at completion) they tile the
+                # request's [submit, complete] window end to end.
+                tr.bucket = bucket
+                tr.retries = attempt
+                tr.span("queue", t.submitted_at, t_pop)
+                tr.span("coalesce", t_pop, t_coalesced)
+                tr.span("stage", t_coalesced, t_staged)
+                tr.span("dispatch", t_staged, t_dispatched)
+                tr.dispatched_at = t_dispatched
+        self._stats.inc("batches")
+        self._stats.inc("coalesced_requests", len(batch))
+        self._stats.inc("dispatched_rows", rows)
+        self._stats.inc("padded_rows", bucket - rows)
+        SERVE_EVENTS.inc("batches")
+        SERVE_EVENTS.inc("coalesced_requests", len(batch))
+        SERVE_EVENTS.inc("padded_rows", bucket - rows)
+        reg = telemetrylib.registry()
+        reg.observe("repro_serve_batch_rows", rows, bucket=bucket)
+        live = self._stats["dispatched_rows"] + self._stats["padded_rows"]
+        if live:
+            reg.set_gauge(
+                "repro_serve_occupancy", self._stats["dispatched_rows"] / live
+            )
         prev = self._pop_inflight()
-        self._inflight = (result, batch)
+        self._inflight = (result, batch, bucket, t_disp0)
         self._finalize(prev)
         self._maybe_sample_miss(buf, rows)
         # EWMA of service time feeds the Overloaded retry-after estimate.
@@ -790,10 +929,13 @@ class SearchServer:
         """
         if entry is None:
             return
-        result, batch = entry
+        result, batch, bucket, t_disp0 = entry
         try:
             self._fire("serve.scatter")
             result.values.block_until_ready()
+            # Dispatch-to-ready wall: the measured side of the roofline
+            # drift ratio for this bucket.
+            measured_s = time.perf_counter() - t_disp0
             values = np.asarray(result.values)
             indices = np.asarray(result.indices)
         except faultslib.WorkerDeath as e:
@@ -810,8 +952,12 @@ class SearchServer:
             self._fail_batch(batch, e)
             return
         now = self._now()
+        latencies = []
         with self._lock:  # one acquisition per batch, not per ticket
             for t in batch:
+                tr = t.trace
+                if tr is not None and tr.dispatched_at is not None:
+                    tr.span("scatter", tr.dispatched_at, now)
                 t._complete(
                     SearchResult(
                         values[t._offset : t._offset + t.rows, : t.k],
@@ -821,7 +967,16 @@ class SearchServer:
                 )
                 if t.latency_s is not None:
                     self._latency_sum += t.latency_s
-            self._stats["completed_requests"] += len(batch)
+                    latencies.append(t.latency_s)
+            self._stats.inc("completed_requests", len(batch))
+        reg = telemetrylib.registry()
+        for lat in latencies:
+            reg.observe("repro_serve_request_latency_seconds", lat)
+        reg.observe(
+            "repro_serve_dispatch_wall_seconds", measured_s,
+            bucket=bucket,
+        )
+        self._record_drift(bucket, measured_s)
 
     def _maybe_sample_miss(self, buf: np.ndarray, live_rows: int) -> None:
         """Served-query cluster-miss monitor: every Nth batch, score a few
@@ -853,8 +1008,13 @@ class SearchServer:
             return
         cs.served_miss_checked += checked
         cs.served_miss_missed += missed
-        self._stats["miss_sampled_rows"] += m
-        SERVE_EVENTS["miss_sampled_rows"] += m
+        rate = cs.served_miss_rate
+        if rate is not None:
+            telemetrylib.registry().set_gauge(
+                "repro_serve_cluster_miss_rate", rate
+            )
+        self._stats.inc("miss_sampled_rows", m)
+        SERVE_EVENTS.inc("miss_sampled_rows", m)
 
     # -- deterministic (virtual-clock) driving -------------------------------
 
@@ -885,10 +1045,16 @@ class SearchServer:
     # -- wall-clock worker ---------------------------------------------------
 
     def _record_restart(self) -> None:
-        self._stats["worker_deaths"] += 1
-        self._stats["worker_restarts"] += 1
-        SERVE_EVENTS["worker_deaths"] += 1
-        SERVE_EVENTS["worker_restarts"] += 1
+        self._stats.inc("worker_deaths")
+        self._stats.inc("worker_restarts")
+        SERVE_EVENTS.inc("worker_deaths")
+        SERVE_EVENTS.inc("worker_restarts")
+        self._last_fault = {
+            "error": "WorkerDeath",
+            "point": "serve.worker",
+            "detail": "worker died and was restarted by the watchdog",
+            "at": self._now(),
+        }
 
     def _worker_main(self) -> None:
         """Watchdog wrapper: restart a dead worker loop in place.
@@ -988,6 +1154,64 @@ class SearchServer:
 
     # -- observability -------------------------------------------------------
 
+    def _profile_span(self, name: str):
+        """``jax.profiler.TraceAnnotation`` around the coalesced dispatch
+        (shows up in device profiles); no-op when the profiler is absent."""
+        if _TraceAnnotation is not None:
+            return _TraceAnnotation(name)
+        return contextlib.nullcontext()
+
+    def _store_trace(self, trace: telemetrylib.RequestTrace) -> None:
+        """Push a completed trace into the bounded ring buffer (deque
+        append is atomic; callers already hold the server lock)."""
+        if self._traces is not None:
+            self._traces.append(trace)
+
+    def traces(self, n: Optional[int] = None) -> List[telemetrylib.RequestTrace]:
+        """The most recent completed request traces, oldest first (at most
+        ``ServeConfig.trace_buffer`` are retained; ``n`` limits further).
+        Feed them to ``repro.search.telemetry.chrome_trace`` for a
+        flame-graph JSON, or ``trace_coverage`` for the span-coverage
+        fraction."""
+        if self._traces is None:
+            return []
+        with self._lock:
+            out = list(self._traces)
+        return out if n is None else out[-int(n):]
+
+    def drift(self) -> dict:
+        """The roofline-drift monitor's report (see ``health()["drift"]``)."""
+        return self._drift.report()
+
+    def _predicted_s(self, bucket: int) -> Optional[float]:
+        """Plan-predicted wall seconds (Eq. 10/20) for one ``bucket``-row
+        dispatch, memoized per bucket; None when the planner cannot price
+        this shape (drift recording is then skipped)."""
+        if bucket in self._predicted_cache:
+            return self._predicted_cache[bucket]
+        try:
+            plan = self.index.kernel_plan
+            if plan.m == bucket:
+                pred = plan.predicted_s
+            else:
+                pred = self.index._replan(
+                    n=plan.n, m=bucket, backend=plan.backend, pin_from=plan
+                ).predicted_s
+            pred = float(pred) if pred and pred > 0 else None
+        except Exception:
+            pred = None
+        self._predicted_cache[bucket] = pred
+        return pred
+
+    def _record_drift(self, bucket: int, measured_s: float) -> None:
+        predicted = self._predicted_s(bucket)
+        if predicted is None or measured_s <= 0:
+            return
+        self._drift.record(str(bucket), measured_s, predicted)
+        telemetrylib.registry().set_gauge(
+            "repro_serve_drift", self._drift.report()["value"]
+        )
+
     def precompile(self) -> int:
         """Compile every bucket shape ahead of traffic (one dummy dispatch
         per bucket); returns the number of buckets warmed."""
@@ -1024,6 +1248,8 @@ class SearchServer:
             "load_shed": s.get("load_shed", 0),
             "miss_sampled_rows": s.get("miss_sampled_rows", 0),
             "pending_rows": self._pending_rows,
+            "uptime_s": self._now() - self._started_at,
+            "traced_requests": len(self._traces) if self._traces else 0,
             "cache": self.index.cache_info(),
         }
         live = out["dispatched_rows"] + out["padded_rows"]
@@ -1039,9 +1265,14 @@ class SearchServer:
         on an open server, or the served-query cluster-miss estimate past
         its warn threshold), or ``"overloaded"`` (admission queue full past
         ``overload_grace_s`` — submits are being shed).  The rest is the
-        evidence: worker liveness, queue depth, the failure counters, and
-        (clustered indexes) the ``cluster_miss`` block mirroring
-        ``Index.explain()["cluster"]["served_miss"]``.  See
+        evidence: worker liveness, ``uptime_s``, ``last_fault`` (the most
+        recent failure's type/point/time), queue depth, the failure
+        counters, the ``drift`` block (roofline-drift monitor: normalized
+        measured/predicted dispatch wall per bucket — out of
+        ``ServeConfig.drift_band`` degrades), ``expected_recall_live``
+        (analytic bin-collision term x the *served* cluster-miss
+        estimate), and (clustered indexes) the ``cluster_miss`` block
+        mirroring ``Index.explain()["cluster"]["served_miss"]``.  See
         ``docs/operations.md`` for the counter-by-counter runbook.
         """
         with self._lock:
@@ -1061,6 +1292,8 @@ class SearchServer:
         report = {
             "worker_alive": worker_alive,
             "closed": closed,
+            "uptime_s": now - self._started_at,
+            "last_fault": self._last_fault,
             "pending_rows": pending,
             "queued_requests": queued,
             "deadline_expired": s.get("deadline_expired", 0),
@@ -1076,16 +1309,23 @@ class SearchServer:
         pk = getattr(self.index, "_packed", None)
         cs = pk.cluster if pk is not None else None
         if cs is not None:
-            rate = cs.served_miss_rate
-            threshold = clusterlib.miss_check_threshold(cs.plan.miss_budget)
-            miss_warning = rate is not None and rate > threshold
-            report["cluster_miss"] = {
-                "sampled_pairs": cs.served_miss_checked,
-                "miss_rate": rate,
-                "warn_threshold": threshold,
-                "warning": miss_warning,
-            }
-        degraded = (not worker_alive and not closed) or miss_warning
+            report["cluster_miss"] = cs.served_miss_report()
+            miss_warning = report["cluster_miss"]["warning"]
+        drift = self._drift.report()
+        report["drift"] = drift
+        drift_warning = drift["calibrated"] and not drift["in_band"]
+        try:
+            recall_live = float(self.index.expected_recall_live)
+        except Exception:
+            recall_live = None
+        report["expected_recall_live"] = recall_live
+        reg = telemetrylib.registry()
+        reg.set_gauge("repro_serve_uptime_seconds", report["uptime_s"])
+        if recall_live is not None:
+            reg.set_gauge("repro_serve_expected_recall_live", recall_live)
+        degraded = (
+            (not worker_alive and not closed) or miss_warning or drift_warning
+        )
         report["status"] = (
             "overloaded" if overloaded
             else ("degraded" if degraded else "ok")

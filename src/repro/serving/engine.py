@@ -103,6 +103,27 @@ class ServingEngine:
         self.retrieval_server = server
         return self
 
+    def stats(self) -> dict:
+        """Engine-side serving observability: slot occupancy plus the
+        retrieval path's telemetry (server stats and the live recall
+        gauge when retrieval is attached) — one dict for dashboards,
+        same shape conventions as ``KNNDatastore.stats()``."""
+        live = sum(1 for r in self._slots if r is not None)
+        info: dict = {
+            "batch": self.batch,
+            "live_slots": live,
+            "slot_occupancy": live / self.batch if self.batch else 0.0,
+            "use_retrieval": self.retrieval_index is not None,
+        }
+        if self.retrieval_index is not None:
+            info["retrieval_cache"] = self.retrieval_index.cache_info()
+            info["expected_recall_live"] = (
+                self.retrieval_index.expected_recall_live
+            )
+        if self.retrieval_server is not None:
+            info["retrieval_server"] = self.retrieval_server.stats()
+        return info
+
     def retrieve(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """-> (scores (M, k), neighbour tokens (M, k)) from the attached index."""
         if self.retrieval_index is None:

@@ -1,0 +1,454 @@
+"""Unified telemetry layer: registry, tracing, drift monitor, thread safety.
+
+Covers the ISSUE-10 contracts deterministically:
+
+  * registry semantics — labeled counters/gauges, windowed-histogram
+    quantiles, Prometheus/JSON export round-trips, adopted legacy
+    counter dicts, one ``reset_all()``;
+  * per-request tracing — exact span timings under the virtual clock
+    (no wall-clock assumptions), ring-buffer bounds, Chrome-trace
+    export, 100% span coverage of measured latency;
+  * roofline-drift monitor — calibration after warmup, degraded
+    transition under an injected ``"delay"``-kind slow dispatch
+    (``DelayFault``: slow, *successful* — nothing raised);
+  * thread safety — the ``+=`` lost-update race is gone:
+    ``AtomicCounter`` hammered from many threads stays exact, and a
+    wall-clock server keeps exact counters while readers poll
+    stats/exports concurrently;
+  * zero overhead — tracing off (``trace_buffer=0``) changes no
+    dispatch/trace counters and no results.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.search import (
+    AtomicCounter,
+    DriftMonitor,
+    Index,
+    MetricsRegistry,
+    SearchServer,
+    ServeConfig,
+    VirtualClock,
+    backends,
+    chrome_trace,
+    telemetry,
+    trace_coverage,
+)
+from repro.search.backends import DISPATCH_COUNTS, TRACE_COUNTS
+from repro.search.faults import DelayFault, FatalFault, FaultInjector
+from repro.search.serve import SERVE_EVENTS, reset_serve_events
+
+K = 10
+D = 16
+
+
+@pytest.fixture(scope="module")
+def index():
+    db = jax.random.normal(jax.random.PRNGKey(1), (2048, D))
+    return Index.build(db, metric="mips", k=K, backend="xla")
+
+
+@pytest.fixture(autouse=True)
+def _reset_telemetry():
+    telemetry.reset_all()
+    yield
+    telemetry.reset_all()
+
+
+def _vserver(index, **cfg):
+    cfg.setdefault("max_batch", 32)
+    return SearchServer(index, ServeConfig(**cfg), clock=VirtualClock())
+
+
+def _queries(seed, m):
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (m, D)))
+
+
+# --- metrics registry --------------------------------------------------------
+
+
+def test_registry_counters_gauges_labels():
+    reg = MetricsRegistry()
+    reg.inc("req_total", backend="xla")
+    reg.inc("req_total", 2, backend="pallas")
+    reg.inc("req_total", backend="xla")
+    assert reg.counter_value("req_total", backend="xla") == 2
+    assert reg.counter_value("req_total", backend="pallas") == 2
+    assert reg.counter_value("req_total", backend="host") == 0
+    reg.set_gauge("depth", 7, tier="hot")
+    reg.set_gauge("depth", 3, tier="hot")  # gauges overwrite
+    assert reg.gauge_value("depth", tier="hot") == 3
+    assert reg.gauge_value("depth", tier="cold") is None
+
+
+def test_registry_histogram_quantiles_match_numpy():
+    reg = MetricsRegistry()
+    values = list(range(1, 101))
+    for v in values:
+        reg.observe("lat", v)
+    snap = reg.histogram_snapshot("lat")
+    assert snap["count"] == 100
+    assert snap["sum"] == sum(values)
+    for q in (50, 90, 99):
+        assert snap[f"p{q}"] == pytest.approx(np.percentile(values, q))
+
+
+def test_registry_histogram_window_is_bounded():
+    reg = MetricsRegistry(histogram_window=8)
+    for v in range(100):
+        reg.observe("lat", v)
+    snap = reg.histogram_snapshot("lat")
+    assert snap["count"] == 100          # lifetime count survives
+    assert snap["window"] == 8           # quantiles over the last 8 only
+    assert snap["min"] == 92
+
+
+def test_export_round_trip_json_and_prometheus():
+    reg = MetricsRegistry()
+    reg.inc("repro_req_total", 3, backend="xla", storage="int8")
+    reg.set_gauge("repro_depth", 5)
+    reg.observe("repro_lat_seconds", 0.25)
+    js = reg.export_json()
+    assert js["counters"]["repro_req_total"][0]["value"] == 3
+    assert js["counters"]["repro_req_total"][0]["labels"] == {
+        "backend": "xla", "storage": "int8"
+    }
+    assert js["gauges"]["repro_depth"][0]["value"] == 5
+    assert js["histograms"]["repro_lat_seconds"][0]["count"] == 1
+    text = reg.export_prometheus()
+    assert 'repro_req_total{backend="xla",storage="int8"} 3' in text
+    assert "repro_depth 5" in text
+    assert 'repro_lat_seconds{quantile="0.5"} 0.25' in text
+    assert "repro_lat_seconds_count 1" in text
+    assert "repro_lat_seconds_sum 0.25" in text
+
+
+def test_registry_adopts_legacy_counter_dicts():
+    reg = MetricsRegistry()
+    legacy = AtomicCounter()
+    reg.register_counter_dict("legacy_total", legacy, "event")
+    legacy.inc("hit", 4)
+    # exports read the live dict — no copy was taken at registration
+    assert 'legacy_total{event="hit"} 4' in reg.export_prometheus()
+    reg.reset()
+    assert dict(legacy) == {}  # reset clears adopted dicts too
+
+
+def test_reset_all_clears_every_legacy_dict(index):
+    server = _vserver(index)
+    server.submit(_queries(0, 4))
+    server.run_until_idle()
+    assert DISPATCH_COUNTS and SERVE_EVENTS
+    telemetry.reset_all()
+    assert dict(DISPATCH_COUNTS) == {}
+    assert dict(SERVE_EVENTS) == {}
+    assert dict(TRACE_COUNTS) == {}
+    server.close()
+
+
+def test_deprecated_reset_aliases_still_work():
+    DISPATCH_COUNTS.inc("xla")
+    TRACE_COUNTS.inc("xla")
+    SERVE_EVENTS.inc("batches")
+    backends.reset_dispatch_counts()
+    backends.reset_trace_counts()
+    reset_serve_events()
+    assert dict(DISPATCH_COUNTS) == {}
+    assert dict(TRACE_COUNTS) == {}
+    assert dict(SERVE_EVENTS) == {}
+
+
+# --- thread safety (the += lost-update bugfix) -------------------------------
+
+
+def test_atomic_counter_is_exact_under_contention():
+    c = AtomicCounter()
+    threads, per = 8, 5000
+
+    def hammer():
+        for _ in range(per):
+            c.inc("hits")
+
+    ts = [threading.Thread(target=hammer) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # a bare ``c["hits"] += 1`` loses increments under this load; the
+    # locked read-modify-write must not
+    assert c["hits"] == threads * per
+
+
+def test_registry_counter_is_exact_under_contention():
+    reg = MetricsRegistry()
+    threads, per = 8, 2000
+
+    def hammer():
+        for _ in range(per):
+            reg.inc("total", event="x")
+
+    ts = [threading.Thread(target=hammer) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter_value("total", event="x") == threads * per
+
+
+def test_wall_clock_server_counters_exact_with_concurrent_readers(index):
+    """Submitters and telemetry readers race the serve worker; every
+    counter read is consistent and the final totals are exact."""
+    server = SearchServer(
+        index, ServeConfig(max_batch=32, max_delay_s=0.001), warmup=True
+    )
+    clients, per = 4, 25
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            server.stats()
+            server.health()
+            telemetry.export_prometheus()
+            dict(SERVE_EVENTS)
+
+    def client(cid):
+        try:
+            q = _queries(100 + cid, 4)
+            for _ in range(per):
+                server.submit(q).result(timeout=60)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    rd = threading.Thread(target=reader)
+    rd.start()
+    ts = [threading.Thread(target=client, args=(c,)) for c in range(clients)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    stop.set()
+    rd.join()
+    assert not errors
+    s = server.stats()
+    assert s["completed_requests"] == clients * per
+    assert s["coalesced_requests"] == clients * per
+    assert SERVE_EVENTS["coalesced_requests"] == clients * per
+    server.close()
+
+
+# --- per-request tracing -----------------------------------------------------
+
+
+def test_virtual_clock_span_timings_are_deterministic(index):
+    clock = VirtualClock()
+    server = SearchServer(index, ServeConfig(max_batch=32), clock=clock)
+    t = server.submit(_queries(7, 4))
+    clock.advance(0.25)
+    server.run_until_idle()
+    (tr,) = server.traces()
+    assert tr.status == "done"
+    assert t.latency_s == pytest.approx(0.25)
+    spans = {s.name: s for s in tr.spans}
+    assert set(spans) == {
+        "submit", "queue", "coalesce", "stage", "dispatch", "scatter"
+    }
+    # the queue span is exactly the virtual wait; the service spans all
+    # happen at the same virtual instant (zero length, still contiguous)
+    assert spans["queue"].start == pytest.approx(0.0)
+    assert spans["queue"].duration_s == pytest.approx(0.25)
+    for name in ("coalesce", "stage", "dispatch", "scatter"):
+        assert spans[name].duration_s == pytest.approx(0.0)
+        assert spans[name].start == pytest.approx(0.25)
+    # spans tile [submit, complete]: full coverage, by construction
+    assert tr.covered_s() == pytest.approx(tr.duration_s)
+    assert trace_coverage([tr]) == pytest.approx(1.0)
+    server.close()
+
+
+def test_trace_ring_buffer_is_bounded(index):
+    server = _vserver(index, trace_buffer=4)
+    tickets = [server.submit(_queries(20 + i, 2)) for i in range(10)]
+    server.run_until_idle()
+    assert all(t.done for t in tickets)
+    traces = server.traces()
+    assert len(traces) == 4  # only the most recent 4 retained
+    ids = [tr.trace_id for tr in traces]
+    assert ids == sorted(ids)  # oldest first
+    assert server.traces(2) == traces[-2:]
+    server.close()
+
+
+def test_failed_request_trace_records_failure(index):
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "fatal")])
+    server = SearchServer(
+        index, ServeConfig(max_batch=32), clock=VirtualClock(), faults=inj
+    )
+    t = server.submit(_queries(9, 4))
+    server.run_until_idle()
+    with pytest.raises(FatalFault):
+        t.result()
+    (tr,) = server.traces()
+    assert tr.status == "failed"
+    assert any(s.name == "failed" for s in tr.spans)
+    server.close()
+
+
+def test_chrome_trace_export_shape(index):
+    server = _vserver(index)
+    server.submit(_queries(11, 4))
+    server.run_until_idle()
+    doc = chrome_trace(server.traces())
+    events = doc["traceEvents"]
+    xs = [e for e in events if e.get("ph") == "X"]
+    assert {e["name"] for e in xs} >= {"queue", "dispatch", "scatter"}
+    for e in xs:
+        assert e["cat"] == "serve"
+        assert e["dur"] >= 0
+        assert e["args"]["rows"] == 4
+    assert any(e.get("ph") == "M" for e in events)  # thread names
+    server.close()
+
+
+def test_tracing_off_is_zero_overhead(index):
+    """trace_buffer=0 must not change the device-facing contracts: same
+    dispatch/trace counters, bit-identical results, no traces kept."""
+    q = _queries(13, 8)
+
+    def run(trace_buffer):
+        telemetry.reset_all()
+        server = _vserver(index, trace_buffer=trace_buffer)
+        server.precompile()
+        backends.reset_dispatch_counts()
+        backends.reset_trace_counts()
+        t = server.submit(q)
+        server.run_until_idle()
+        vals, idxs = t.result()
+        counts = (dict(DISPATCH_COUNTS), dict(TRACE_COUNTS))
+        n_traces = len(server.traces())
+        server.close()
+        return np.asarray(vals), np.asarray(idxs), counts, n_traces
+
+    vals_on, idxs_on, counts_on, traces_on = run(256)
+    vals_off, idxs_off, counts_off, traces_off = run(0)
+    assert counts_on == counts_off
+    assert traces_on == 1 and traces_off == 0
+    np.testing.assert_array_equal(vals_on, vals_off)
+    np.testing.assert_array_equal(idxs_on, idxs_off)
+
+
+# --- roofline-drift monitor --------------------------------------------------
+
+
+def test_drift_monitor_calibrates_then_degrades():
+    mon = DriftMonitor(band=(0.5, 2.0), warmup=2, alpha=1.0)
+    r = mon.report()
+    assert not r["calibrated"] and r["value"] == 1.0 and r["in_band"]
+    mon.record("32", 1e-3, 1e-4)   # platform offset: measured 10x model
+    mon.record("32", 1e-3, 1e-4)
+    r = mon.report()
+    assert r["calibrated"]
+    # the absolute 10x offset calibrates out: steady state sits at 1.0
+    assert r["value"] == pytest.approx(1.0)
+    assert r["in_band"]
+    mon.record("32", 1e-2, 1e-4)   # now 10x slower than its own baseline
+    r = mon.report()
+    assert r["value"] == pytest.approx(10.0)
+    assert not r["in_band"]
+
+
+def test_delay_fault_is_slow_but_successful():
+    inj = FaultInjector(
+        schedule=[("serve.dispatch", 1, "delay")], delay_s=0.02
+    )
+    t0 = time.perf_counter()
+    inj.fire("serve.dispatch")  # must NOT raise
+    assert time.perf_counter() - t0 >= 0.02
+    assert inj.fired["serve.dispatch"] == 1
+    assert issubclass(DelayFault, Exception)  # taxonomy marker only
+
+
+def test_injected_slow_dispatch_degrades_health(index):
+    """Clean batches calibrate the drift baseline; delay-fault batches
+    then run ~100x slower than it — health must flip to degraded."""
+    warm = 4
+    inj = FaultInjector(
+        schedule=[("serve.dispatch", h, "delay") for h in (warm + 1,
+                                                           warm + 2)],
+        delay_s=0.3,
+    )
+    server = SearchServer(
+        index,
+        ServeConfig(max_batch=32, drift_warmup=3, drift_alpha=0.5),
+        clock=VirtualClock(),
+        faults=inj,
+    )
+    server.precompile()
+    for i in range(warm):
+        server.submit(_queries(50 + i, 4))
+        server.run_until_idle()
+    h = server.health()
+    assert h["drift"]["calibrated"] and h["drift"]["in_band"]
+    assert h["status"] == "ok"
+    for i in range(2):  # the scheduled 0.3s delay fires inside dispatch
+        server.submit(_queries(60 + i, 4))
+        server.run_until_idle()
+    h = server.health()
+    assert not h["drift"]["in_band"]
+    assert h["status"] == "degraded"
+    assert inj.fired["serve.dispatch"] == 2
+    server.close()
+
+
+def test_health_reports_uptime_last_fault_and_recall(index):
+    clock = VirtualClock()
+    inj = FaultInjector(schedule=[("serve.dispatch", 1, "fatal")])
+    server = SearchServer(
+        index, ServeConfig(max_batch=32), clock=clock, faults=inj
+    )
+    h = server.health()
+    assert h["last_fault"] is None
+    clock.advance(2.0)
+    assert server.health()["uptime_s"] == pytest.approx(2.0)
+    t = server.submit(_queries(70, 4))
+    server.run_until_idle()
+    with pytest.raises(FatalFault):
+        t.result()
+    h = server.health()
+    assert h["last_fault"]["error"] == "FatalFault"
+    assert h["last_fault"]["point"] == "serve.dispatch"
+    assert h["expected_recall_live"] == pytest.approx(
+        float(index.plan.expected_recall)
+    )
+    server.close()
+
+
+# --- end-to-end export surface -----------------------------------------------
+
+
+def test_server_workload_exports_expected_series(index):
+    server = _vserver(index)
+    for i in range(3):
+        server.submit(_queries(80 + i, 4))
+    server.run_until_idle()
+    server.health()
+    index.telemetry()
+    text = telemetry.export_prometheus()
+    for series in (
+        "repro_dispatches_total",
+        "repro_serve_events_total",
+        "repro_serve_request_latency_seconds",
+        "repro_serve_batch_rows",
+        "repro_serve_uptime_seconds",
+        "repro_index_size",
+        "repro_index_expected_recall_live",
+    ):
+        assert series in text, series
+    js = telemetry.export_json()
+    assert js["counters"]["repro_dispatches_total"]
+    assert js["histograms"]["repro_serve_request_latency_seconds"]
+    server.close()
